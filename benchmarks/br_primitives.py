@@ -1,0 +1,65 @@
+"""Paper Table 2 / §5: BR-CR primitive microbenchmarks.
+
+Every BR configuration the 7 applications use, timed per strategy:
+push (baseline Alg. 1), segment (Alg. 2), ell (Alg. 3 blocked pull),
+onehot (MXU formulation). The paper reports BR speedups of 1.72×–34×; the
+analogue here is ell/segment-vs-push per config.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import from_coo, gspmm, build_ell, build_tiles
+from repro.data import rmat_graph
+
+from .common import time_fn, row
+
+# the exact configurations from the paper's Table 2
+CONFIGS = [
+    "u_copy_add_v",        # GCN/SAGE/GCMC/LGNN/RGCN
+    "u_mul_e_add_v",       # MoNet, GAT
+    "e_copy_add_v",        # GAT
+    "e_copy_max_v",        # GAT
+    "u_add_v_copy_e",      # GAT
+    "e_sub_v_copy_e",      # GAT
+    "e_div_v_copy_e",      # GAT
+    "v_mul_e_copy_e",      # GAT
+    "u_dot_v_add_e",       # GCMC
+]
+
+STRATEGIES = ("push", "segment", "ell")
+
+
+def main(d: int = 128):
+    src, dst, n = rmat_graph(15, 200_000, seed=3)
+    g = from_coo(src, dst, n_src=n, n_dst=n)
+    ell = build_ell(g)
+    nnz = g.n_edges
+    rng = np.random.default_rng(0)
+    U = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    V = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    E = jnp.asarray(rng.normal(size=(nnz, d)).astype(np.float32))
+
+    for name in CONFIGS:
+        times = {}
+        for strategy in STRATEGIES:
+            if name.endswith("_e") and strategy in ("ell",):
+                continue   # edge-output configs have no blocked-pull stage
+            kw = {"ell": ell} if strategy == "ell" else {}
+            fn = jax.jit(lambda u, v, e, s=strategy, nm=name, kw=kw:
+                         gspmm(g, nm, u=u, v=v, e=e, strategy=s, **kw))
+            times[strategy] = time_fn(fn, U, V, E, iters=5, warmup=2)
+        base = times["push"]
+        best_name = min((k for k in times if k != "push"),
+                        key=lambda k: times[k])
+        sp = base / times[best_name]
+        for strategy, t in times.items():
+            tag = (f"speedup={sp:.2f}x({best_name})"
+                   if strategy == best_name else "")
+            print(row(f"br_{name}_{strategy}", t, tag))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Benchmark timing helpers (median-of-N, compile excluded)."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Tuple
+
+import jax
+import numpy as np
+
+
+def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2,
+            **kw) -> float:
+    """Median seconds per call; jit warmup excluded."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def row(name: str, seconds: float, derived: str = "") -> str:
+    return f"{name},{seconds*1e6:.1f},{derived}"

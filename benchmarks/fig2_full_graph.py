@@ -1,0 +1,139 @@
+"""Paper Fig. 2: per-epoch training time of the GNN applications,
+baseline push (DGL Alg. 1 analogue) vs optimized blocked pull (Alg. 3).
+
+Datasets are synthetic stand-ins at CPU scale (see data.synthetic.DATASETS
+and EXPERIMENTS.md for the mapping). The reported metric matches the
+paper's evaluation axis: speedup of optimized over baseline per epoch.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import from_coo
+from repro.data import (make_node_dataset, sbm_graph, bipartite_ratings,
+                        relational_graph)
+from repro.models.gnn import (gcn, sage, gat, monet, rgcn, gcmc, lgnn,
+                              make_bundle)
+from repro.models.gnn.train import make_train_step
+from repro.substrate.nn import cross_entropy_loss
+
+from .common import time_fn, row
+
+BASELINE = "push"
+OPTIMIZED = "ell"
+
+
+def _epoch_time(mod, params, bundle, x, labels, mask, strategy):
+    opt_init, step = make_train_step(mod.forward, strategy)
+    opt_state = opt_init(params)
+    rng = jax.random.PRNGKey(0)
+    return time_fn(
+        lambda: step(params, opt_state, 0, bundle, x, labels, mask, rng)[2],
+        iters=3, warmup=1)
+
+
+def _bench_node_app(name, mod, dataset="pubmed-like", hidden=16, **init_kw):
+    g, feats, labels, tm, vm, nc = make_node_dataset(dataset)
+    bundle = make_bundle(g)
+    params = mod.init(jax.random.PRNGKey(0), feats.shape[1], hidden, nc,
+                      **init_kw)
+    x, y, m = jnp.asarray(feats), jnp.asarray(labels), jnp.asarray(tm)
+    t_base = _epoch_time(mod, params, bundle, x, y, m, BASELINE)
+    t_opt = _epoch_time(mod, params, bundle, x, y, m, OPTIMIZED)
+    sp = t_base / t_opt
+    print(row(f"fig2_{name}_baseline_epoch", t_base, dataset))
+    print(row(f"fig2_{name}_optimized_epoch", t_opt,
+              f"speedup={sp:.2f}x"))
+    return sp
+
+
+def bench_gcmc():
+    u, i, r = bipartite_ratings(2000, 1500, 60_000, 5)
+    fwd, bwd = gcmc.build_level_graphs(u, i, r, 2000, 1500, 5)
+    g_all = from_coo(u, i, n_src=2000, n_dst=1500)
+    params = gcmc.init(jax.random.PRNGKey(0), 64, 64, 64, 32, 5)
+    rng = np.random.default_rng(0)
+    xu = jnp.asarray(rng.normal(size=(2000, 64)).astype(np.float32))
+    xi = jnp.asarray(rng.normal(size=(1500, 64)).astype(np.float32))
+    labels = jnp.asarray(r)
+
+    def loss(strategy):
+        @jax.jit
+        def f():
+            return cross_entropy_loss(
+                gcmc.forward(params, (fwd, bwd, g_all), xu, xi,
+                             strategy=strategy), labels)
+        return f
+
+    t_base = time_fn(loss(BASELINE), iters=3, warmup=1)
+    t_opt = time_fn(loss(OPTIMIZED), iters=3, warmup=1)
+    print(row("fig2_gcmc_baseline_epoch", t_base, "ml1m-like"))
+    print(row("fig2_gcmc_optimized_epoch", t_opt,
+              f"speedup={t_base/t_opt:.2f}x"))
+    return t_base / t_opt
+
+
+def bench_rgcn():
+    n, n_rel = 5000, 8
+    rels = relational_graph(n, n_rel, 25_000)
+    rgs = [from_coo(s, d, n_src=n, n_dst=n) for s, d in rels]
+    params = rgcn.init(jax.random.PRNGKey(0), 32, 32, 4, n_rel=n_rel)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(n, 32)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, 4, n))
+
+    def loss(strategy):
+        @jax.jit
+        def f():
+            return cross_entropy_loss(
+                rgcn.forward(params, rgs, x, strategy=strategy), labels)
+        return f
+
+    t_base = time_fn(loss(BASELINE), iters=3, warmup=1)
+    t_opt = time_fn(loss(OPTIMIZED), iters=3, warmup=1)
+    print(row("fig2_rgcn_baseline_epoch", t_base, "bgs-like"))
+    print(row("fig2_rgcn_optimized_epoch", t_opt,
+              f"speedup={t_base/t_opt:.2f}x"))
+    return t_base / t_opt
+
+
+def bench_lgnn():
+    src, dst, comm = sbm_graph(800, 2, 0.06, 0.003)
+    g = from_coo(src, dst, n_src=800, n_dst=800)
+    lg = lgnn.build_line_graph(g)
+    params = lgnn.init(jax.random.PRNGKey(0), 800, 16, 16, 2)
+    labels = jnp.asarray(comm)
+
+    def loss(strategy):
+        @jax.jit
+        def f():
+            logits, _ = lgnn.forward(params, g, lg, strategy=strategy)
+            return cross_entropy_loss(logits, labels)
+        return f
+
+    t_base = time_fn(loss(BASELINE), iters=3, warmup=1)
+    t_opt = time_fn(loss(OPTIMIZED), iters=3, warmup=1)
+    print(row("fig2_lgnn_baseline_epoch", t_base, "sbm"))
+    print(row("fig2_lgnn_optimized_epoch", t_opt,
+              f"speedup={t_base/t_opt:.2f}x"))
+    return t_base / t_opt
+
+
+def main():
+    speedups = {}
+    speedups["gcn"] = _bench_node_app("gcn", gcn)
+    speedups["graphsage"] = _bench_node_app("graphsage", sage)
+    speedups["gat"] = _bench_node_app("gat", gat, n_heads=4)
+    speedups["monet"] = _bench_node_app("monet", monet, n_kernels=2)
+    speedups["gcmc"] = bench_gcmc()
+    speedups["rgcn"] = bench_rgcn()
+    speedups["lgnn"] = bench_lgnn()
+    geo = float(np.exp(np.mean(np.log(list(speedups.values())))))
+    print(row("fig2_geomean_speedup", 0.0, f"{geo:.2f}x"))
+    return speedups
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,43 @@
+"""Aggregation-kernel strategy sweep (CR = SpMM).
+
+Times the four executable strategies on a power-law graph at several
+feature widths. The Pallas kernels run in interpret mode on CPU (their
+timings are NOT meaningful hardware numbers — they validate numerics; the
+MXU story is the dry-run roofline's job) and are excluded here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import from_coo, copy_reduce, build_ell, build_tiles
+from repro.data import rmat_graph
+
+from .common import time_fn, row
+
+
+def main():
+    src, dst, n = rmat_graph(14, 120_000, seed=5)
+    g = from_coo(src, dst, n_src=n, n_dst=n)
+    ell = build_ell(g)
+    tiles = build_tiles(g)
+    rng = np.random.default_rng(0)
+    for d in (32, 128, 512):
+        x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+        for strategy in ("push", "segment", "ell", "onehot"):
+            kw = {}
+            if strategy == "ell":
+                kw["ell"] = ell
+            if strategy == "onehot":
+                kw["tiles"] = tiles
+            fn = jax.jit(lambda x, s=strategy, kw=kw:
+                         copy_reduce(g, x, "sum", strategy=s, **kw))
+            t = time_fn(fn, x, iters=5, warmup=2)
+            gbps = (g.n_edges * d * 4) / t / 1e9
+            print(row(f"spmm_d{d}_{strategy}", t,
+                      f"{gbps:.1f}GB/s-gathered"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Benchmark harness — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Sections:
+  fig2  — 7 GNN apps full-graph, baseline push vs optimized pull (Fig. 2)
+  fig3  — sampled GraphSAGE (Fig. 3)
+  br    — BR/CR primitive configs (Table 2)
+  prims — BatchNorm1d / Embedding (paper §4)
+  spmm  — CR strategy sweep
+
+Run all: ``PYTHONPATH=src python -m benchmarks.run``
+One section: ``PYTHONPATH=src python -m benchmarks.run --only fig2``
+"""
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    choices=["fig2", "fig3", "br", "prims", "spmm"])
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    sections = {
+        "fig2": "benchmarks.fig2_full_graph",
+        "fig3": "benchmarks.fig3_sampled_sage",
+        "br": "benchmarks.br_primitives",
+        "prims": "benchmarks.framework_prims",
+        "spmm": "benchmarks.kernels_bench",
+    }
+    import importlib
+    for key, modname in sections.items():
+        if args.only and key != args.only:
+            continue
+        print(f"# --- {key} ---", file=sys.stderr)
+        mod = importlib.import_module(modname)
+        mod.main()
+
+
+if __name__ == '__main__':
+    main()

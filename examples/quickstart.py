@@ -1,0 +1,39 @@
+"""Quickstart: train GCN on a synthetic citation graph with the paper's
+optimized aggregation, and verify the baseline/optimized paths agree.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import copy_reduce, from_coo
+from repro.data import make_node_dataset
+from repro.models.gnn import gcn, make_bundle
+from repro.models.gnn.train import train_full_graph
+
+
+def main():
+    # --- the primitive itself -------------------------------------------
+    g = from_coo([0, 1, 2, 0], [2, 2, 1, 1], n_src=3, n_dst=3)
+    x = jnp.asarray(np.eye(3, dtype=np.float32))
+    print("Copy-Reduce (paper Eq. 3), three strategies:")
+    for s in ("push", "segment", "ell"):
+        print(f"  {s:8s} ->\n{np.asarray(copy_reduce(g, x, strategy=s))}")
+
+    # --- a real application ---------------------------------------------
+    graph, feats, labels, train_mask, val_mask, nc = \
+        make_node_dataset("tiny")
+    bundle = make_bundle(graph)
+    params = gcn.init(jax.random.PRNGKey(0), feats.shape[1], 32, nc)
+    params, hist = train_full_graph(
+        gcn.forward, params, bundle, feats, labels, train_mask,
+        strategy="ell", epochs=20, val_mask=val_mask)
+    print(f"\nGCN on {graph}: loss {hist['loss'][0]:.3f} -> "
+          f"{hist['loss'][-1]:.3f}, val acc {hist['val_acc'][-1]:.3f}")
+    print(f"median epoch time {1e3*np.median(hist['epoch_time']):.1f} ms "
+          f"(strategy='ell', the paper's blocked pull)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Serve a small LM with batched requests (prefill + decode loop).
+
+Uses the same prefill/decode step functions the production dry-run lowers
+for the 512-chip mesh — here on a CPU-sized smoke config.
+
+    PYTHONPATH=src python examples/serve_lm.py --arch qwen2_7b
+"""
+import sys
+
+from repro.launch import serve
+
+
+def main():
+    argv = sys.argv[1:]
+    if "--arch" not in argv:
+        argv = ["--arch", "qwen2_7b"] + argv
+    sys.argv = [sys.argv[0]] + argv + ["--smoke", "--batch", "8",
+                                       "--prompt-len", "48", "--gen", "24",
+                                       "--temperature", "0.8"]
+    serve.main()
+
+
+if __name__ == "__main__":
+    main()

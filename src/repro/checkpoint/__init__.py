@@ -1,0 +1,4 @@
+"""repro.checkpoint — fault-tolerant checkpointing."""
+from .manager import CheckpointManager, save_pytree, load_pytree
+
+__all__ = ["CheckpointManager", "save_pytree", "load_pytree"]

@@ -1,0 +1,16 @@
+"""repro.core — the paper's contribution: BR/CR aggregation primitives."""
+from .graph import Graph, from_coo, reverse, add_self_loops
+from .tiling import (ELLPack, ELLClass, TilePack, build_ell,
+                     build_ell_uniform, build_tiles)
+from .binary_reduce import (BRSpec, parse_op, gspmm, copy_reduce,
+                            binary_reduce, BINARY_OPS, REDUCE_OPS)
+from .edge_softmax import edge_softmax, edge_softmax_fused
+
+__all__ = [
+    "Graph", "from_coo", "reverse", "add_self_loops",
+    "ELLPack", "ELLClass", "TilePack", "build_ell",
+    "build_ell_uniform", "build_tiles",
+    "BRSpec", "parse_op", "gspmm", "copy_reduce", "binary_reduce",
+    "BINARY_OPS", "REDUCE_OPS",
+    "edge_softmax", "edge_softmax_fused",
+]

@@ -1,0 +1,246 @@
+"""The Binary-Reduce / Copy-Reduce primitive lattice (paper §2).
+
+``BR(x, y, ⊗, ⊕, z) : z ← ⊕(⊗(x, y), z)`` over a graph, where the operands
+live on source nodes (``u``), destination nodes (``v``) or edges (``e``);
+
+  ⊗ ∈ {add, sub, mul, div, dot, copy}          (element-wise; dot sums feat)
+  ⊕ ∈ {add(sum), max, min, mul(prod), mean, copy}
+
+Configs are named DGL-style, e.g. ``u_mul_e_add_v`` (BR) or ``u_copy_add_v``
+(CR) — exactly the names in the paper's Table 2. ``copy`` as the reducer
+means the per-edge result is written to edges without reduction.
+
+The reduce stage dispatches across execution strategies (see
+``strategies.py``): ``push`` (baseline Alg. 1), ``segment`` (Alg. 2),
+``ell`` (Alg. 3 blocked pull), ``onehot`` (MXU adaptation), ``pallas``
+(TPU kernel, see ``repro.kernels``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import strategies as S
+from .graph import Graph
+from .tiling import ELLPack, TilePack, build_ell, build_tiles
+
+__all__ = ["BRSpec", "parse_op", "gspmm", "copy_reduce", "binary_reduce",
+           "BINARY_OPS", "REDUCE_OPS", "OP_TARGETS"]
+
+OP_TARGETS = ("u", "v", "e")
+
+BINARY_OPS: Dict[str, Callable] = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "dot": lambda a, b: jnp.sum(a * b, axis=-1, keepdims=True),
+    "copy": lambda a, b: a,  # unary: rhs ignored (CR, Eq. 3)
+}
+
+# DGL name -> internal reducer name
+REDUCE_OPS: Dict[str, str] = {
+    "add": "sum", "sum": "sum", "max": "max", "min": "min",
+    "mul": "prod", "prod": "prod", "mean": "mean", "copy": "none",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class BRSpec:
+    """Parsed configuration of a Binary-Reduce."""
+    lhs: str          # 'u' | 'v' | 'e'
+    op: str           # key of BINARY_OPS
+    rhs: Optional[str]  # 'u' | 'v' | 'e' | None (CR)
+    reduce: str       # 'sum'|'max'|'min'|'prod'|'mean'|'none'
+    out: str          # 'u' | 'v' | 'e'
+
+    @property
+    def name(self) -> str:
+        red = {v: k for k, v in REDUCE_OPS.items()}
+        r = "copy" if self.reduce == "none" else (
+            "add" if self.reduce == "sum" else self.reduce)
+        if self.op == "copy":
+            return f"{self.lhs}_copy_{r}_{self.out}"
+        return f"{self.lhs}_{self.op}_{self.rhs}_{r}_{self.out}"
+
+
+def parse_op(name: str) -> BRSpec:
+    """Parse a DGL-style op name into a :class:`BRSpec`.
+
+    CR: ``<x>_copy_<red>_<z>``; BR: ``<x>_<op>_<y>_<red>_<z>``.
+    """
+    toks = name.split("_")
+    if len(toks) == 4 and toks[1] == "copy":
+        lhs, _, red, out = toks
+        rhs = None
+        op = "copy"
+    elif len(toks) == 5:
+        lhs, op, rhs, red, out = toks
+        if rhs not in OP_TARGETS:
+            raise ValueError(f"bad rhs target in {name!r}")
+    else:
+        raise ValueError(f"cannot parse BR op name {name!r}")
+    if lhs not in OP_TARGETS or out not in OP_TARGETS:
+        raise ValueError(f"bad operand targets in {name!r}")
+    if op not in BINARY_OPS:
+        raise ValueError(f"unknown binary op in {name!r}")
+    if red not in REDUCE_OPS:
+        raise ValueError(f"unknown reduce op in {name!r}")
+    return BRSpec(lhs=lhs, op=op, rhs=rhs, reduce=REDUCE_OPS[red], out=out)
+
+
+# --------------------------------------------------------------------- #
+# operand gathering (canonical edge order = sorted by dst)
+# --------------------------------------------------------------------- #
+def _edge_val(g: Graph, target: str, data: jnp.ndarray) -> jnp.ndarray:
+    """Per-edge operand values in canonical edge order."""
+    if target == "u":
+        return jnp.take(data, g.src, axis=0)
+    if target == "v":
+        return jnp.take(data, g.dst, axis=0)
+    if target == "e":
+        return jnp.take(data, g.eid, axis=0)
+    raise ValueError(target)
+
+
+def _as2d(x: jnp.ndarray) -> jnp.ndarray:
+    return x[:, None] if x.ndim == 1 else x
+
+
+# --------------------------------------------------------------------- #
+# main entry
+# --------------------------------------------------------------------- #
+def gspmm(g: Graph, op_name: str, *,
+          u: Optional[jnp.ndarray] = None,
+          v: Optional[jnp.ndarray] = None,
+          e: Optional[jnp.ndarray] = None,
+          strategy: str = "segment",
+          ell: Optional[ELLPack] = None,
+          tiles: Optional[TilePack] = None) -> jnp.ndarray:
+    """Generalized sparse aggregation (paper Eq. 1/3).
+
+    Operand tensors are indexed by node/edge id: ``u``: (n_src, d) or
+    (n_src,), ``v``: (n_dst, d), ``e``: (n_edges, d) in the caller's
+    original edge order. Returns features on ``spec.out`` — edge outputs
+    are returned in the caller's original edge order.
+    """
+    spec = parse_op(op_name)
+    data = {"u": u, "v": v, "e": e}
+    if data[spec.lhs] is None:
+        raise ValueError(f"{op_name}: operand {spec.lhs!r} missing")
+    if spec.rhs is not None and data[spec.rhs] is None:
+        raise ValueError(f"{op_name}: operand {spec.rhs!r} missing")
+
+    lhs_data = _as2d(data[spec.lhs])
+    rhs_data = _as2d(data[spec.rhs]) if spec.rhs is not None else None
+
+    # ---- blocked-pull fast path (paper Alg. 3): fuse gather+⊗ per chunk
+    if strategy == "ell" and spec.out == "v":
+        pack = ell if ell is not None else build_ell(g)
+        return _gspmm_ell(g, spec, pack, lhs_data, rhs_data)
+
+    if strategy == "onehot" and spec.out == "v":
+        return _gspmm_onehot(g, spec, tiles, lhs_data, rhs_data)
+
+    if strategy == "pallas" and spec.out == "v":
+        from repro.kernels.dispatch import gspmm_pallas
+        return gspmm_pallas(g, spec, lhs_data, rhs_data, tiles=tiles)
+
+    # ---- generic path: per-edge messages then reduce
+    lhs_val = _edge_val(g, spec.lhs, lhs_data)
+    rhs_val = (_edge_val(g, spec.rhs, rhs_data)
+               if spec.rhs is not None else None)
+    msg = BINARY_OPS[spec.op](lhs_val, rhs_val)
+
+    if spec.out == "e":
+        # un-permute to the caller's edge order (gather via eid_inv)
+        return jnp.take(msg, g.eid_inv, axis=0)
+
+    if spec.out == "v":
+        tgt, n_tgt, deg = g.dst, g.n_dst, g.in_degrees
+        sorted_ok = True
+    else:  # 'u'
+        msg = jnp.take(msg, g.perm_src, axis=0)
+        tgt = jnp.take(g.src, g.perm_src)
+        n_tgt, deg = g.n_src, g.out_degrees
+        sorted_ok = True
+
+    if spec.reduce == "none":
+        raise ValueError(f"{op_name}: copy-reduce to nodes needs a reducer")
+
+    if strategy == "push":
+        return S.push_scatter(msg, tgt, n_tgt, spec.reduce, deg)
+    # default: segment (Alg. 2)
+    return S.pull_segment(msg, tgt, n_tgt, spec.reduce, deg)
+
+
+def _gspmm_ell(g: Graph, spec: BRSpec, pack: ELLPack,
+               lhs_data, rhs_data) -> jnp.ndarray:
+    """Blocked pull with the ⊗ fused into the per-class chunk gather."""
+    def chunk_fetch(cls, target: str, data):
+        if target == "u":
+            return jnp.take(data, cls.chunk_cols, axis=0)      # (C, W, d)
+        if target == "e":
+            return jnp.take(data, cls.chunk_eids, axis=0)
+        if target == "v":
+            val = jnp.take(data, cls.chunk_row, axis=0)        # (C, d)
+            return val[:, None, :]                             # broadcast W
+        raise ValueError(target)
+
+    def msg_fn(cls):
+        lhs_val = chunk_fetch(cls, spec.lhs, lhs_data)
+        rhs_val = (chunk_fetch(cls, spec.rhs, rhs_data)
+                   if spec.rhs is not None else None)
+        return BINARY_OPS[spec.op](lhs_val, rhs_val)
+
+    return S.pull_ell_reduce(pack, msg_fn, spec.reduce, deg=g.in_degrees)
+
+
+def _gspmm_onehot(g: Graph, spec: BRSpec, tiles: Optional[TilePack],
+                  lhs_data, rhs_data) -> jnp.ndarray:
+    """MXU one-hot SpMM path. Supports u_copy_{add,mean}_v and
+    u_mul_e_{add,mean}_v with scalar edge weights."""
+    pack = tiles if tiles is not None else build_tiles(g)
+    if spec.lhs != "u":
+        raise ValueError("onehot strategy needs lhs on source nodes")
+    w = None
+    if spec.op == "mul" and spec.rhs == "e":
+        ew = rhs_data
+        if ew.shape[-1] != 1:
+            raise ValueError("onehot edge weights must be scalar per edge")
+        w = jnp.take(ew[:, 0], pack.eids, axis=0)  # (T, eb)
+    elif spec.op != "copy":
+        raise ValueError(f"onehot strategy does not support ⊗={spec.op}")
+    return S.onehot_spmm(pack, lhs_data, spec.reduce, edge_weight=w,
+                         deg=g.in_degrees)
+
+
+# --------------------------------------------------------------------- #
+# sugar
+# --------------------------------------------------------------------- #
+def copy_reduce(g: Graph, x: jnp.ndarray, reduce: str = "sum",
+                strategy: str = "segment", **kw) -> jnp.ndarray:
+    """CR: ``u_copy_<reduce>_v`` (paper Eq. 3/4)."""
+    red = {"sum": "add", "prod": "mul"}.get(reduce, reduce)
+    return gspmm(g, f"u_copy_{red}_v", u=x, strategy=strategy, **kw)
+
+
+def binary_reduce(g: Graph, op_name: str, lhs: jnp.ndarray,
+                  rhs: Optional[jnp.ndarray] = None,
+                  strategy: str = "segment", **kw) -> jnp.ndarray:
+    """Positional-operand flavour: operands assigned per the op name."""
+    spec = parse_op(op_name)
+    ops: Dict[str, jnp.ndarray] = {spec.lhs: lhs}
+    if spec.rhs is not None:
+        if rhs is None:
+            raise ValueError(f"{op_name} needs two operands")
+        if spec.rhs == spec.lhs:
+            raise ValueError(f"{op_name}: operands share a target; use gspmm")
+        ops[spec.rhs] = rhs
+    return gspmm(g, op_name, strategy=strategy,
+                 **{k: v for k, v in ops.items()}, **kw)

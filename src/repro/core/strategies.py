@@ -1,0 +1,214 @@
+"""Execution strategies for the reduce stage of BR/CR.
+
+Mirrors the paper's progression:
+
+* ``push_scatter``  — paper Alg. 1 (DGL baseline): materialize per-edge
+  messages, scatter-reduce into destinations. Lowers to XLA ``scatter``,
+  which serializes on both CPU and TPU — deliberately kept as the measured
+  baseline.
+* ``pull_segment``  — paper Alg. 2: destination-sorted segment reduction
+  (owner-computes, no collisions). The "vendor library" analogue.
+* ``pull_ell``      — paper Alg. 3: blocked pull. Chunked padded-ELL gather
+  with dense masked reduction over the chunk width; second-stage segment
+  combine for split rows. Sorted streams + dense vector inner loop.
+* ``onehot_spmm``   — TPU adaptation: (M,K)-tile-bucketed edges turned into
+  one-hot scatter/gather matrices, reduced with two dense matmuls per
+  bucket (MXU-friendly). Sum/mean only.
+
+Every strategy computes the same mathematical object:
+``out[j] = ⊕_{edges e: tgt(e)=j} msg[e]`` with empty targets = 0.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .tiling import ELLPack, TilePack
+
+__all__ = ["REDUCE_IDENTITY", "push_scatter", "pull_segment", "pull_ell_reduce",
+           "onehot_spmm", "finalize_empty_rows"]
+
+_BIG = float("inf")
+
+REDUCE_IDENTITY = {
+    "sum": 0.0,
+    "mean": 0.0,
+    "max": -_BIG,
+    "min": _BIG,
+    "prod": 1.0,
+}
+
+
+def finalize_empty_rows(out: jnp.ndarray, deg: jnp.ndarray,
+                        reduce_op: str) -> jnp.ndarray:
+    """DGL semantics: rows with no incoming edge are 0, for every ⊕."""
+    if reduce_op == "sum":
+        return out  # segment_sum already yields 0 for empty rows
+    has = (deg > 0)
+    has = has.reshape(has.shape + (1,) * (out.ndim - 1))
+    return jnp.where(has, out, jnp.zeros((), out.dtype))
+
+
+# --------------------------------------------------------------------- #
+# Strategy 1: push-scatter (baseline, paper Alg. 1)
+# --------------------------------------------------------------------- #
+def push_scatter(msg: jnp.ndarray, tgt: jnp.ndarray, n_tgt: int,
+                 reduce_op: str, deg: Optional[jnp.ndarray] = None
+                 ) -> jnp.ndarray:
+    """Materialized messages + scatter-reduce (the DGL push baseline)."""
+    ident = jnp.asarray(REDUCE_IDENTITY[reduce_op], msg.dtype)
+    out = jnp.full((n_tgt,) + msg.shape[1:], ident, msg.dtype)
+    upd = out.at[tgt]
+    if reduce_op in ("sum", "mean"):
+        out = upd.add(msg)
+    elif reduce_op == "max":
+        out = upd.max(msg)
+    elif reduce_op == "min":
+        out = upd.min(msg)
+    elif reduce_op == "prod":
+        out = upd.mul(msg)
+    else:
+        raise ValueError(f"unknown reduce op {reduce_op!r}")
+    if reduce_op == "mean":
+        d = jnp.maximum(deg, 1).astype(msg.dtype)
+        out = out / d.reshape((n_tgt,) + (1,) * (msg.ndim - 1))
+    return finalize_empty_rows(out, deg, reduce_op) if deg is not None else out
+
+
+# --------------------------------------------------------------------- #
+# Strategy 2: pull-segment (paper Alg. 2)
+# --------------------------------------------------------------------- #
+def pull_segment(msg: jnp.ndarray, tgt_sorted: jnp.ndarray, n_tgt: int,
+                 reduce_op: str, deg: Optional[jnp.ndarray] = None
+                 ) -> jnp.ndarray:
+    """Segment reduction over destination-sorted messages."""
+    kw = dict(num_segments=n_tgt, indices_are_sorted=True)
+    if reduce_op in ("sum", "mean"):
+        out = jax.ops.segment_sum(msg, tgt_sorted, **kw)
+        if reduce_op == "mean":
+            d = jnp.maximum(deg, 1).astype(msg.dtype)
+            out = out / d.reshape((n_tgt,) + (1,) * (msg.ndim - 1))
+    elif reduce_op == "max":
+        out = jax.ops.segment_max(msg, tgt_sorted, **kw)
+        out = jnp.where(jnp.isfinite(out), out, jnp.zeros((), out.dtype))
+    elif reduce_op == "min":
+        out = jax.ops.segment_min(msg, tgt_sorted, **kw)
+        out = jnp.where(jnp.isfinite(out), out, jnp.zeros((), out.dtype))
+    elif reduce_op == "prod":
+        out = jax.ops.segment_prod(msg, tgt_sorted, **kw)
+    else:
+        raise ValueError(f"unknown reduce op {reduce_op!r}")
+    return finalize_empty_rows(out, deg, reduce_op) if deg is not None else out
+
+
+# --------------------------------------------------------------------- #
+# Strategy 3: blocked pull over degree-bucketed ELL (paper Alg. 3)
+# --------------------------------------------------------------------- #
+def pull_ell_reduce(pack: ELLPack,
+                    class_msg_fn: Callable,
+                    reduce_op: str,
+                    deg: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Blocked pull: dense masked reduce along each width class.
+
+    ``class_msg_fn(cls)`` returns per-edge messages for one
+    :class:`ELLClass` as ``(n_chunks, width, *feat)`` — gathers happen
+    inside so the edge-ordered message tensor is never materialized
+    (XLA fuses gather+mask+reduce per class). Each destination row lives
+    in exactly one class (splits share the cap class), so classes
+    combine with one segment reduction each.
+    """
+    base = "sum" if reduce_op in ("sum", "mean") else reduce_op
+    out = None
+    for cls in pack.classes:
+        msg = class_msg_fn(cls)  # (C, W, *feat)
+        mask = cls.chunk_mask.reshape(cls.chunk_mask.shape
+                                      + (1,) * (msg.ndim - 2))
+        ident = jnp.asarray(REDUCE_IDENTITY[reduce_op], msg.dtype)
+        msg = jnp.where(mask, msg, ident)
+        if base == "sum":
+            part = msg.sum(axis=1)
+        elif base == "max":
+            part = msg.max(axis=1)
+        elif base == "min":
+            part = msg.min(axis=1)
+        elif base == "prod":
+            part = msg.prod(axis=1)
+        else:
+            raise ValueError(f"unknown reduce op {reduce_op!r}")
+        # raw per-class segment reduce (identity fill preserved so the
+        # cross-class combine is correct for max/min on negative values)
+        kw = dict(num_segments=pack.n_dst, indices_are_sorted=True)
+        seg = {"sum": jax.ops.segment_sum, "max": jax.ops.segment_max,
+               "min": jax.ops.segment_min, "prod": jax.ops.segment_prod}
+        cls_out = seg[base](part, cls.chunk_row, **kw)
+        if out is None:
+            out = cls_out
+        elif base == "sum":
+            out = out + cls_out
+        elif base == "max":
+            out = jnp.maximum(out, cls_out)
+        elif base == "min":
+            out = jnp.minimum(out, cls_out)
+        else:
+            out = out * cls_out
+    if base in ("max", "min"):
+        out = jnp.where(jnp.isfinite(out), out, jnp.zeros((), out.dtype))
+    if reduce_op == "mean":
+        d = jnp.maximum(deg, 1).astype(out.dtype)
+        out = out / d.reshape((pack.n_dst,) + (1,) * (out.ndim - 1))
+    return finalize_empty_rows(out, deg, reduce_op) if deg is not None else out
+
+
+# --------------------------------------------------------------------- #
+# Strategy 4: one-hot blocked SpMM (TPU/MXU adaptation)
+# --------------------------------------------------------------------- #
+def onehot_spmm(pack: TilePack, B: jnp.ndarray, reduce_op: str = "sum",
+                edge_weight: Optional[jnp.ndarray] = None,
+                deg: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """C = A ⊕ B via per-bucket one-hot matmuls.
+
+    For each bucket t with edges (dl, sl):
+      G_t[j, :] = onehot(sl_j)           (eb × bk)   gather matrix
+      S_t[:, j] = w_j · onehot(dl_j)     (bm × eb)   scatter matrix
+      C_tile[tile_m_t] += S_t @ (G_t @ B_block[tile_k_t])
+
+    Two dense matmuls per bucket — MXU-shaped on TPU. Sum/mean only (max is
+    not a matmul). Feature dim untouched → natural N-blocking by XLA.
+    """
+    if reduce_op not in ("sum", "mean"):
+        raise ValueError("onehot_spmm supports sum/mean only")
+    T, eb = pack.dst_local.shape
+    bm, bk = pack.bm, pack.bk
+    d = B.shape[-1]
+
+    # pad B to whole K tiles, view as (n_tiles_k, bk, d)
+    pad_k = pack.n_tiles_k * bk - B.shape[0]
+    Bp = jnp.pad(B, ((0, pad_k), (0, 0)))
+    Bt = Bp.reshape(pack.n_tiles_k, bk, d)
+    Bsel = Bt[pack.tile_k]                          # (T, bk, d)
+
+    iota_k = jax.lax.broadcasted_iota(jnp.int32, (T, eb, bk), 2)
+    G = (pack.src_local[:, :, None] == iota_k)
+    G = jnp.where(pack.mask[:, :, None], G, False).astype(B.dtype)
+
+    iota_m = jax.lax.broadcasted_iota(jnp.int32, (T, bm, eb), 1)
+    S = (pack.dst_local[:, None, :] == iota_m).astype(B.dtype)
+    if edge_weight is not None:
+        S = S * edge_weight[:, None, :].astype(B.dtype)
+    S = jnp.where(pack.mask[:, None, :], S, jnp.zeros((), B.dtype))
+
+    gathered = jnp.einsum("tek,tkd->ted", G, Bsel)   # (T, eb, d)
+    partial = jnp.einsum("tme,ted->tmd", S, gathered)  # (T, bm, d)
+
+    # combine buckets into M tiles (tile_m sorted by construction)
+    tiles = jax.ops.segment_sum(partial, pack.tile_m,
+                                num_segments=pack.n_tiles_m,
+                                indices_are_sorted=True)
+    out = tiles.reshape(pack.n_tiles_m * bm, d)[: pack.n_dst]
+    if reduce_op == "mean":
+        dd = jnp.maximum(deg, 1).astype(out.dtype)
+        out = out / dd[:, None]
+    return out

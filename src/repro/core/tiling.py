@@ -1,0 +1,276 @@
+"""Blocked edge formats — the paper's Alg. 3 blocking, as preprocessing.
+
+Two packed formats are built host-side (numpy) from a :class:`Graph`:
+
+* :class:`ELLPack` — degree-bucketed padded ELL. The pull model (paper
+  Alg. 2) with dense, vectorizable inner reduction: rows are grouped by
+  in-degree class so padding waste is bounded; each bucket reduces a dense
+  ``(rows, width, feat)`` gather along ``width``. Rows wider than
+  ``width_cap`` are split into chunks and combined by a tiny second-stage
+  segment reduce. This is the XLA-native "optimized CPU" path used for the
+  paper-reproduction benchmarks.
+
+* :class:`TilePack` — edges bucketed by ``(dst-tile, src-tile)`` pairs and
+  sorted within buckets: the direct analogue of the paper's K-blocking +
+  radix sort, consumed by the Pallas TPU kernel (VMEM-resident K-blocks)
+  and by the one-hot MXU strategy.
+
+Both are registered pytrees so they can be closed over or passed through
+``jit``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+
+__all__ = ["ELLPack", "ELLClass", "build_ell", "build_ell_uniform",
+           "TilePack", "build_tiles"]
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class ELLClass:
+    """One degree class of the bucketed ELL: all chunks of width ``width``."""
+    chunk_cols: jnp.ndarray   # (n_chunks, width) int32 source ids (0 pad)
+    chunk_eids: jnp.ndarray   # (n_chunks, width) int32 edge ids   (0 pad)
+    chunk_mask: jnp.ndarray   # (n_chunks, width) bool
+    chunk_row: jnp.ndarray    # (n_chunks,) int32 destination row
+    width: int = dataclasses.field(metadata={"static": True})
+
+    def tree_flatten(self):
+        return ((self.chunk_cols, self.chunk_eids, self.chunk_mask,
+                 self.chunk_row), (self.width,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        cols, eids, mask, row = children
+        return cls(chunk_cols=cols, chunk_eids=eids, chunk_mask=mask,
+                   chunk_row=row, width=aux[0])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class ELLPack:
+    """Degree-bucketed padded ELL: tuple of per-width classes."""
+    classes: tuple            # of ELLClass
+    n_dst: int = dataclasses.field(metadata={"static": True})
+
+    def tree_flatten(self):
+        return (self.classes, (self.n_dst,))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(classes=tuple(children), n_dst=aux[0])
+
+
+def build_ell(g: Graph, width_cap: int = 64) -> ELLPack:
+    """Pack ``g`` into DEGREE-BUCKETED padded ELL.
+
+    Rows are grouped by power-of-two in-degree class so the pad waste per
+    chunk is < 2× (a fixed chunk width pads 1-degree rows of a power-law
+    graph ~width×). Rows wider than ``width_cap`` are split into
+    ``width_cap``-wide chunks. The canonical (dst,src)-sorted edge order
+    of :class:`Graph` keeps each chunk's column ids ascending — the
+    paper's sorted-stream property.
+
+    The pack stores chunks CONTIGUOUSLY PER CLASS with per-class extents
+    so the reduce path can process each width class densely.
+    """
+    indptr = np.asarray(g.indptr_dst, dtype=np.int64)
+    src = np.asarray(g.src, dtype=np.int64)
+    eid = np.asarray(g.eid, dtype=np.int64)
+    n_dst = g.n_dst
+    deg = indptr[1:] - indptr[:-1]
+
+    # (class_width, row, start, len) — class = next pow2 ≥ len (≤ cap)
+    chunks = []
+    nz = np.nonzero(deg)[0]
+    for r in nz:
+        s, e = indptr[r], indptr[r + 1]
+        for cs in range(s, e, width_cap):
+            ln = min(width_cap, e - cs)
+            w = 1 << int(np.ceil(np.log2(ln))) if ln > 1 else 1
+            chunks.append((w, r, cs, ln))
+    if not chunks:
+        chunks = [(1, 0, 0, 0)]
+    chunks.sort(key=lambda c: (c[0], c[1]))
+
+    classes = []
+    i = 0
+    while i < len(chunks):
+        w = chunks[i][0]
+        j = i
+        while j < len(chunks) and chunks[j][0] == w:
+            j += 1
+        n = j - i
+        cols = np.zeros((n, w), np.int32)
+        eids = np.zeros((n, w), np.int32)
+        mask = np.zeros((n, w), bool)
+        rows = np.zeros((n,), np.int32)
+        for k, (_, r, s, ln) in enumerate(chunks[i:j]):
+            cols[k, :ln] = src[s:s + ln]
+            eids[k, :ln] = eid[s:s + ln]
+            mask[k, :ln] = True
+            rows[k] = r
+        classes.append((w, cols, eids, mask, rows))
+        i = j
+
+    return ELLPack(
+        classes=tuple(
+            ELLClass(width=w, chunk_cols=jnp.asarray(c),
+                     chunk_eids=jnp.asarray(e), chunk_mask=jnp.asarray(m),
+                     chunk_row=jnp.asarray(r))
+            for (w, c, e, m, r) in classes),
+        n_dst=n_dst)
+
+
+def build_ell_uniform(g: Graph, width: int) -> ELLClass:
+    """Single-class padded ELL with one FULL row per chunk (no splitting;
+    ``width`` must be ≥ the max in-degree). Used by the fused edge-softmax
+    kernel, which needs whole rows resident."""
+    indptr = np.asarray(g.indptr_dst, dtype=np.int64)
+    src = np.asarray(g.src, dtype=np.int64)
+    eid = np.asarray(g.eid, dtype=np.int64)
+    deg = indptr[1:] - indptr[:-1]
+    if len(deg) and deg.max() > width:
+        raise ValueError(f"width {width} < max degree {deg.max()}")
+    nz = np.nonzero(deg)[0]
+    n = max(len(nz), 1)
+    cols = np.zeros((n, width), np.int32)
+    eids = np.zeros((n, width), np.int32)
+    mask = np.zeros((n, width), bool)
+    rows = np.zeros((n,), np.int32)
+    for k, r in enumerate(nz):
+        s, e = indptr[r], indptr[r + 1]
+        ln = e - s
+        cols[k, :ln] = src[s:e]
+        eids[k, :ln] = eid[s:e]
+        mask[k, :ln] = True
+        rows[k] = r
+    return ELLClass(chunk_cols=jnp.asarray(cols),
+                    chunk_eids=jnp.asarray(eids),
+                    chunk_mask=jnp.asarray(mask),
+                    chunk_row=jnp.asarray(rows), width=width)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class TilePack:
+    """(M-tile, K-tile)-bucketed edge lists, sorted by (mi, ki, dst, src).
+
+    Buckets are padded to ``eb`` edges; a (mi, ki) pair holding more than
+    ``eb`` edges is split into several consecutive buckets with the same
+    tile coordinates (the consumer accumulates). ``first_of_m[t]`` is 1 iff
+    bucket ``t`` is the first bucket touching its M-tile — the Pallas kernel
+    uses it to zero-initialize the output tile on first visit.
+    """
+    tile_m: jnp.ndarray       # (T,) int32 M-tile index per bucket
+    tile_k: jnp.ndarray       # (T,) int32 K-tile index per bucket
+    first_of_m: jnp.ndarray   # (T,) int32 1/0 flag
+    dst_local: jnp.ndarray    # (T, eb) int32 dst offset inside the M-tile
+    src_local: jnp.ndarray    # (T, eb) int32 src offset inside the K-tile
+    eids: jnp.ndarray         # (T, eb) int32 original edge ids (0 pad)
+    mask: jnp.ndarray         # (T, eb) bool
+    bm: int = dataclasses.field(metadata={"static": True})
+    bk: int = dataclasses.field(metadata={"static": True})
+    eb: int = dataclasses.field(metadata={"static": True})
+    n_dst: int = dataclasses.field(metadata={"static": True})
+    n_src: int = dataclasses.field(metadata={"static": True})
+    n_tiles_m: int = dataclasses.field(metadata={"static": True})
+    n_tiles_k: int = dataclasses.field(metadata={"static": True})
+
+    def tree_flatten(self):
+        return ((self.tile_m, self.tile_k, self.first_of_m, self.dst_local,
+                 self.src_local, self.eids, self.mask),
+                (self.bm, self.bk, self.eb, self.n_dst, self.n_src,
+                 self.n_tiles_m, self.n_tiles_k))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        tm, tk, fom, dl, sl, eids, mask = children
+        bm, bk, eb, n_dst, n_src, ntm, ntk = aux
+        return cls(tile_m=tm, tile_k=tk, first_of_m=fom, dst_local=dl,
+                   src_local=sl, eids=eids, mask=mask, bm=bm, bk=bk, eb=eb,
+                   n_dst=n_dst, n_src=n_src, n_tiles_m=ntm, n_tiles_k=ntk)
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.tile_m.shape[0])
+
+
+def build_tiles(g: Graph, bm: int = 128, bk: int = 128,
+                eb: int = 256) -> TilePack:
+    """Bucket edges of ``g`` by (dst//bm, src//bk) tile pair."""
+    src = np.asarray(g.src, dtype=np.int64)
+    dst = np.asarray(g.dst, dtype=np.int64)
+    eid = np.asarray(g.eid, dtype=np.int64)
+
+    n_tiles_m = max(1, -(-g.n_dst // bm))
+    n_tiles_k = max(1, -(-g.n_src // bk))
+
+    mi = dst // bm
+    ki = src // bk
+    # sort edges by (mi, ki, dst, src): groups buckets, keeps the paper's
+    # ascending-address stream inside each bucket.
+    order = np.lexsort((src, dst, ki, mi))
+    src, dst, eid, mi, ki = src[order], dst[order], eid[order], mi[order], ki[order]
+
+    bucket_key = mi * n_tiles_k + ki
+    # split points where bucket changes
+    if len(bucket_key):
+        change = np.nonzero(np.diff(bucket_key))[0] + 1
+        seg_starts = np.concatenate([[0], change])
+        seg_ends = np.concatenate([change, [len(bucket_key)]])
+    else:
+        seg_starts = np.array([0])
+        seg_ends = np.array([0])
+
+    t_m, t_k, starts, lens = [], [], [], []
+    for s, e in zip(seg_starts, seg_ends):
+        if e <= s:
+            continue
+        for cs in range(s, e, eb):
+            t_m.append(mi[s])
+            t_k.append(ki[s])
+            starts.append(cs)
+            lens.append(min(eb, e - cs))
+    T = max(len(t_m), 1)
+
+    dl = np.zeros((T, eb), np.int32)
+    sl = np.zeros((T, eb), np.int32)
+    ei = np.zeros((T, eb), np.int32)
+    mask = np.zeros((T, eb), bool)
+    tm_arr = np.zeros((T,), np.int32)
+    tk_arr = np.zeros((T,), np.int32)
+    for i, (m, k, s, ln) in enumerate(zip(t_m, t_k, starts, lens)):
+        dl[i, :ln] = (dst[s:s + ln] - m * bm)
+        sl[i, :ln] = (src[s:s + ln] - k * bk)
+        ei[i, :ln] = eid[s:s + ln]
+        mask[i, :ln] = True
+        tm_arr[i] = m
+        tk_arr[i] = k
+
+    first = np.zeros((T,), np.int32)
+    seen = set()
+    for i in range(T):
+        if int(tm_arr[i]) not in seen:
+            first[i] = 1
+            seen.add(int(tm_arr[i]))
+
+    return TilePack(
+        tile_m=jnp.asarray(tm_arr), tile_k=jnp.asarray(tk_arr),
+        first_of_m=jnp.asarray(first), dst_local=jnp.asarray(dl),
+        src_local=jnp.asarray(sl), eids=jnp.asarray(ei),
+        mask=jnp.asarray(mask), bm=bm, bk=bk, eb=eb,
+        n_dst=g.n_dst, n_src=g.n_src,
+        n_tiles_m=n_tiles_m, n_tiles_k=n_tiles_k)

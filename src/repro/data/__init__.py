@@ -1,0 +1,10 @@
+"""repro.data — synthetic datasets and samplers."""
+from .synthetic import (rmat_graph, sbm_graph, bipartite_ratings,
+                        planted_node_labels, make_node_dataset, DATASETS,
+                        relational_graph)
+from .sampler import NeighborSampler
+
+__all__ = [
+    "rmat_graph", "sbm_graph", "bipartite_ratings", "planted_node_labels",
+    "make_node_dataset", "DATASETS", "relational_graph", "NeighborSampler",
+]

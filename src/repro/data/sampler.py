@@ -1,0 +1,101 @@
+"""Neighbor sampling for batched (sampled) GraphSAGE — paper Fig. 3.
+
+Produces fixed-shape (padded) mini-batch blocks so a single jitted train
+step serves every batch: per layer l, a bipartite block graph from sampled
+frontier nodes to the previous frontier. Padding uses a dedicated dummy
+node whose features are zero, so padded edges contribute nothing to mean
+aggregation (mask-corrected degree).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from ..core.graph import Graph, from_coo
+
+
+@dataclasses.dataclass
+class SampledBlock:
+    graph: Graph                 # bipartite: src = layer-l nodes, dst = layer-(l+1) seeds
+    src_ids: np.ndarray          # (n_src_pad,) global ids (dummy = -1)
+
+
+@dataclasses.dataclass
+class MiniBatch:
+    blocks: List[SampledBlock]   # outermost hop first
+    input_ids: np.ndarray        # (n_input_pad,) global node ids, -1 = pad
+    seed_ids: np.ndarray         # (batch,) global seed ids
+    labels: np.ndarray           # (batch,)
+
+
+class NeighborSampler:
+    """Uniform neighbor sampler over CSC (incoming edges per node)."""
+
+    def __init__(self, g: Graph, fanouts: Sequence[int], batch_size: int,
+                 seed: int = 0):
+        self.indptr = np.asarray(g.indptr_dst, np.int64)
+        self.src = np.asarray(g.src, np.int64)
+        self.fanouts = list(fanouts)
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.n = g.n_dst
+        # static padded sizes per layer
+        self.layer_sizes = [batch_size]
+        for f in reversed(self.fanouts):
+            self.layer_sizes.append(self.layer_sizes[-1] * (f + 1))
+
+    def sample(self, seeds: np.ndarray, labels: np.ndarray) -> MiniBatch:
+        """Build fully static-shape (node- AND edge-padded) blocks.
+
+        Each block graph has ``n_dst + 1`` destination rows; padded edges
+        point at the extra dummy row, so real rows are untouched and a
+        single jitted step serves every batch. Consumers slice ``[:n_dst]``.
+        """
+        blocks: List[SampledBlock] = []
+        frontier = seeds
+        for li, fanout in enumerate(reversed(self.fanouts)):
+            n_dst = self.layer_sizes[li]
+            n_src_pad = self.layer_sizes[li + 1]
+            n_edges_pad = n_dst * fanout
+            srcs, dsts = [], []
+            # dst-first source numbering: src slot j == dst node j, so a
+            # layer can read its destinations' own features as h[:n_dst]
+            src_ids = list(frontier)
+            uniq: dict = {int(n): j for j, n in enumerate(frontier)
+                          if n >= 0}
+            for j, node in enumerate(frontier):
+                if node < 0:
+                    continue
+                lo, hi = self.indptr[node], self.indptr[node + 1]
+                deg = hi - lo
+                if deg > 0:
+                    take = self.rng.integers(lo, hi, size=min(fanout, deg))
+                    for t in take:
+                        nb = self.src[t]
+                        if nb not in uniq:
+                            uniq[nb] = len(src_ids)
+                            src_ids.append(nb)
+                        srcs.append(uniq[nb])
+                        dsts.append(j)
+            # pad sources to static size; dummy source = last slot
+            n_real_src = len(src_ids)
+            src_ids = np.asarray(src_ids + [-1] * (n_src_pad - n_real_src),
+                                 np.int64)
+            # pad edges into the dummy destination row n_dst
+            pad = n_edges_pad - len(srcs)
+            srcs = np.asarray(srcs + [n_src_pad - 1] * pad, np.int64)
+            dsts = np.asarray(dsts + [n_dst] * pad, np.int64)
+            g = from_coo(srcs, dsts, n_src=n_src_pad, n_dst=n_dst + 1)
+            blocks.append(SampledBlock(graph=g, src_ids=src_ids))
+            frontier = src_ids
+        blocks.reverse()
+        return MiniBatch(blocks=blocks, input_ids=blocks[0].src_ids,
+                         seed_ids=seeds, labels=labels)
+
+    def batches(self, node_ids: np.ndarray, labels: np.ndarray):
+        order = self.rng.permutation(len(node_ids))
+        for s in range(0, len(order) - self.batch_size + 1, self.batch_size):
+            idx = order[s:s + self.batch_size]
+            yield self.sample(node_ids[idx], labels[idx])

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the paper's aggregation hot spots.
+
+Each kernel lives in a subpackage with ``kernel.py`` (pl.pallas_call +
+BlockSpec), ``ops.py`` (jitted wrapper) and ``ref.py`` (pure-jnp oracle).
+On non-TPU backends the kernels run in interpret mode (see
+``common.should_interpret``).
+"""
+from .spmm.ops import spmm
+from .binary_reduce.ops import binary_reduce
+from .edge_softmax.ops import edge_softmax
+
+__all__ = ["spmm", "binary_reduce", "edge_softmax"]

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the fused Binary-Reduce kernel.
+
+``C[v] = Σ_{(u→v)=e} (B[u] ⊗ E[e])`` with canonical-order COO inputs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_BINOPS = {
+    "add": jnp.add,
+    "sub": jnp.subtract,
+    "mul": jnp.multiply,
+    "div": jnp.divide,
+    "copy_lhs": lambda a, b: a,
+    "copy_rhs": lambda a, b: b,
+}
+
+
+def binary_reduce_ref(src: jnp.ndarray, dst: jnp.ndarray, B: jnp.ndarray,
+                      E: jnp.ndarray, n_dst: int, binop: str = "mul"
+                      ) -> jnp.ndarray:
+    """``E`` is (nnz, d) in the SAME order as ``src``/``dst``."""
+    msg = _BINOPS[binop](jnp.take(B, src, axis=0), E)
+    return jax.ops.segment_sum(msg, dst, num_segments=n_dst)

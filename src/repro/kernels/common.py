@@ -1,0 +1,40 @@
+"""Shared helpers for the aggregation Pallas kernels.
+
+The kernels consume the (M,K)-tile-bucketed edge format of
+``repro.core.tiling.TilePack`` — the TPU adaptation of the paper's
+K-blocking + radix-sort (DESIGN.md §2). Sparse gather/scatter inside a
+bucket is expressed as one-hot matmuls so the MXU does the indexing:
+
+    G[e, k] = 1 iff bucket edge e has source-local index k   (gather)
+    S[m, e] = w_e iff bucket edge e has dest-local index m   (scatter)
+
+    C_tile += S @ (G @ B_tile)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def should_interpret() -> bool:
+    """Pallas interpret mode everywhere but real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def onehot_gather_matrix(src_local, mask, bk: int, dtype) -> jnp.ndarray:
+    """(eb, bk) one-hot gather matrix; masked-out edges are all-zero rows."""
+    eb = src_local.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (eb, bk), 1)
+    hot = (src_local[:, None] == iota) & mask[:, None]
+    return hot.astype(dtype)
+
+
+def onehot_scatter_matrix(dst_local, mask, bm: int, dtype,
+                          weight=None) -> jnp.ndarray:
+    """(bm, eb) one-hot scatter matrix, optionally edge-weighted."""
+    eb = dst_local.shape[-1]
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bm, eb), 0)
+    hot = ((dst_local[None, :] == iota) & mask[None, :]).astype(dtype)
+    if weight is not None:
+        hot = hot * weight[None, :].astype(dtype)
+    return hot

@@ -1,0 +1,46 @@
+"""Dispatch from BRSpec (core lattice) onto the Pallas kernels."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from ..core.binary_reduce import BRSpec
+from ..core.tiling import TilePack
+
+
+def gspmm_pallas(g, spec: BRSpec, lhs_data, rhs_data,
+                 tiles: Optional[TilePack] = None):
+    """Route a parsed BR config to a Pallas kernel (out target 'v' only)."""
+    from .spmm.ops import spmm
+    from .binary_reduce.ops import binary_reduce
+
+    if spec.out != "v":
+        raise ValueError("pallas strategy reduces to destination nodes")
+    red = spec.reduce
+
+    # CR: u_copy_{add,mean}_v
+    if spec.op == "copy" and spec.lhs == "u":
+        return spmm(g, lhs_data, red, tiles=tiles)
+
+    # CR from edges: e_copy_{add,mean}_v
+    if spec.op == "copy" and spec.lhs == "e":
+        zeros = jnp.zeros((g.n_src, lhs_data.shape[-1]), lhs_data.dtype)
+        return binary_reduce(g, zeros, lhs_data, binop="copy_rhs",
+                             reduce_op=red, tiles=tiles)
+
+    # BR: u_⊗_e_{add,mean}_v
+    if spec.lhs == "u" and spec.rhs == "e":
+        # scalar edge weight + mul → weighted SpMM (cheaper)
+        if spec.op == "mul" and rhs_data.shape[-1] == 1:
+            return spmm(g, lhs_data, red, weight=rhs_data[:, 0], tiles=tiles)
+        return binary_reduce(g, lhs_data, rhs_data, binop=spec.op,
+                             reduce_op=red, tiles=tiles)
+
+    # BR: e_⊗_u_{add,mean}_v (flip operands for commutative ⊗)
+    if spec.lhs == "e" and spec.rhs == "u" and spec.op in ("add", "mul"):
+        return binary_reduce(g, rhs_data, lhs_data, binop=spec.op,
+                             reduce_op=red, tiles=tiles)
+
+    raise NotImplementedError(
+        f"no pallas kernel for {spec.name}; use strategy='segment'")

@@ -1,0 +1,48 @@
+"""Fused edge-softmax Pallas kernel (GAT's 5-primitive chain in one pass).
+
+The paper's Table 2 shows GAT issuing five BR/CR passes for attention
+normalization (max, sub, exp, sum, div) — five HBM round-trips over
+edge data. Here the logits are packed row-major into padded ELL
+``(rows, W, H)`` so each destination row's incoming edges are one dense
+stripe; the kernel computes the entire masked softmax over the ``W`` axis
+in VMEM: one read, one write.
+
+Grid: row blocks of ``br`` destination rows. Block: (br, W, H).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _softmax_kernel(x_ref, mask_ref, out_ref):
+    x = x_ref[...].astype(jnp.float32)        # (br, W, H)
+    mask = (mask_ref[...] != 0)[:, :, None]   # (br, W, 1)
+    x = jnp.where(mask, x, _NEG)
+    mx = jnp.max(x, axis=1, keepdims=True)    # (br, 1, H)
+    ex = jnp.exp(x - mx)
+    ex = jnp.where(mask, ex, 0.0)
+    z = jnp.sum(ex, axis=1, keepdims=True)
+    out = ex / jnp.maximum(z, 1e-38)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def edge_softmax_pallas_call(n_rows_pad: int, W: int, H: int, br: int,
+                             dtype, *, interpret: bool):
+    """x: (n_rows_pad, W, H) padded ELL logits; mask: (n_rows_pad, W)."""
+    grid = (n_rows_pad // br,)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, W, H), lambda r: (r, 0, 0)),
+            pl.BlockSpec((br, W), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, W, H), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows_pad, W, H), dtype),
+        interpret=interpret)

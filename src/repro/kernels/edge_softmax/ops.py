@@ -1,0 +1,72 @@
+"""Jitted public wrapper for the fused edge-softmax Pallas kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ...core.graph import Graph
+from ...core.tiling import ELLClass, build_ell_uniform
+from ..common import should_interpret
+from .kernel import edge_softmax_pallas_call
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_edges", "br", "interpret"))
+def _edge_softmax_packed(pack: ELLClass, logits: jnp.ndarray,
+                         eid_inv: jnp.ndarray, n_edges: int,
+                         br: int = 8, interpret: Optional[bool] = None
+                         ) -> jnp.ndarray:
+    """Softmax over incoming-edge stripes; returns caller edge order."""
+    C, W = pack.chunk_cols.shape
+    H = logits.shape[-1]
+    C_pad = _round_up(C, br)
+
+    # gather logits (caller order) into the padded ELL stripes
+    x = jnp.take(logits, pack.chunk_eids, axis=0)          # (C, W, H)
+    x = jnp.pad(x, ((0, C_pad - C), (0, 0), (0, 0)))
+    mask = jnp.pad(pack.chunk_mask.astype(jnp.int32),
+                   ((0, C_pad - C), (0, 0)))
+
+    call = edge_softmax_pallas_call(
+        C_pad, W, H, br, logits.dtype,
+        interpret=should_interpret() if interpret is None else interpret)
+    out = call(x, mask)                                    # (C_pad, W, H)
+
+    # scatter back to caller edge order: every real edge occupies exactly
+    # one (chunk, w) slot, so a masked set is a pure permutation.
+    flat_vals = out[:C].reshape(C * W, H)
+    flat_eids = pack.chunk_eids.reshape(C * W)
+    flat_mask = pack.chunk_mask.reshape(C * W)
+    safe_ids = jnp.where(flat_mask, flat_eids, n_edges)    # drop pads
+    res = jnp.zeros((n_edges, H), out.dtype)
+    return res.at[safe_ids].set(flat_vals, mode="drop")
+
+
+def edge_softmax(g: Graph, logits: jnp.ndarray,
+                 ell: Optional[ELLClass] = None, br: int = 8,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Fused softmax over incoming edges per destination node.
+
+    ``logits``: (n_edges, H) or (n_edges,) in the caller's edge order.
+    The pack must be row-complete (one FULL row per chunk): pass
+    ``ell=build_ell_uniform(g, max_in_degree)`` or let this wrapper
+    build it.
+    """
+    squeeze = logits.ndim == 1
+    x = logits[:, None] if squeeze else logits
+    if ell is None:
+        max_deg = int(jnp.max(g.in_degrees)) if g.n_dst else 1
+        ell = build_ell_uniform(g, max(max_deg, 1))
+    elif int(jnp.max(g.in_degrees)) > ell.width:
+        raise ValueError("pack splits rows; edge_softmax needs "
+                         "width >= max in-degree")
+    out = _edge_softmax_packed(ell, x, g.eid_inv, g.n_edges, br=br,
+                               interpret=interpret)
+    return out[:, 0] if squeeze else out

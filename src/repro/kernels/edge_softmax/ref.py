@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the fused edge-softmax kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_softmax_ref(dst: jnp.ndarray, logits: jnp.ndarray,
+                     n_dst: int) -> jnp.ndarray:
+    """Softmax of ``logits`` (nnz, H) over edges sharing a destination.
+
+    ``dst`` and ``logits`` are in the same (any) edge order.
+    """
+    mx = jax.ops.segment_max(logits, dst, num_segments=n_dst)
+    mx = jnp.where(jnp.isfinite(mx), mx, jnp.zeros((), logits.dtype))
+    ex = jnp.exp(logits - jnp.take(mx, dst, axis=0))
+    z = jax.ops.segment_sum(ex, dst, num_segments=n_dst)
+    return ex / jnp.take(z, dst, axis=0)

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the Copy-Reduce SpMM kernel.
+
+Computes ``C[v] = ⊕_{(u→v) ∈ E} w_uv · B[u]`` from raw COO arrays — no
+blocking, no packing, no Pallas. This is the ground truth every kernel
+variant is tested against.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_ref(src: jnp.ndarray, dst: jnp.ndarray, B: jnp.ndarray,
+             n_dst: int, reduce_op: str = "sum",
+             weight: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """COO gather → (weighted) segment reduce. ``weight``: (nnz,) or None."""
+    msg = jnp.take(B, src, axis=0)
+    if weight is not None:
+        msg = msg * weight[:, None].astype(msg.dtype)
+    if reduce_op in ("sum", "mean"):
+        out = jax.ops.segment_sum(msg, dst, num_segments=n_dst)
+        if reduce_op == "mean":
+            deg = jax.ops.segment_sum(jnp.ones_like(dst, msg.dtype), dst,
+                                      num_segments=n_dst)
+            out = out / jnp.maximum(deg, 1)[:, None]
+        return out
+    if reduce_op == "max":
+        out = jax.ops.segment_max(msg, dst, num_segments=n_dst)
+        return jnp.where(jnp.isfinite(out), out, jnp.zeros((), out.dtype))
+    if reduce_op == "min":
+        out = jax.ops.segment_min(msg, dst, num_segments=n_dst)
+        return jnp.where(jnp.isfinite(out), out, jnp.zeros((), out.dtype))
+    raise ValueError(reduce_op)

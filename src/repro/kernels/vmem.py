@@ -1,0 +1,49 @@
+"""VMEM footprint model for the aggregation kernels.
+
+TPU v5e has ~16 MiB of VMEM per core. BlockSpec geometry must keep every
+live tile resident: the dry-run can't execute the kernels, so this model
+is the structural check (and the block-shape autotuner's cost function)
+— pick the largest K-block (``bk``) whose working set fits, exactly the
+paper's "B block stays in L2" sizing rule mapped to VMEM.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+VMEM_BYTES = 16 * 1024 * 1024
+
+
+def spmm_vmem_bytes(bm: int, bk: int, eb: int, nd: int,
+                    dtype_bytes: int = 4) -> int:
+    """Live VMEM for one grid step of the SpMM kernel."""
+    b_tile = bk * nd * dtype_bytes             # source K-block
+    out_tile = bm * nd * 4                     # f32 accumulator
+    onehots = (eb * bk + bm * eb) * 4          # G and S matrices
+    gathered = eb * nd * 4                     # G @ B intermediate
+    idx = 4 * eb * 4                           # dst/src/mask/weight rows
+    return b_tile + out_tile + onehots + gathered + idx
+
+
+def br_vmem_bytes(bm: int, bk: int, eb: int, nd: int,
+                  dtype_bytes: int = 4) -> int:
+    """Fused binary-reduce adds the streamed edge-feature block."""
+    return (spmm_vmem_bytes(bm, bk, eb, nd, dtype_bytes)
+            + eb * nd * dtype_bytes)
+
+
+def edge_softmax_vmem_bytes(br_rows: int, width: int, heads: int) -> int:
+    x = br_rows * width * heads * 4
+    mask = br_rows * width * 4
+    return 2 * x + mask                        # in + out + mask
+
+
+def pick_spmm_geometry(d: int, dtype_bytes: int = 4,
+                       budget: int = VMEM_BYTES) -> Dict[str, int]:
+    """Largest MXU-aligned K-block that fits the VMEM budget."""
+    nd = min(128 * max(1, d // 128), 512)
+    best = dict(bm=128, bk=128, eb=256, nd=nd)
+    for bk in (1024, 512, 256, 128):
+        for eb in (512, 256, 128):
+            if spmm_vmem_bytes(128, bk, eb, nd, dtype_bytes) <= budget // 2:
+                return dict(bm=128, bk=bk, eb=eb, nd=nd)
+    return best

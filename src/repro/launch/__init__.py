@@ -1,0 +1,2 @@
+"""repro.launch — mesh construction, sharding rules, train/serve steps,
+multi-pod dry-run."""

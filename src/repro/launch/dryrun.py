@@ -1,0 +1,297 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+MUST set the placeholder device count before ANY other import (jax locks
+device count on first init). Do not import this module from tests/benches
+— they need the single real CPU device.
+"""
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                           + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+import argparse
+import json
+import re
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config, cells
+from ..models.lm.config import ModelConfig
+from ..pjit_utils import ambient_mesh
+from . import shardings as SR
+from .input_specs import input_specs
+from .mesh import make_production_mesh
+from .steps import (TrainState, make_train_step, make_prefill_step,
+                    make_decode_step, state_specs, eval_param_shapes)
+
+# --------------------------------------------------------------------- #
+# HLO collective parsing
+# --------------------------------------------------------------------- #
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_TYPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|u64|s32|u32|s16|u16|s8|u8|"
+                      r"pred|c64|c128)\[([0-9,]*)\]")
+
+
+def _type_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_collective_bytes(hlo: str) -> Dict[str, int]:
+    """Sum OPERAND bytes of every collective op (per-device program).
+
+    ``-done`` ops are skipped so async pairs aren't double counted.
+    Operand types are parsed from inside the call parens when present;
+    otherwise the result type is used, corrected by the replica-group size
+    for all-gather (result = operand × group) and reduce-scatter
+    (operand = result × group).
+    """
+    out: Dict[str, int] = {}
+    counts: Dict[str, int] = {}
+    for line in hlo.splitlines():
+        m = _COLL_RE.search(line)
+        if m is None:
+            continue
+        kind = m.group(1)
+        opstart = m.end()
+        depth = 1
+        i = opstart
+        while i < len(line) and depth:
+            if line[i] == "(":
+                depth += 1
+            elif line[i] == ")":
+                depth -= 1
+            i += 1
+        operands = line[opstart:i - 1]
+        types = _TYPE_RE.findall(operands)
+        if types:
+            nbytes = sum(_type_bytes(d, dims) for d, dims in types)
+        else:
+            # result type(s) live between '=' and the op name
+            res_types = _TYPE_RE.findall(line[m.start():opstart])
+            nbytes = sum(_type_bytes(d, dims) for d, dims in res_types)
+            gm = _GROUPS_RE.search(line)
+            group = int(gm.group(2)) if gm else 1
+            if kind == "all-gather" and group:
+                nbytes //= group          # result = operand × group
+            elif kind == "reduce-scatter":
+                nbytes *= group           # operand = result × group
+        out[kind] = out.get(kind, 0) + nbytes
+        counts[kind] = counts.get(kind, 0) + 1
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    out["op_counts"] = counts
+    return out
+
+
+def _memory_analysis_dict(compiled) -> Dict[str, Any]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ma is None:
+        return {"unavailable": True}
+    out = {}
+    for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes",
+                 "host_argument_size_in_bytes",
+                 "host_output_size_in_bytes", "host_temp_size_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = int(v)
+    return out
+
+
+def _cost_analysis_dict(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if ca is None:
+        return {"unavailable": True}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float))}
+
+
+# --------------------------------------------------------------------- #
+# cell runner
+# --------------------------------------------------------------------- #
+def build_lowered(arch: str, shape: str, mesh, *, microbatch: int = 1,
+                  fsdp: bool = True, attn_block: int = 512):
+    """Lower the cell's step function under the mesh. Returns lowered."""
+    spec = input_specs(arch, shape)
+    cfg: ModelConfig = spec["cfg"]
+    kind = spec["kind"]
+    max_seq = spec["S"] + 8 if cfg.family == "encdec" else 0
+    pshapes = eval_param_shapes(cfg, max_seq=max_seq)
+    pspecs = SR.param_specs(pshapes, cfg, mesh, fsdp=fsdp)
+
+    if kind == "train":
+        sspec = TrainState(params=pspecs, mu=pspecs, nu=pspecs,
+                           step=jax.sharding.PartitionSpec())
+        state_sds = TrainState(
+            params=pshapes,
+            mu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32), pshapes),
+            nu=jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape, jnp.float32), pshapes),
+            step=jax.ShapeDtypeStruct((), jnp.int32))
+        bspec = SR.batch_specs(cfg, "train", mesh, batch_size=spec["B"])
+        step = make_train_step(cfg, microbatch=microbatch)
+        jitted = jax.jit(
+            step,
+            in_shardings=(SR.to_named(sspec, mesh),
+                          SR.to_named(bspec, mesh)),
+            out_shardings=(SR.to_named(sspec, mesh), None),
+            donate_argnums=(0,))
+        return jitted.lower(state_sds, spec["batch"]), cfg, kind
+
+    B = spec["B"]
+    cspec = SR.cache_specs(cfg, mesh, batch_size=B, seq_len=spec["S"],
+                           kind=kind)
+    P = jax.sharding.PartitionSpec
+    bspec = SR.batch_specs(cfg, kind, mesh, batch_size=B)
+    ex_spec = {}
+    if cfg.family == "encdec" and kind == "prefill":
+        # decode reads cross-attention K/V from the cache, not memory
+        ex_spec["memory"] = SR._to_spec(
+            mesh, (SR._data_if_divisible(mesh, B), None, None))
+    if cfg.family == "vlm" and kind == "prefill":
+        ex_spec["positions"] = bspec["positions"]
+
+    if kind == "prefill":
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(SR.to_named(pspecs, mesh),
+                          SR.to_named(bspec["tokens"], mesh),
+                          SR.to_named(cspec, mesh),
+                          SR.to_named(ex_spec, mesh)),
+            out_shardings=(None, SR.to_named(cspec, mesh)),
+            donate_argnums=(2,))
+        return jitted.lower(eval_param_shapes(cfg, max_seq=max_seq),
+                            spec["tokens"], spec["cache"],
+                            spec["extras"]), cfg, kind
+
+    step = make_decode_step(cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(SR.to_named(pspecs, mesh),
+                      SR.to_named(bspec["tokens"], mesh),
+                      SR.to_named(cspec, mesh),
+                      SR.to_named(P(), mesh),
+                      SR.to_named(ex_spec, mesh)),
+        out_shardings=(None, SR.to_named(cspec, mesh)),
+        donate_argnums=(2,))
+    return jitted.lower(eval_param_shapes(cfg, max_seq=max_seq),
+                        spec["token"], spec["cache"], spec["pos"],
+                        spec["extras"]), cfg, kind
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool,
+             out_path: Optional[str] = None, *, microbatch: int = 1,
+             fsdp: bool = True, attn_block: int = 512) -> Dict[str, Any]:
+    mesh_env = os.environ.get("REPRO_DRYRUN_MESH")  # e.g. "2x4" (debug)
+    if mesh_env:
+        from .mesh import make_mesh
+        dims = tuple(int(x) for x in mesh_env.split("x"))
+        axes = ("pod", "data", "model")[-len(dims):]
+        mesh = make_mesh(dims, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    t0 = time.time()
+    with mesh, ambient_mesh(mesh):
+        lowered, cfg, kind = build_lowered(arch, shape, mesh,
+                                           microbatch=microbatch,
+                                           fsdp=fsdp,
+                                           attn_block=attn_block)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = _memory_analysis_dict(compiled)
+        cost = _cost_analysis_dict(compiled)
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = parse_collective_bytes(hlo)
+        from . import hlo_analysis
+        try:
+            tripaware = hlo_analysis.analyze(hlo)
+        except Exception as e:  # keep the dry-run result even if parse fails
+            tripaware = {"error": repr(e)}
+
+    sh = SHAPES[shape]
+    tokens_global = sh["global_batch"] * (sh["seq_len"] if kind != "decode"
+                                          else 1)
+    mesh_label = ("debug-" + mesh_env if mesh_env
+                  else ("multipod-2x16x16" if multi_pod else "pod-16x16"))
+    result = {
+        "arch": arch, "shape": shape, "kind": kind,
+        "mesh": mesh_label,
+        "n_chips": n_chips,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+        "tokens_global": tokens_global,
+        "memory_analysis": mem,
+        "cost_analysis": cost,
+        "collective_bytes": coll,
+        "tripaware": tripaware,
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "microbatch": microbatch,
+        "fsdp": fsdp,
+        "ok": True,
+    }
+    print(f"[dryrun] {arch} × {shape} × {result['mesh']}: "
+          f"flops/dev(raw)={cost.get('flops', float('nan')):.3e} "
+          f"flops/dev(trip-aware)={tripaware.get('flops_hlo', 0):.3e} "
+          f"coll/dev(trip-aware)={tripaware.get('collective_total', 0):.3e} "
+          f"compile={t_compile:.0f}s")
+    print("memory_analysis:", json.dumps(mem))
+    print("cost_analysis:", {k: v for k, v in sorted(cost.items())
+                             if k in ("flops", "bytes accessed",
+                                      "transcendentals")})
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--microbatch", type=int, default=1)
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--attn-block", type=int, default=512)
+    args = ap.parse_args()
+    run_cell(args.arch, args.shape, args.multi_pod, args.out,
+             microbatch=args.microbatch, fsdp=not args.no_fsdp,
+             attn_block=args.attn_block)
+
+
+if __name__ == "__main__":
+    main()

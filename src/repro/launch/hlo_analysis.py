@@ -1,0 +1,339 @@
+"""Trip-count-aware HLO text analysis for the roofline.
+
+``compiled.cost_analysis()`` visits each op ONCE — a ``jax.lax.scan`` over
+56 layers contributes its body a single time, undercounting FLOPs,
+bytes and collective traffic by ~L×. This module re-derives the three
+roofline inputs from ``compiled.as_text()`` with loop awareness:
+
+  * parse every computation into a symbol table (op name -> shape/dtype),
+  * extract while-loop trip counts from the loop-condition constant,
+  * walk the call graph (while / call / conditional / fusion) multiplying
+    by trip counts,
+  * count matmul FLOPs from dot shapes + contracting dims,
+  * count collective operand bytes per kind,
+  * approximate HBM traffic as Σ top-level (operand + result) bytes
+    (each top-level HLO op is one kernel launch's worth of traffic —
+    fusion internals excluded, matching the TPU execution model).
+
+This is structural dry-run profiling (no wall clock): exactly the
+"profile" the §Perf hillclimb iterates on.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_TRIP_CFG = re.compile(r'known_trip_count[":{\s]+n["\s:]+(\d+)')
+_OP_LINE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_TYPE_TOK = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OPCODE = re.compile(r"^\s*(?:\(.*?\)|[a-z0-9\[\],{}<=\s]*?)\s*([a-z][\w\-]*)\(")
+_CALLED = re.compile(r"(?:condition|body|to_apply|calls|branch_computations)="
+                     r"({[^}]*}|%?[\w.\-]+)")
+_CONST_INT = re.compile(r"constant\((\d+)\)")
+_COMPARE = re.compile(r"compare\(")
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(ty: str) -> int:
+    total = 0
+    for dt, dims in _TYPE_TOK.findall(ty):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(ty: str) -> List[List[int]]:
+    out = []
+    for dt, dims in _TYPE_TOK.findall(ty):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append([int(d) for d in dims.split(",") if d])
+    return out
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    rest: str        # full RHS text
+    opcode: str
+    result_ty: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: Dict[str, Op]
+    order: List[str]
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation],
+                                          Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    entry: Optional[str] = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            s = line.strip()
+            m = _COMP_HDR.match(s)
+            if m and s.endswith("{") and "->" in s:
+                cur = Computation(m.group(1), {}, [])
+                if s.startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_LINE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        om = _OPCODE.match(" " + rest)
+        opcode = om.group(1) if om else ""
+        # result type = leading type tokens before the opcode
+        idx = rest.find(opcode + "(") if opcode else -1
+        result_ty = rest[:idx] if idx > 0 else rest
+        cur.ops[name] = Op(name, rest, opcode, result_ty)
+        cur.order.append(name)
+    return comps, entry
+
+
+def _called_computations(op: Op) -> List[str]:
+    out = []
+    for m in _CALLED.finditer(op.rest):
+        blob = m.group(1)
+        for name in re.findall(r"%?([\w.\-]+)", blob):
+            out.append(name)
+    return out
+
+
+def _operand_names(op: Op) -> List[str]:
+    # operands inside the top-level parens of opcode(...)
+    i = op.rest.find(op.opcode + "(")
+    if i < 0:
+        return []
+    i += len(op.opcode) + 1
+    depth = 1
+    j = i
+    while j < len(op.rest) and depth:
+        if op.rest[j] == "(":
+            depth += 1
+        elif op.rest[j] == ")":
+            depth -= 1
+        j += 1
+    seg = op.rest[i:j - 1]
+    return re.findall(r"%([\w.\-]+)", seg)
+
+
+def _trip_count(comps: Dict[str, Computation], cond_name: str) -> int:
+    """Loop condition is `compare(iv, constant(K))` — take the max int
+    constant in the condition computation as the trip count."""
+    comp = comps.get(cond_name)
+    if comp is None:
+        return 1
+    best = 1
+    for op in comp.ops.values():
+        for c in _CONST_INT.findall(op.rest):
+            best = max(best, int(c))
+    return best
+
+
+def _dot_flops(comp: Computation, op: Op) -> int:
+    """2 × prod(result dims) × prod(contracting dims of lhs)."""
+    res_dims = _shape_dims(op.result_ty)
+    if not res_dims:
+        return 0
+    out_elems = 1
+    for d in res_dims[0]:
+        out_elems *= d
+    m = re.search(r"lhs_contracting_dims={([0-9,]*)}", op.rest)
+    contract = 1
+    if m:
+        idxs = [int(x) for x in m.group(1).split(",") if x]
+        operands = _operand_names(op)
+        if operands:
+            lhs = comp.ops.get(operands[0])
+            if lhs is not None:
+                lhs_dims = _shape_dims(lhs.result_ty)
+                if lhs_dims:
+                    for i in idxs:
+                        if i < len(lhs_dims[0]):
+                            contract *= lhs_dims[0][i]
+    return 2 * out_elems * contract
+
+
+@dataclasses.dataclass
+class Totals:
+    flops: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(default_factory=dict)
+    hbm_bytes: float = 0.0
+
+    def add(self, other: "Totals", mult: float = 1.0,
+            include_hbm: bool = True):
+        self.flops += other.flops * mult
+        if include_hbm:
+            self.hbm_bytes += other.hbm_bytes * mult
+        for k, v in other.coll_bytes.items():
+            self.coll_bytes[k] = self.coll_bytes.get(k, 0.0) + v * mult
+
+
+def analyze(hlo: str, entry: Optional[str] = None) -> Dict[str, float]:
+    comps, parsed_entry = parse_computations(hlo)
+    if entry is None:
+        entry = parsed_entry
+    memo: Dict[str, Totals] = {}
+
+    def comp_totals(name: str) -> Totals:
+        if name in memo:
+            return memo[name]
+        memo[name] = Totals()   # cycle guard
+        comp = comps.get(name)
+        if comp is None:
+            return memo[name]
+        t = Totals()
+        for op_name in comp.order:
+            op = comp.ops[op_name]
+            oc = op.opcode
+            if oc == "while":
+                cm = re.search(r"condition=%?([\w.\-]+)", op.rest)
+                bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                cond = cm.group(1) if cm else None
+                body = bm.group(1) if bm else None
+                # prefer the compiler-annotated trip count
+                tm = _TRIP_CFG.search(op.rest)
+                if tm:
+                    trips = int(tm.group(1))
+                else:
+                    trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    t.add(comp_totals(body), trips)
+                continue
+            if oc in ("call", "custom-call"):
+                for c in _called_computations(op):
+                    t.add(comp_totals(c))
+            if oc == "conditional":
+                subs = _called_computations(op)
+                if subs:   # worst case branch? use max flops branch
+                    branch_ts = [comp_totals(c) for c in subs]
+                    best = max(branch_ts, key=lambda x: x.flops)
+                    t.add(best)
+                continue
+            if oc == "fusion":
+                # count internal FLOPs/collectives; HBM traffic of a
+                # fusion is its own operands+result (counted below)
+                for c in _called_computations(op):
+                    t.add(comp_totals(c), include_hbm=False)
+            if oc == "dot":
+                t.flops += _dot_flops(comp, op)
+            base = oc.replace("-start", "")
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                nbytes = 0
+                ops = _operand_names(op)
+                for o in ops:
+                    src = comp.ops.get(o)
+                    if src is not None:
+                        nbytes += _shape_bytes(src.result_ty)
+                if nbytes == 0:
+                    nbytes = _shape_bytes(op.result_ty)
+                t.coll_bytes[base] = t.coll_bytes.get(base, 0) + nbytes
+            # HBM traffic approximation: top-level ops only, skip
+            # shape-only ops
+            if oc not in ("parameter", "constant", "get-tuple-element",
+                          "tuple", "bitcast", "while", "call",
+                          "conditional"):
+                nb = _shape_bytes(op.result_ty)
+                for o in _operand_names(op):
+                    src = comp.ops.get(o)
+                    if src is not None:
+                        nb += _shape_bytes(src.result_ty)
+                t.hbm_bytes += nb
+        memo[name] = t
+        return t
+
+    # entry computation: the one marked ENTRY — rely on caller or pick the
+    # computation that is not referenced by others
+    if entry is None:
+        referenced = set()
+        for c in comps.values():
+            for op in c.ops.values():
+                referenced.update(_called_computations(op))
+        candidates = [n for n in comps if n not in referenced]
+        entry = candidates[-1] if candidates else next(iter(comps))
+    t = comp_totals(entry)
+    out = {"flops_hlo": t.flops, "hbm_bytes_est": t.hbm_bytes,
+           "collective_bytes": dict(t.coll_bytes),
+           "collective_total": sum(t.coll_bytes.values()),
+           "entry": entry}
+    return out
+
+
+def top_collectives(hlo: str, k: int = 12):
+    """Largest collective sites (trip-weighted), with op metadata — the
+    §Perf drill-down tool."""
+    comps, entry = parse_computations(hlo)
+
+    # computation -> cumulative trip multiplier (entry = 1)
+    mult = {entry: 1.0}
+    changed = True
+    while changed:
+        changed = False
+        for cname, comp in comps.items():
+            if cname not in mult:
+                continue
+            for op in comp.ops.values():
+                if op.opcode == "while":
+                    bm = re.search(r"body=%?([\w.\-]+)", op.rest)
+                    tm = _TRIP_CFG.search(op.rest)
+                    trips = int(tm.group(1)) if tm else 1
+                    if bm:
+                        v = mult[cname] * trips
+                        if mult.get(bm.group(1), 0) < v:
+                            mult[bm.group(1)] = v
+                            changed = True
+                elif op.opcode in ("call", "fusion", "conditional",
+                                   "custom-call"):
+                    for c in _called_computations(op):
+                        if mult.get(c, 0) < mult[cname]:
+                            mult[c] = mult[cname]
+                            changed = True
+
+    sites = []
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0)
+        if m <= 0:
+            continue
+        for op in comp.ops.values():
+            base = op.opcode.replace("-start", "")
+            if base in _COLLECTIVES and not op.opcode.endswith("-done"):
+                nbytes = 0
+                for o in _operand_names(op):
+                    src = comp.ops.get(o)
+                    if src is not None:
+                        nbytes += _shape_bytes(src.result_ty)
+                if nbytes == 0:
+                    nbytes = _shape_bytes(op.result_ty)
+                meta = re.search(r'op_name="([^"]*)"', op.rest)
+                sites.append({
+                    "kind": base, "bytes_each": nbytes, "trips": m,
+                    "bytes_total": nbytes * m,
+                    "result": op.result_ty.strip()[:60],
+                    "op_name": meta.group(1)[-120:] if meta else "",
+                })
+    sites.sort(key=lambda s: -s["bytes_total"])
+    return sites[:k]

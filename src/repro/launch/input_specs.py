@@ -1,0 +1,73 @@
+"""ShapeDtypeStruct stand-ins for every model input (no allocation).
+
+``input_specs(arch, shape)`` returns the exact abstract inputs the step
+function for that cell is lowered with: weak-type-correct, shardable via
+launch.shardings, zero device memory.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs import SHAPES, get_config
+from ..models.lm import init_cache
+from ..models.lm.config import ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _model_dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def train_batch_specs(cfg: ModelConfig, B: int, S: int) -> Dict[str, SDS]:
+    batch = {"tokens": SDS((B, S), jnp.int32),
+             "labels": SDS((B, S), jnp.int32)}
+    if cfg.family == "encdec":
+        batch["frames"] = SDS((B, cfg.enc_seq, cfg.d_model),
+                              _model_dtype(cfg))
+    if cfg.family == "vlm":
+        batch["positions"] = SDS((3, B, S), jnp.int32)
+    return batch
+
+
+def cache_shapes(cfg: ModelConfig, B: int, S: int):
+    return jax.eval_shape(
+        lambda: init_cache(cfg, B, S, _model_dtype(cfg)))
+
+
+def serve_extras_specs(cfg: ModelConfig, B: int, S: int,
+                       kind: str) -> Dict[str, SDS]:
+    ex: Dict[str, SDS] = {}
+    if cfg.family == "encdec" and kind == "prefill":
+        # decode takes NO memory: cross-attention K/V live in the cache
+        # (projected once at prefill)
+        ex["memory"] = SDS((B, cfg.enc_seq, cfg.d_model), _model_dtype(cfg))
+    if cfg.family == "vlm" and kind == "prefill":
+        ex["positions"] = SDS((3, B, S), jnp.int32)
+    return ex
+
+
+def input_specs(arch: str, shape: str) -> Dict[str, Any]:
+    """Abstract inputs for one (arch, shape) cell.
+
+    Returns {"kind", "cfg", and kind-specific SDS trees}."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    B, S = sh["global_batch"], sh["seq_len"]
+    kind = sh["kind"]
+    out: Dict[str, Any] = {"kind": kind, "cfg": cfg, "B": B, "S": S}
+    if kind == "train":
+        out["batch"] = train_batch_specs(cfg, B, S)
+    elif kind == "prefill":
+        out["tokens"] = SDS((B, S), jnp.int32)
+        out["cache"] = cache_shapes(cfg, B, S)
+        out["extras"] = serve_extras_specs(cfg, B, S, "prefill")
+    else:  # decode: one new token against a seq_len-deep cache
+        out["token"] = SDS((B,), jnp.int32)
+        out["cache"] = cache_shapes(cfg, B, S)
+        out["pos"] = SDS((), jnp.int32)
+        out["extras"] = serve_extras_specs(cfg, B, S, "decode")
+    return out

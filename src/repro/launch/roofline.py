@@ -1,0 +1,182 @@
+"""Roofline report from the dry-run JSONs.
+
+Per (arch × shape × mesh):
+    compute term    = FLOPs/device          / 197 TFLOP/s (bf16, v5e)
+    memory term     = HBM bytes/device      / 819 GB/s
+    collective term = collective bytes/dev  / 50 GB/s/link (ICI)
+
+FLOPs and bytes come from the trip-count-aware HLO analysis (dryrun
+``tripaware``; raw ``cost_analysis`` undercounts loop bodies — both are
+recorded). MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (serve);
+the ratio MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is
+useful (remat, replicated attention, padding all lower it).
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--mesh pod]
+                          [--md]  # emit the EXPERIMENTS.md table
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (ICI)
+
+OUT_DIR = os.path.join("experiments", "dryrun")
+
+
+def load_cells(mesh: str = "pod", out_dir: str = OUT_DIR) -> List[dict]:
+    out = []
+    for p in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if r.get("ok"):
+            out.append(r)
+    return out
+
+
+def analytic_hbm_bytes(r: dict) -> float:
+    """Per-device HBM traffic model (bytes/step).
+
+    Methodology (documented in EXPERIMENTS.md): text-derived byte counts
+    misprice fusion and in-place cache updates, so the memory term uses an
+    analytic model of the TPU execution:
+      train   = 3 passes over TP-shard weights + optimizer state sweep
+                + activation write/read per layer (remat ≈ ×2)
+      prefill = 1 pass over weights + activations + cache write
+      decode  = 1 pass over weights + full cache read + slot write
+    """
+    from ..configs import SHAPES, get_config, ALIASES
+    cfg = get_config(r["arch"])
+    sh = SHAPES[r["shape"]]
+    chips = r["n_chips"]
+    model_ax = 16
+    data_ax = chips // model_ax
+    B, S = sh["global_batch"], sh["seq_len"]
+    B_loc = max(B // data_ax, 1)
+    N = cfg.param_count()
+    W = N * 2                                   # bf16 weights
+    D = cfg.d_model
+
+    # per-token activation bytes per layer (residual stream, bf16),
+    # sharded over model between blocks
+    act_layer = B_loc * S * D * 2 / model_ax
+    L = cfg.n_layers + cfg.n_enc_layers
+
+    # kv-cache bytes (global)
+    if cfg.family in ("ssm",):
+        cache = 0
+    else:
+        n_attn = (cfg.n_layers // cfg.shared_attn_every
+                  if cfg.family == "hybrid" else
+                  cfg.n_layers + cfg.n_enc_layers)
+        kv_s = min(S, cfg.sliding_window) if (
+            cfg.sliding_window and r["shape"] == "long_500k") else S
+        cache = n_attn * 2 * cfg.n_kv_heads * cfg.head_dim * kv_s * B * 2
+
+    if r["kind"] == "train":
+        w_traffic = 3 * W / model_ax            # fwd + bwd + remat-fwd
+        opt = 32 * N / chips                    # f32 m,v,p,g read+write
+        act = 8 * act_layer * L                 # write/read ×(fwd,bwd,remat)
+        ce = 2 * 2 * B_loc * S * cfg.vocab * 4 / model_ax
+        return w_traffic + opt + act + ce
+    if r["kind"] == "prefill":
+        return W / model_ax + 4 * act_layer * L + cache / chips
+    # decode: own weight shard + the FSDP-gathered TP-shard copy + cache
+    return W / chips + W / model_ax + cache / chips
+
+
+def roofline_row(r: dict) -> Optional[dict]:
+    ta = r.get("tripaware", {})
+    if "flops_hlo" not in ta:
+        return None
+    chips = r["n_chips"]
+    flops_dev = ta["flops_hlo"]
+    hbm_dev = analytic_hbm_bytes(r)
+    coll_dev = ta.get("collective_total", 0.0)
+
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = hbm_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+
+    mult = 6 if r["kind"] == "train" else 2
+    model_flops = mult * r["active_params"] * r["tokens_global"]
+    model_dev = model_flops / chips
+    useful = model_dev / flops_dev if flops_dev else 0.0
+
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    t_bound = max(terms.values())
+    # achievable MFU if perfectly overlapped = useful work over bound time
+    mfu_bound = model_dev / PEAK_FLOPS / t_bound if t_bound else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "kind": r["kind"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "bottleneck": bottleneck,
+        "model_flops_dev": model_dev, "hlo_flops_dev": flops_dev,
+        "useful_ratio": useful,
+        "roofline_fraction": mfu_bound,
+        "temp_bytes_dev": r.get("memory_analysis", {}).get(
+            "temp_size_in_bytes"),
+        "arg_bytes_dev": r.get("memory_analysis", {}).get(
+            "argument_size_in_bytes"),
+    }
+
+
+def what_would_help(row: dict) -> str:
+    b = row["bottleneck"]
+    if b == "compute":
+        if row["useful_ratio"] < 0.5:
+            return ("compute-bound but mostly waste: fix sharding so "
+                    "attention/FFN aren't replicated (useful "
+                    f"{row['useful_ratio']:.0%})")
+        return "compute-bound: larger per-chip batch or faster kernels"
+    if b == "memory":
+        return ("memory-bound: raise arithmetic intensity (fuse, widen "
+                "tiles, cut remat re-reads, quantize weights for decode)")
+    return ("collective-bound: shrink/overlap collectives (reduce-scatter "
+            "instead of all-reduce, int8 grad compression, fewer "
+            "resharding hops)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--md", action="store_true")
+    ap.add_argument("--out-dir", default=OUT_DIR)
+    args = ap.parse_args()
+
+    rows = []
+    for r in load_cells(args.mesh, args.out_dir):
+        row = roofline_row(r)
+        if row:
+            rows.append(row)
+    rows.sort(key=lambda x: (x["arch"], x["shape"]))
+
+    if args.md:
+        print("| arch | shape | t_comp (ms) | t_mem (ms) | t_coll (ms) | "
+              "bound | useful | roofline frac |")
+        print("|---|---|---|---|---|---|---|---|")
+        for x in rows:
+            print(f"| {x['arch']} | {x['shape']} "
+                  f"| {x['t_compute_s']*1e3:.1f} "
+                  f"| {x['t_memory_s']*1e3:.1f} "
+                  f"| {x['t_collective_s']*1e3:.1f} "
+                  f"| {x['bottleneck']} "
+                  f"| {x['useful_ratio']:.2f} "
+                  f"| {x['roofline_fraction']:.2f} |")
+    else:
+        for x in rows:
+            print(json.dumps(x))
+            print("  ->", what_would_help(x))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""Parameter / state / batch sharding rules (FSDP × TP, optional EP).
+
+Every rule is a CHAIN of candidates; the first whose divisibility holds on
+the actual mesh wins (pjit rejects non-divisible input shardings). E.g.
+attention wq (D, H, Dh) prefers heads-on-'model' (Megatron TP) but falls
+back to head_dim-on-'model' when H doesn't divide the axis (28, 40, 24, 12
+heads on a 16-way axis), and finally to fused FSDP×TP on D.
+
+Design (DESIGN.md §5):
+  * TP on 'model': heads / FFN inner / vocab.
+  * FSDP (ZeRO-3) on 'data' ('pod','data' across pods): the other large
+    dim; optimizer moments inherit the parameter spec.
+  * EP: expert dim on 'model' when divisible (neither assigned MoE arch
+    divides 16; rule activates on meshes where it does).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.lm.config import ModelConfig
+
+Axis = Any  # None | str | tuple[str, ...]
+Candidate = Tuple[Axis, ...]
+
+# (name, rank) -> candidate chain (logical axes; 'data' expands to
+# ('pod','data') on multi-pod meshes).
+_RULES: Dict[tuple, List[Candidate]] = {
+    ("embed", 2): [("model", "data"), (None, ("model", "data")),
+                   (None, "model")],
+    ("lm_head", 2): [("model", "data"), (None, ("model", "data")),
+                     (None, "model")],
+    ("enc_pos", 2): [(None, "model")],
+    ("dec_pos", 2): [(None, "model")],
+    # attention
+    ("wq", 3): [("data", "model", None), ("data", None, "model"),
+                (("data", "model"), None, None)],
+    ("wk", 3): [("data", "model", None), ("data", None, "model"),
+                (("data", "model"), None, None)],
+    ("wv", 3): [("data", "model", None), ("data", None, "model"),
+                (("data", "model"), None, None)],
+    ("wo", 3): [("model", None, "data"), (None, "model", "data"),
+                (None, None, ("data", "model"))],
+    ("bq", 2): [("model", None), (None, "model")],
+    ("bk", 2): [("model", None), (None, "model")],
+    ("bv", 2): [("model", None), (None, "model")],
+    # dense mlp
+    ("w_gate", 2): [("data", "model"), (None, "model")],
+    ("w_up", 2): [("data", "model"), (None, "model")],
+    ("w_down", 2): [("model", "data"), ("model", None)],
+    ("b_up", 1): [("model",)],
+    ("b_down", 1): [(None,)],
+    # moe (rank 3, experts-first)
+    ("router", 2): [("data", None), (None, None)],
+    ("w_gate", 3): [(None, "data", "model"), (None, None, "model")],
+    ("w_up", 3): [(None, "data", "model"), (None, None, "model")],
+    ("w_down", 3): [(None, "model", "data"), (None, "model", None)],
+    # mamba2
+    ("in_proj", 2): [("data", "model"), (None, "model")],
+    ("out_proj", 2): [("model", "data"), ("model", None)],
+    ("conv_w", 2): [(None, "model")],
+    ("conv_b", 1): [("model",)],
+    ("A_log", 1): [(None,)],
+    ("dt_bias", 1): [(None,)],
+    ("skip_D", 1): [(None,)],
+    # norms
+    ("scale", 1): [(None,)],
+    ("bias", 1): [(None,)],
+}
+
+_MOE_EP_RULES: Dict[tuple, List[Candidate]] = {
+    ("w_gate", 3): [("model", "data", None)],
+    ("w_up", 3): [("model", "data", None)],
+    ("w_down", 3): [("model", None, "data")],
+}
+
+
+def _expand(mesh: Mesh, axis: Axis) -> Optional[Tuple[str, ...]]:
+    """Logical -> flat tuple of physical mesh axis names."""
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        axis = (axis,)
+    out = []
+    for a in axis:
+        if a == "data" and "pod" in mesh.axis_names:
+            out.extend(("pod", "data"))
+        else:
+            out.append(a)
+    return tuple(out)
+
+
+def _axis_size(mesh: Mesh, axes: Optional[Tuple[str, ...]]) -> int:
+    if not axes:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _fits(mesh: Mesh, shape: Sequence[int], cand: Candidate) -> bool:
+    for dim, axis in zip(shape, cand):
+        sz = _axis_size(mesh, _expand(mesh, axis))
+        if sz > 1 and dim % sz != 0:
+            return False
+    return True
+
+
+def _to_spec(mesh: Mesh, cand: Candidate) -> P:
+    entries = []
+    for axis in cand:
+        flat = _expand(mesh, axis)
+        if flat is None:
+            entries.append(None)
+        elif len(flat) == 1:
+            entries.append(flat[0])
+        else:
+            entries.append(tuple(flat))
+    return P(*entries)
+
+
+def pick_spec(mesh: Mesh, shape: Sequence[int],
+              candidates: List[Candidate], *, stacked: bool = False) -> P:
+    body = shape[1:] if stacked else shape
+    for cand in candidates:
+        if _fits(mesh, body, cand):
+            spec = _to_spec(mesh, cand)
+            if stacked:
+                spec = P(*((None,) + tuple(spec)))
+            return spec
+    return P(*((None,) * len(shape)))
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if hasattr(k, "key"):
+            out.append(str(k.key))
+        elif hasattr(k, "idx"):
+            out.append(str(k.idx))
+    return out
+
+
+def param_specs(params_shape: Any, cfg: Optional[ModelConfig],
+                mesh: Mesh, fsdp: bool = True) -> Any:
+    """PartitionSpec pytree for a params (or shapes) pytree."""
+    model_axis = mesh.shape.get("model", 1)
+    use_ep = (cfg is not None and cfg.n_experts > 0
+              and cfg.n_experts % model_axis == 0)
+
+    # tiny expert FFNs (granite: d_ff=512) must NOT be ff-TP-sharded: each
+    # device would hold 32 columns and all-reduce the full (E,C,D) buffer
+    # per layer (§Perf iter 3). Replicate the weights (they're small) and
+    # let the slot dim carry the parallelism.
+    small_moe = (cfg is not None and cfg.n_experts > 0
+                 and cfg.n_experts * cfg.d_ff * cfg.d_model * 2 * 3
+                 <= 512 * 1024 * 1024)
+
+    def spec_for(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        stacked = any(n in ("blocks", "enc_blocks") for n in names)
+        rank = len(leaf.shape) - (1 if stacked else 0)
+        rules = dict(_RULES)
+        if use_ep:
+            rules.update(_MOE_EP_RULES)
+        if small_moe and rank == 3 and name in ("w_gate", "w_up",
+                                                "w_down"):
+            rules[(name, 3)] = [(None, "data", None), (None, None, None)]
+        cands = rules.get((name, rank), [(None,) * rank])
+        if not fsdp:
+            cands = [tuple(None if c == "data" else c for c in cand)
+                     for cand in cands]
+        return pick_spec(mesh, leaf.shape, cands, stacked=stacked)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params_shape)
+
+
+# --------------------------------------------------------------------- #
+# batch / cache
+# --------------------------------------------------------------------- #
+def _data_if_divisible(mesh: Mesh, B: int) -> Axis:
+    ax = _expand(mesh, "data")
+    return "data" if B % _axis_size(mesh, ax) == 0 else None
+
+
+def batch_specs(cfg: ModelConfig, kind: str, mesh: Mesh,
+                batch_size: Optional[int] = None) -> Dict[str, P]:
+    """Input sharding: batch on ('pod','data') when divisible."""
+    d = "data" if batch_size is None else _data_if_divisible(mesh,
+                                                             batch_size)
+    def s(*axes):
+        return _to_spec(mesh, axes)
+    if kind == "train":
+        spec = {"tokens": s(d, None), "labels": s(d, None)}
+    elif kind == "prefill":
+        spec = {"tokens": s(d, None)}
+    else:
+        spec = {"tokens": s(d)}
+    if cfg.family == "encdec":
+        spec["frames"] = s(d, None, None)
+    if cfg.family == "vlm" and kind != "decode":
+        spec["positions"] = s(None, d, None)
+    return spec
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh,
+                batch_size: Optional[int] = None,
+                seq_len: Optional[int] = None,
+                kind: str = "prefill") -> Any:
+    """KV cache / SSM state sharding: batch on data; heads on model when
+    the Q-head count divides the axis (TP attention). Otherwise:
+      * prefill — cache SEQUENCE dim on model (context-parallel attention,
+        §Perf iter 1: S×S score traffic stays sharded);
+      * decode — head_dim on model (single-token queries make seq-sharded
+        softmax combine collectives dominate; disaggregated prefill/decode
+        fleets each get their best layout, §Perf decode note)."""
+    d = "data" if batch_size is None else _data_if_divisible(mesh,
+                                                             batch_size)
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    m = mesh.shape.get("model", 1)
+    if Hq % m == 0 and Hkv % m == 0:
+        s_ax, h_ax, dh_ax = None, "model", None
+    elif (kind == "prefill" and seq_len is not None
+          and seq_len % m == 0):
+        s_ax, h_ax, dh_ax = "model", None, None
+    elif Dh % m == 0:
+        s_ax, h_ax, dh_ax = None, None, "model"
+    else:
+        s_ax = h_ax = dh_ax = None
+
+    def attn_spec():
+        kv = _to_spec(mesh, (None, d, s_ax, h_ax, dh_ax))
+        spec = {"k": kv, "v": kv, "len": P(None)}
+        if cfg.family == "encdec":
+            spec["cross_k"] = _to_spec(mesh, (None, d, None, h_ax, dh_ax))
+            spec["cross_v"] = _to_spec(mesh, (None, d, None, h_ax, dh_ax))
+        return spec
+
+    def mamba_spec(extra_lead=0):
+        H = cfg.ssm_heads
+        conv_c = cfg.d_inner + 2 * cfg.ssm_state
+        h_ok = "model" if H % m == 0 else None
+        c_ok = "model" if conv_c % m == 0 else None
+        lead = (None,) * extra_lead
+        return {"conv": _to_spec(mesh, lead + (None, d, None, c_ok)),
+                "ssm": _to_spec(mesh, lead + (None, d, h_ok, None, None))}
+
+    if cfg.family in ("dense", "vlm", "moe", "encdec"):
+        return attn_spec()  # encdec adds cross-KV entries above
+    if cfg.family == "ssm":
+        return mamba_spec()
+    if cfg.family == "hybrid":
+        return {"mamba": mamba_spec(extra_lead=1), "attn": attn_spec()}
+    raise ValueError(cfg.family)
+
+
+def to_named(tree_of_specs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_of_specs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def resolve_axis(mesh: Mesh, name):
+    """Kept for dryrun: logical->physical single-axis resolve."""
+    flat = _expand(mesh, name)
+    if flat is None:
+        return None
+    return flat[0] if len(flat) == 1 else tuple(flat)

@@ -1,0 +1,111 @@
+"""Jitted train / prefill / decode step builders with full shardings.
+
+These are the functions the dry-run lowers and the real launcher runs.
+TrainState is a NamedTuple so optimizer moments shard exactly like their
+parameters (ZeRO-3 via shared PartitionSpecs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.lm import model as lm
+from ..models.lm.config import ModelConfig
+from ..optim import adamw, apply_updates, clip_by_global_norm
+from ..optim.optimizers import AdamState
+from ..pjit_utils import ambient_mesh
+from . import shardings as shard_rules
+
+
+class TrainState(NamedTuple):
+    params: Any
+    mu: Any
+    nu: Any
+    step: jnp.ndarray
+
+
+def make_train_step(cfg: ModelConfig, lr: float = 3e-4,
+                    weight_decay: float = 0.1, clip: float = 1.0,
+                    microbatch: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    _, opt_update = adamw(lr, weight_decay=weight_decay)
+
+    def loss_of(params, batch):
+        return lm.loss_fn(params, cfg, batch)
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        if microbatch > 1:
+            def split(x):
+                b = x.shape[0] if x.ndim < 3 or x.shape[0] != 3 else None
+                # vlm positions are (3, B, S): split on axis 1
+                if x.ndim == 3 and x.shape[0] == 3:
+                    return x.reshape(3, microbatch, -1, x.shape[-1]
+                                     ).transpose(1, 0, 2, 3)
+                return x.reshape(microbatch, -1, *x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+
+            def acc_body(carry, mbi):
+                gsum, lsum = carry
+                l, g = jax.value_and_grad(loss_of)(state.params, mbi)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            g0 = jax.tree.map(jnp.zeros_like, state.params)
+            (grads, ltot), _ = jax.lax.scan(acc_body,
+                                            (g0, jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss = ltot / microbatch
+        else:
+            loss, grads = jax.value_and_grad(loss_of)(state.params, batch)
+
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        ups, new_opt = opt_update(grads, AdamState(state.mu, state.nu),
+                                  state.params, state.step)
+        params = apply_updates(state.params, ups)
+        new_state = TrainState(params, new_opt.mu, new_opt.nu,
+                               state.step + 1)
+        return new_state, {"loss": loss, "grad_norm": gnorm}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, tokens, cache, extras):
+        return lm.prefill(params, cfg, tokens, cache,
+                          positions=extras.get("positions"),
+                          memory=extras.get("memory"))
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, token, cache, pos, extras):
+        return lm.decode_step(params, cfg, token, cache, pos,
+                              memory=extras.get("memory"))
+    return decode_step
+
+
+# --------------------------------------------------------------------- #
+# sharding trees for the step signatures
+# --------------------------------------------------------------------- #
+def state_specs(params_shape, cfg: ModelConfig, mesh: Mesh) -> TrainState:
+    ps = shard_rules.param_specs(params_shape, cfg, mesh)
+    return TrainState(params=ps, mu=ps, nu=ps, step=P())
+
+
+def eval_param_shapes(cfg: ModelConfig, max_seq: int = 0):
+    return jax.eval_shape(
+        lambda k: lm.init_params(k, cfg, max_seq=max_seq),
+        jax.random.PRNGKey(0))
+
+
+def init_state(key, cfg: ModelConfig, max_seq: int = 0) -> TrainState:
+    params = lm.init_params(key, cfg, max_seq=max_seq)
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return TrainState(params=params,
+                      mu=jax.tree.map(zeros, params),
+                      nu=jax.tree.map(zeros, params),
+                      step=jnp.zeros((), jnp.int32))

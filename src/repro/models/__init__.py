@@ -1,0 +1,1 @@
+"""repro.models — GNN applications (paper §5.1) and the LM family stack."""

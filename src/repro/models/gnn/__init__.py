@@ -1,0 +1,17 @@
+"""The seven GNN applications the paper profiles (paper §5.1).
+
+Each model is a pair of pure functions ``init(key, ...) -> params`` and
+``forward(params, bundle, x, ...) -> logits`` taking an aggregation
+``strategy`` so the paper's baseline ('push') and optimized ('ell' /
+'pallas') paths are swappable per run — that switch IS the experiment.
+"""
+from .common import GraphBundle, make_bundle
+from . import gcn, sage, gat, rgcn, monet, gcmc, lgnn
+
+APPLICATIONS = {
+    "gcn": gcn, "graphsage": sage, "gat": gat, "rgcn": rgcn,
+    "monet": monet, "gcmc": gcmc, "lgnn": lgnn,
+}
+
+__all__ = ["GraphBundle", "make_bundle", "APPLICATIONS",
+           "gcn", "sage", "gat", "rgcn", "monet", "gcmc", "lgnn"]

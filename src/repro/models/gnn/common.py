@@ -1,0 +1,74 @@
+"""Shared GNN plumbing: graph bundles with precomputed packs."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.graph import Graph
+from ...core.tiling import ELLPack, TilePack, build_ell, build_tiles
+from ...core.training_ops import TrainingGraph, make_training_graph
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class GraphBundle:
+    """Graph + blocked packs + precomputed normalization weights.
+
+    ``tg`` carries the reverse-graph packs so weighted Copy-Reduce runs
+    blocked-pull in the BACKWARD pass too (core/training_ops.py).
+    ``mean_norm``: per-edge 1/deg_in(dst) — mean aggregation as weighted CR.
+    """
+    g: Graph
+    ell: Optional[ELLPack]
+    tiles: Optional[TilePack]
+    gcn_norm: Optional[jnp.ndarray]  # (n_edges,) 1/sqrt(d_u d_v), caller order
+    tg: Optional[TrainingGraph]
+    mean_norm: Optional[jnp.ndarray]  # (n_edges,) 1/deg_in(dst)
+
+    def tree_flatten(self):
+        return ((self.g, self.ell, self.tiles, self.gcn_norm, self.tg,
+                 self.mean_norm), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
+                ell_width: int = 64, training: bool = True) -> GraphBundle:
+    """Build packs once per graph (host-side preprocessing)."""
+    deg_in = np.asarray(g.in_degrees, np.float64)
+    deg_out = np.asarray(g.out_degrees, np.float64)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    w = 1.0 / np.sqrt(np.maximum(deg_out[src], 1)
+                      * np.maximum(deg_in[dst], 1))
+    mean_w = 1.0 / np.maximum(deg_in[dst], 1)
+    # canonical order -> caller order
+    w_caller = np.zeros_like(w)
+    w_caller[np.asarray(g.eid)] = w
+    m_caller = np.zeros_like(mean_w)
+    m_caller[np.asarray(g.eid)] = mean_w
+    tg = make_training_graph(g, ell_width) if training else None
+    return GraphBundle(
+        g=g,
+        ell=(tg.ell if tg is not None else
+             (build_ell(g, ell_width) if ell else None)),
+        tiles=build_tiles(g) if tiles else None,
+        gcn_norm=jnp.asarray(w_caller, jnp.float32),
+        tg=tg,
+        mean_norm=jnp.asarray(m_caller, jnp.float32),
+    )
+
+
+def strategy_kwargs(bundle: GraphBundle, strategy: str) -> dict:
+    kw = {"strategy": strategy}
+    if strategy == "ell":
+        kw["ell"] = bundle.ell
+    elif strategy in ("onehot", "pallas"):
+        kw["tiles"] = bundle.tiles
+    return kw

@@ -1,0 +1,77 @@
+"""GAT — the paper's heaviest BR user (Table 2, row 8):
+
+    e_copy_add_v, e_copy_max_v, u_add_v_copy_e, e_sub_v_copy_e,
+    e_div_v_copy_e, u_mul_e_add_v, v_mul_e_copy_e
+
+Attention logits per edge via ``u_add_v_copy_e``; normalization via
+edge-softmax (composed from the max/sub/div chain, or the fused kernel);
+aggregation via ``u_mul_e_add_v`` with per-head scalars.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ...core.binary_reduce import gspmm
+from ...core.edge_softmax import edge_softmax, edge_softmax_fused
+from ...substrate.nn import glorot, dropout, leaky_relu
+from .common import GraphBundle, strategy_kwargs
+
+
+def init(key, d_in: int, d_hidden: int, n_classes: int, n_heads: int = 4,
+         n_layers: int = 2) -> Dict:
+    layers = []
+    d = d_in
+    for i in range(n_layers):
+        out = n_classes if i == n_layers - 1 else d_hidden
+        heads = 1 if i == n_layers - 1 else n_heads
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        layers.append({
+            "w": glorot(k1, (d, heads * out)),
+            "attn_l": glorot(k2, (heads, out)),
+            "attn_r": glorot(k3, (heads, out)),
+        })
+        d = heads * out
+    return {"layers": layers}
+
+
+def _gat_layer(lyr, bundle: GraphBundle, h, heads: int, out: int, *,
+               strategy: str, fused_softmax: bool):
+    g = bundle.g
+    kw = strategy_kwargs(bundle, strategy)
+    z = (h @ lyr["w"]).reshape(-1, heads, out)           # (n, H, F)
+    el = jnp.sum(z * lyr["attn_l"], axis=-1)             # (n, H)
+    er = jnp.sum(z * lyr["attn_r"], axis=-1)
+    # u_add_v_copy_e: per-edge logits (the paper's config)
+    logits = gspmm(g, "u_add_v_copy_e", u=el, v=er, strategy="segment")
+    logits = leaky_relu(logits)
+    if fused_softmax:
+        alpha = edge_softmax_fused(g, logits)            # (nnz, H)
+    else:
+        alpha = edge_softmax(g, logits, strategy="segment")
+    # u_mul_e_add_v with per-head scalar α: 3-D broadcast on segment/ell
+    agg_strategy = strategy if strategy in ("segment", "ell", "push") \
+        else "segment"
+    kw3 = strategy_kwargs(bundle, agg_strategy)
+    out_feat = gspmm(g, "u_mul_e_add_v", u=z, e=alpha[:, :, None], **kw3)
+    return out_feat.reshape(-1, heads * out)
+
+
+def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
+            strategy: str = "segment", train: bool = False, rng=None,
+            drop: float = 0.4, fused_softmax: bool = False) -> jnp.ndarray:
+    h = x
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        hd = lyr["attn_l"].shape[0]     # heads encoded in param shapes
+        out = lyr["attn_l"].shape[-1]
+        if train and rng is not None:
+            rng, sub = jax.random.split(rng)
+            h = dropout(sub, h, drop, train)
+        h = _gat_layer(lyr, bundle, h, hd, out, strategy=strategy,
+                       fused_softmax=fused_softmax)
+        if i < n_layers - 1:
+            h = jax.nn.elu(h)
+    return h

@@ -1,0 +1,50 @@
+"""GCN (Kipf & Welling) — aggregation config: u_copy_add_v (paper Table 2).
+
+H^{l+1} = σ( D^{-1/2} (A+I) D^{-1/2} H^l W^l )
+
+The symmetric normalization is folded into per-edge scalar weights
+(`bundle.gcn_norm`), so the hot op is ``u_mul_e_add_v`` with a scalar edge
+operand — which every strategy (including the weighted Pallas SpMM)
+supports.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from ...core.binary_reduce import gspmm
+from ...core.training_ops import weighted_copy_reduce
+from ...substrate.nn import linear_init, linear_apply, dropout
+from .common import GraphBundle, strategy_kwargs
+
+
+def init(key, d_in: int, d_hidden: int, n_classes: int,
+         n_layers: int = 2) -> Dict:
+    dims = [d_in] + [d_hidden] * (n_layers - 1) + [n_classes]
+    keys = jax.random.split(key, n_layers)
+    return {"layers": [linear_init(k, dims[i], dims[i + 1])
+                       for i, k in enumerate(keys)]}
+
+
+def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
+            strategy: str = "segment", train: bool = False,
+            rng=None, drop: float = 0.5) -> jnp.ndarray:
+    kw = strategy_kwargs(bundle, strategy)
+    h = x
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        if train and rng is not None:
+            rng, sub = jax.random.split(rng)
+            h = dropout(sub, h, drop, train)
+        h = linear_apply(lyr, h)
+        if strategy == "ell" and bundle.tg is not None:
+            # blocked pull in fwd AND bwd (custom VJP over the reverse pack)
+            h = weighted_copy_reduce(bundle.tg, h, bundle.gcn_norm[:, None])
+        else:
+            h = gspmm(bundle.g, "u_mul_e_add_v", u=h,
+                      e=bundle.gcn_norm[:, None], **kw)
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h

@@ -1,0 +1,102 @@
+"""LGNN (line graph neural network, community detection on SBM).
+
+The application that exercises the paper's §4 framework primitives:
+BatchNorm1d after every conv and an Embedding table for initial node
+representations — plus TWO aggregation streams (node graph G and its line
+graph L), which is why the paper calls it "particularly suitable".
+
+Layer (simplified but structurally faithful to Chen et al.):
+  x' = BN(ρ( x θ1 + (deg·x) θ2 + CR_G(x) θ3 + (P y) θ4 ))
+  y' = BN(ρ( y φ1 + (deg_L·y) φ2 + CR_L(y) φ3 ))
+where P maps line-graph (edge) features back to nodes: e_copy_add_v.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ...core.binary_reduce import gspmm
+from ...core.graph import Graph, from_coo
+from ...substrate.batchnorm import batchnorm1d_init, batchnorm1d_apply
+from ...substrate.embedding import embedding_init, embedding_lookup
+from ...substrate.nn import glorot
+from .common import GraphBundle
+
+
+def build_line_graph(g: Graph, max_out: int = 10_000_000) -> Graph:
+    """Line graph: edges of G are nodes of L; e1→e2 iff dst(e1)=src(e2)."""
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    eid = np.asarray(g.eid)
+    n = g.n_edges
+    # group edges by source node
+    order = np.argsort(src, kind="stable")
+    by_src = {}
+    for pos in order:
+        by_src.setdefault(int(src[pos]), []).append(int(eid[pos]))
+    ls, ld = [], []
+    for pos in range(n):
+        e1 = int(eid[pos])
+        for e2 in by_src.get(int(dst[pos]), ()):
+            if e2 != e1:
+                ls.append(e1)
+                ld.append(e2)
+                if len(ls) >= max_out:
+                    raise ValueError("line graph too large")
+    return from_coo(np.asarray(ls, np.int64), np.asarray(ld, np.int64),
+                    n_src=n, n_dst=n)
+
+
+def init(key, n_nodes: int, d_emb: int, d_hidden: int, n_classes: int,
+         n_layers: int = 3) -> Dict:
+    key, ke = jax.random.split(key)
+    layers = []
+    dx, dy = d_emb + 1, 1          # node emb + degree; line-graph starts with degree
+    for i in range(n_layers):
+        out = n_classes if i == n_layers - 1 else d_hidden
+        key, *ks = jax.random.split(key, 8)
+        layers.append({
+            "t1": glorot(ks[0], (dx, out)),
+            "t2": glorot(ks[1], (dx, out)),
+            "t3": glorot(ks[2], (dx, out)),
+            "t4": glorot(ks[3], (dy, out)),
+            "p1": glorot(ks[4], (dy, out)),
+            "p2": glorot(ks[5], (dy, out)),
+            "p3": glorot(ks[6], (dy, out)),
+            "bn_x": batchnorm1d_init(out),
+            "bn_y": batchnorm1d_init(out),
+        })
+        dx, dy = out, out
+    return {"embed": embedding_init(ke, n_nodes, d_emb), "layers": layers}
+
+
+def forward(params: Dict, g: Graph, lg: Graph, *,
+            strategy: str = "segment", train: bool = True
+            ) -> Tuple[jnp.ndarray, Dict]:
+    """Returns (node logits, params-with-updated-BN-stats)."""
+    n = g.n_dst
+    deg = g.in_degrees.astype(jnp.float32)[:, None]
+    deg_l = lg.in_degrees.astype(jnp.float32)[:, None]
+    ids = jnp.arange(n)
+    x = jnp.concatenate([embedding_lookup(params["embed"], ids), deg],
+                        axis=-1)
+    y = deg_l / jnp.maximum(deg_l.max(), 1.0)
+    new_layers = []
+    for i, lyr in enumerate(params["layers"]):
+        agg_x = gspmm(g, "u_copy_add_v", u=x, strategy=strategy)
+        ey = gspmm(g, "e_copy_add_v", e=y, strategy=strategy)  # P·y
+        xn = (x @ lyr["t1"] + (deg * x) @ lyr["t2"] + agg_x @ lyr["t3"]
+              + ey @ lyr["t4"])
+        agg_y = gspmm(lg, "u_copy_add_v", u=y, strategy=strategy)
+        yn = (y @ lyr["p1"] + (deg_l * y) @ lyr["p2"] + agg_y @ lyr["p3"])
+        xn = jax.nn.relu(xn)
+        yn = jax.nn.relu(yn)
+        xn, bn_x = batchnorm1d_apply(lyr["bn_x"], xn, train=train)
+        yn, bn_y = batchnorm1d_apply(lyr["bn_y"], yn, train=train)
+        new_layers.append({**lyr, "bn_x": bn_x, "bn_y": bn_y})
+        x, y = xn, yn
+    new_params = {"embed": params["embed"], "layers": new_layers}
+    return x, new_params

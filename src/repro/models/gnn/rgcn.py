@@ -1,0 +1,52 @@
+"""R-GCN (relational GCN) — config: u_copy_add_v per relation (Table 2).
+
+h'_v = σ( W_0 h_v + Σ_r Σ_{u∈N_r(v)} (1/c_{v,r}) W_r h_u )
+
+Basis decomposition keeps the parameter count bounded for many relations
+(BGS has 103). Each relation owns a Graph; aggregation is one CR per
+relation (mean-normalized).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from ...core.binary_reduce import gspmm
+from ...core.graph import Graph
+from ...substrate.nn import glorot
+from .common import GraphBundle
+
+
+def init(key, d_in: int, d_hidden: int, n_classes: int, n_rel: int,
+         n_bases: int = 4, n_layers: int = 2) -> Dict:
+    layers = []
+    d = d_in
+    for i in range(n_layers):
+        out = n_classes if i == n_layers - 1 else d_hidden
+        key, k1, k2, k3 = jax.random.split(key, 4)
+        layers.append({
+            "basis": glorot(k1, (n_bases, d, out)),
+            "coeff": jax.random.normal(k2, (n_rel, n_bases)) * 0.3,
+            "self": glorot(k3, (d, out)),
+        })
+        d = out
+    return {"layers": layers}
+
+
+def forward(params: Dict, rel_graphs: Sequence[Graph], x: jnp.ndarray, *,
+            strategy: str = "segment", train: bool = False,
+            rng=None) -> jnp.ndarray:
+    h = x
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        w_rel = jnp.einsum("rb,bio->rio", lyr["coeff"], lyr["basis"])
+        acc = h @ lyr["self"]
+        for r, g in enumerate(rel_graphs):
+            hr = h @ w_rel[r]
+            acc = acc + gspmm(g, "u_copy_mean_v", u=hr, strategy=strategy)
+        h = acc
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h

@@ -1,0 +1,67 @@
+"""GraphSAGE (mean aggregator) — config: u_copy_add_v (paper Table 2).
+
+Full-graph and sampled (paper Fig. 3) variants. h'_v =
+σ(W·[h_v ; mean_{u∈N(v)} h_u]).
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from ...core.binary_reduce import gspmm
+from ...core.training_ops import weighted_copy_reduce
+from ...substrate.nn import linear_init, linear_apply, dropout
+from .common import GraphBundle, strategy_kwargs
+
+
+def init(key, d_in: int, d_hidden: int, n_classes: int,
+         n_layers: int = 2) -> Dict:
+    dims = [d_in] + [d_hidden] * (n_layers - 1) + [n_classes]
+    keys = jax.random.split(key, n_layers)
+    return {"layers": [linear_init(k, 2 * dims[i], dims[i + 1])
+                       for i, k in enumerate(keys)]}
+
+
+def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
+            strategy: str = "segment", train: bool = False, rng=None,
+            drop: float = 0.5) -> jnp.ndarray:
+    kw = strategy_kwargs(bundle, strategy)
+    h = x
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        if train and rng is not None:
+            rng, sub = jax.random.split(rng)
+            h = dropout(sub, h, drop, train)
+        if strategy == "ell" and bundle.tg is not None:
+            # mean = weighted CR with 1/deg(dst); blocked pull both ways
+            hn = weighted_copy_reduce(bundle.tg, h,
+                                      bundle.mean_norm[:, None])
+        else:
+            hn = gspmm(bundle.g, "u_copy_mean_v", u=h, **kw)
+        h = linear_apply(lyr, jnp.concatenate([h, hn], axis=-1))
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def forward_sampled(params: Dict, blocks, feats_fn, *,
+                    strategy: str = "segment", batch_size: int
+                    ) -> jnp.ndarray:
+    """Sampled mini-batch forward (paper Fig. 3).
+
+    ``blocks``: list of SampledBlock (outermost hop first), block graphs
+    have a trailing dummy destination row (see data.sampler). ``feats_fn``
+    maps padded global ids (-1 = pad) to zero-padded features.
+    """
+    h = feats_fn(blocks[0].src_ids)
+    for i, (blk, lyr) in enumerate(zip(blocks, params["layers"])):
+        g = blk.graph
+        hn = gspmm(g, "u_copy_mean_v", u=h, strategy=strategy)
+        h_self = h[: g.n_dst - 1]            # drop dummy row sources
+        h = linear_apply(lyr, jnp.concatenate(
+            [h_self, hn[: g.n_dst - 1]], axis=-1))
+        if i < len(params["layers"]) - 1:
+            h = jax.nn.relu(h)
+    return h[:batch_size]

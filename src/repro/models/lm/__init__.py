@@ -1,0 +1,9 @@
+"""repro.models.lm — the assigned LM-family architecture stack."""
+from .config import ModelConfig
+from . import layers, model, moe, mamba2
+from .model import (init_params, loss_fn, prefill, decode_step, init_cache,
+                    backbone, encode)
+
+__all__ = ["ModelConfig", "layers", "model", "moe", "mamba2",
+           "init_params", "loss_fn", "prefill", "decode_step", "init_cache",
+           "backbone", "encode"]

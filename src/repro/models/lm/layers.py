@@ -1,0 +1,304 @@
+"""Transformer building blocks: norms, RoPE/M-RoPE, GQA attention, MLP.
+
+Attention is blockwise (flash-style online softmax via ``lax.scan`` over
+KV chunks) so 32k-prefill activations never materialize an S×S score
+matrix; sliding-window attention masks within the same machinery.
+All einsums keep explicit head axes so TP sharding (heads on 'model')
+propagates cleanly through XLA SPMD.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...pjit_utils import current_mesh, shard_hint
+from .config import ModelConfig
+
+
+def _attn_parallel_mode(cfg: ModelConfig, seq_len: int) -> Optional[str]:
+    """Pick the attention sharding strategy for the ambient mesh.
+
+    'heads'   — Megatron TP when n_heads divides the model axis;
+    'context' — sequence(context)-parallel otherwise: q is sharded on S
+                over 'model' and only the (small, GQA) K/V are gathered.
+                Removes the Dh-fallback resharding storm for head counts
+                like 28/40/24/12 on a 16-way axis (§Perf iteration 1).
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    m = mesh.shape.get("model", 1)
+    if m <= 1:
+        return None
+    if cfg.n_heads % m == 0:
+        return "heads"
+    if seq_len >= m:
+        return "context"
+    return None
+
+# --------------------------------------------------------------------- #
+# norms
+# --------------------------------------------------------------------- #
+def norm_init(d: int, kind: str) -> Dict:
+    if kind == "rmsnorm":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def norm_apply(p: Dict, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if "bias" in p:   # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:             # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# RoPE (+ M-RoPE)
+# --------------------------------------------------------------------- #
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                sections: Tuple[int, ...] = ()) -> jnp.ndarray:
+    """(B, S, head_dim/2) rotation angles.
+
+    ``positions``: (B, S) for standard RoPE, or (3, B, S) for M-RoPE where
+    the three rows are (t, h, w) coordinates and ``sections`` splits the
+    head_dim/2 frequency slots among them (qwen2-vl).
+    """
+    freqs = rope_freqs(head_dim, theta)           # (hd/2,)
+    if positions.ndim == 2:
+        return positions[..., None].astype(jnp.float32) * freqs
+    assert sections and sum(sections) == head_dim // 2, \
+        "M-RoPE sections must sum to head_dim/2"
+    parts = []
+    off = 0
+    for row, sec in enumerate(sections):
+        f = freqs[off:off + sec]
+        parts.append(positions[row][..., None].astype(jnp.float32) * f)
+        off += sec
+    return jnp.concatenate(parts, axis=-1)        # (B, S, hd/2)
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: (B, S, H, Dh), angles: (B, S, Dh/2). Rotates pairs (even, odd)."""
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1 = x[..., 0::2]
+    x2 = x[..., 1::2]
+    y1 = x1 * cos - x2 * sin
+    y2 = x1 * sin + x2 * cos
+    out = jnp.stack([y1, y2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------- #
+# attention
+# --------------------------------------------------------------------- #
+def attention_init(key, cfg: ModelConfig, dtype) -> Dict:
+    D, Dh = cfg.d_model, cfg.head_dim
+    Hq, Hkv = cfg.n_heads, cfg.n_kv_heads
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = D ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (D, Hq, Dh)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (D, Hkv, Dh)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (D, Hkv, Dh)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (Hq, Dh, D)) * s).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((Hq, Dh), dtype)
+        p["bk"] = jnp.zeros((Hkv, Dh), dtype)
+        p["bv"] = jnp.zeros((Hkv, Dh), dtype)
+    return p
+
+
+def _repeat_kv(x: jnp.ndarray, groups: int) -> jnp.ndarray:
+    """(B, S, Hkv, Dh) -> (B, S, Hkv*groups, Dh) by head replication."""
+    if groups == 1:
+        return x
+    b, s, h, d = x.shape
+    return jnp.broadcast_to(x[:, :, :, None, :], (b, s, h, groups, d)
+                            ).reshape(b, s, h * groups, d)
+
+
+def blockwise_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        *, causal: bool, window: int = 0,
+                        q_offset: int = 0, kv_len: Optional[jnp.ndarray] = None,
+                        block: int = 512) -> jnp.ndarray:
+    """Online-softmax attention, scanning KV in chunks.
+
+    q: (B, Sq, H, Dh); k/v: (B, Skv, H, Dh) (kv heads already repeated).
+    ``q_offset``: absolute position of q[0] (prefill continuation/decode).
+    ``kv_len``: optional dynamic valid-length of the KV (cache decoding).
+    ``window``: sliding-window size (0 = unlimited).
+    """
+    B, Sq, H, Dh = q.shape
+    Skv = k.shape[1]
+    scale = Dh ** -0.5
+    nblk = -(-Skv // block)
+    pad = nblk * block - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(B, nblk, block, H, Dh).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(B, nblk, block, H, Dh).transpose(1, 0, 2, 3, 4)
+
+    q32 = q.astype(jnp.float32) * scale
+    qpos = q_offset + jnp.arange(Sq)
+
+    def body(carry, xs):
+        acc, m, denom = carry
+        kblk, vblk, blk_i = xs
+        kpos = blk_i * block + jnp.arange(block)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q32, kblk.astype(jnp.float32))
+        mask = jnp.ones((Sq, block), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        if kv_len is not None:
+            mask &= kpos[None, :] < kv_len
+        if pad:
+            mask &= kpos[None, :] < Skv
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p, vblk.astype(jnp.float32))
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((B, H, Sq, Dh), jnp.float32)
+    m0 = jnp.full((B, H, Sq), -1e30, jnp.float32)
+    d0 = jnp.zeros((B, H, Sq), jnp.float32)
+    # flash-style backward: recompute per-block scores/masks instead of
+    # saving them as scan residuals (otherwise bwd holds S×S worth of
+    # probabilities + masks)
+    body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (acc, m, denom), _ = jax.lax.scan(
+        body, (acc0, m0, d0), (kb, vb, jnp.arange(nblk)))
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)    # (B, Sq, H, Dh)
+
+
+def attention_kv(p: Dict, cfg: ModelConfig, src: jnp.ndarray):
+    """K/V projection only (used to precompute cross-attention KV once
+    at prefill instead of re-projecting the encoder memory every decode
+    step — §Perf whisper note)."""
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return k, v
+
+
+def attention_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray,
+                    angles: Optional[jnp.ndarray], *,
+                    causal: bool = True,
+                    memory: Optional[jnp.ndarray] = None,
+                    kv_override=None,
+                    cache: Optional[Dict] = None,
+                    q_offset: int = 0,
+                    block: int = 512
+                    ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """Self- or cross-attention with optional KV cache.
+
+    ``memory``: encoder output for cross-attention (keys/values from it).
+    ``kv_override``: precomputed (k, v) — skips the K/V projections.
+    ``cache``: {"k","v": (B, Smax, Hkv, Dh), "len": ()} — updated
+    functionally and returned.
+    """
+    Hq, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    groups = Hq // Hkv
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    if kv_override is not None:
+        k, v = kv_override
+    else:
+        src = memory if memory is not None else x
+        k, v = attention_kv(p, cfg, src)
+
+    mode = _attn_parallel_mode(cfg, q.shape[1])
+    if mode == "heads":
+        q = shard_hint(q, "data", None, "model", None)
+        # GQA K/V heads rarely divide the axis — replicate them instead
+        # of letting the partitioner reshard per block
+        k = shard_hint(k, "data", None, None, None)
+        v = shard_hint(v, "data", None, None, None)
+    elif mode == "context":
+        # context parallel: q sharded on sequence, K/V gathered (small)
+        q = shard_hint(q, "data", "model", None, None)
+        k = shard_hint(k, "data", None, None, None)
+        v = shard_hint(v, "data", None, None, None)
+    if angles is not None and memory is None:
+        q = apply_rope(q, angles)
+        k_angles = angles
+        if cache is not None and angles.shape[1] == q.shape[1]:
+            k_angles = angles
+        k = apply_rope(k, k_angles)
+
+    new_cache = None
+    kv_len = None
+    if cache is not None:
+        idx = cache["len"]
+        ck = jax.lax.dynamic_update_slice(cache["k"],
+                                          k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"],
+                                          v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "len": idx + k.shape[1]}
+        k, v = ck, cv
+        kv_len = new_cache["len"]
+
+    k = _repeat_kv(k, groups)
+    v = _repeat_kv(v, groups)
+    out = blockwise_attention(q, k, v, causal=causal,
+                              window=cfg.sliding_window,
+                              q_offset=q_offset, kv_len=kv_len,
+                              block=block)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, new_cache
+
+
+# --------------------------------------------------------------------- #
+# MLP
+# --------------------------------------------------------------------- #
+def mlp_init(key, d: int, ff: int, act: str, dtype) -> Dict:
+    ks = jax.random.split(key, 3)
+    s_in, s_out = d ** -0.5, ff ** -0.5
+    if act == "swiglu":
+        return {"w_gate": (jax.random.normal(ks[0], (d, ff)) * s_in
+                           ).astype(dtype),
+                "w_up": (jax.random.normal(ks[1], (d, ff)) * s_in
+                         ).astype(dtype),
+                "w_down": (jax.random.normal(ks[2], (ff, d)) * s_out
+                           ).astype(dtype)}
+    return {"w_up": (jax.random.normal(ks[0], (d, ff)) * s_in).astype(dtype),
+            "b_up": jnp.zeros((ff,), dtype),
+            "w_down": (jax.random.normal(ks[1], (ff, d)) * s_out
+                       ).astype(dtype),
+            "b_down": jnp.zeros((d,), dtype)}
+
+
+def mlp_apply(p: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    if "w_gate" in p:
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]

@@ -1,0 +1,192 @@
+"""Mamba2 block — SSD (state-space duality), chunked matmul form.
+
+Follows Dao & Gu 2024 (arXiv:2405.21060): the selective SSM
+    h_t = exp(Δ_t a) h_{t-1} + Δ_t B_t x_tᵀ        (per head, state N)
+    y_t = C_tᵀ h_t + D x_t
+is computed chunk-parallel: within chunks of Q tokens everything is dense
+matmuls (MXU-friendly); across chunks a short ``lax.scan`` or
+``associative_scan`` carries the (H, P, N) state. Decode is the O(1)
+recurrence — this is why `long_500k` runs for the SSM/hybrid archs.
+
+Layout: x (B, S, d_inner) viewed as (B, S, H, P) with P = ssm_head_dim;
+B/C are shared across heads within a group (n_groups=1 here, like the
+reference implementation's default).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype) -> Dict:
+    D = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_heads
+    kproj, kconv, kA, kdt, kD, kout = jax.random.split(key, 6)
+    d_proj = 2 * di + 2 * N + H   # z, x, B, C, dt
+    s = D ** -0.5
+    return {
+        "in_proj": (jax.random.normal(kproj, (D, d_proj)) * s).astype(dtype),
+        "conv_w": (jax.random.normal(kconv, (cfg.ssm_conv, di + 2 * N))
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((di + 2 * N,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "skip_D": jnp.ones((H,), jnp.float32),
+        "out_proj": (jax.random.normal(kout, (di, D))
+                     * di ** -0.5).astype(dtype),
+    }
+
+
+def _split_proj(cfg: ModelConfig, zxbcdt: jnp.ndarray):
+    di, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    Bmat = zxbcdt[..., 2 * di:2 * di + N]
+    Cmat = zxbcdt[..., 2 * di + N:2 * di + 2 * N]
+    dt = zxbcdt[..., 2 * di + 2 * N:]
+    return z, x, Bmat, Cmat, dt
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray,
+                 state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv via explicit shifts (width K small).
+
+    x: (B, S, C); w: (K, C). Returns (y, new_state (B, K-1, C))."""
+    K = w.shape[0]
+    if state is not None:
+        x = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    pads = []
+    S_out = x.shape[1] - (K - 1) if state is not None else x.shape[1]
+    for k in range(K):
+        if state is not None:
+            xs = x[:, k:k + S_out]
+        else:
+            shift = K - 1 - k
+            xs = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        pads.append(xs * w[k])
+    y = sum(pads) + b
+    new_state = x[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                Bmat: jnp.ndarray, Cmat: jnp.ndarray, Q: int,
+                h0: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H) (post-softplus); A: (H,) negative;
+    Bmat/Cmat: (B, S, N). Returns (y (B,S,H,P), final state (B,H,P,N)).
+    """
+    Bsz, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    nc = -(-S // Q)
+    pad = nc * Q - S
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    Bc = Bmat.reshape(Bsz, nc, Q, N)
+    Cc = Cmat.reshape(Bsz, nc, Q, N)
+
+    dA = dtc * A                                   # (B, nc, Q, H) negative
+    cs = jnp.cumsum(dA, axis=2)                    # within-chunk cumsum
+    # intra-chunk: L[q,t] = exp(cs_q - cs_t) for q >= t. Mask the EXPONENT
+    # (not the value) so masked slots are exp(-inf)=0 with zero gradient —
+    # exp-then-mask produces inf·0 = NaN in the backward pass.
+    diff = cs[:, :, :, None, :] - cs[:, :, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    diff = jnp.where(tri[None, None, :, :, None], diff, -jnp.inf)
+    Lmat = jnp.exp(diff)
+    # scores[b,c,q,t,h] = C_q·B_t L[q,t] dt_t
+    CB = jnp.einsum("bcqn,bctn->bcqt", Cc.astype(jnp.float32),
+                    Bc.astype(jnp.float32))
+    M = CB[..., None] * Lmat * dtc[:, :, None, :, :]
+    y_intra = jnp.einsum("bcqth,bcthp->bcqhp", M, xc.astype(jnp.float32))
+
+    # chunk summaries: S_c = Σ_t exp(cs_end - cs_t) dt_t B_t x_tᵀ
+    decay_to_end = jnp.exp(cs[:, :, -1:, :] - cs)            # (B,nc,Q,H)
+    weighted_x = xc.astype(jnp.float32) * (dtc * decay_to_end)[..., None]
+    S_chunk = jnp.einsum("bctn,bcthp->bchpn", Bc.astype(jnp.float32),
+                         weighted_x)                          # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                    # (B,nc,H)
+
+    # inter-chunk state scan
+    def body(h, xs):
+        dec, s_c = xs                                        # (B,H), (B,H,P,N)
+        h_new = h * dec[:, :, None, None] + s_c
+        return h_new, h                                      # emit PREVIOUS
+
+    h_init = (h0.astype(jnp.float32) if h0 is not None
+              else jnp.zeros((Bsz, H, P, N), jnp.float32))
+    h_last, h_prevs = jax.lax.scan(
+        body, h_init,
+        (chunk_decay.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4)))
+    h_prevs = h_prevs.transpose(1, 0, 2, 3, 4)               # (B,nc,H,P,N)
+
+    # inter-chunk contribution: y_t += C_t exp(cs_t) h_prev
+    decay_from_start = jnp.exp(cs)                           # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bchpn->bcqhp", Cc.astype(jnp.float32),
+                         h_prevs) * decay_from_start[..., None]
+
+    y = (y_intra + y_inter).reshape(Bsz, nc * Q, H, P)[:, :S]
+    return y, h_last
+
+
+def mamba2_apply(p: Dict, cfg: ModelConfig, u: jnp.ndarray,
+                 state: Optional[Dict] = None
+                 ) -> Tuple[jnp.ndarray, Optional[Dict]]:
+    """u: (B, S, D). state (decode): {"conv": (B,K-1,di+2N), "ssm": (B,H,P,N)}."""
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = u @ p["in_proj"]
+    z, x, Bmat, Cmat, dt = _split_proj(cfg, zxbcdt)
+
+    conv_in = jnp.concatenate([x, Bmat, Cmat], axis=-1)
+    conv_state = state["conv"] if state is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, p["conv_w"], p["conv_b"],
+                                      conv_state)
+    x = conv_out[..., :di]
+    Bmat = conv_out[..., di:di + N]
+    Cmat = conv_out[..., di + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                     # (H,)
+    xh = x.reshape(*x.shape[:2], H, P)
+
+    if state is None:
+        y, h_last = ssd_chunked(xh, dt, A, Bmat, Cmat, cfg.ssm_chunk)
+        new_state = None
+    elif u.shape[1] > 1:
+        # prefill with carried state (chunked, h0 = previous state)
+        y, h_last = ssd_chunked(xh, dt, A, Bmat, Cmat, cfg.ssm_chunk,
+                                h0=state["ssm"])
+        new_state = {"conv": new_conv, "ssm": h_last}
+    else:
+        # O(1) decode recurrence (S == 1)
+        h = state["ssm"].astype(jnp.float32)                 # (B,H,P,N)
+        dA = jnp.exp(dt[:, 0, :] * A)                        # (B,H)
+        Bx = jnp.einsum("bn,bhp->bhpn", Bmat[:, 0].astype(jnp.float32),
+                        xh[:, 0].astype(jnp.float32) * dt[:, 0][..., None])
+        h = h * dA[:, :, None, None] + Bx
+        y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0].astype(jnp.float32),
+                       h)[:, None]
+        h_last = h
+        new_state = {"conv": new_conv, "ssm": h_last}
+
+    y = y + xh.astype(jnp.float32) * p["skip_D"][:, None]
+    y = y.reshape(*u.shape[:2], di).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    if state is None:
+        return out, None
+    return out, new_state

@@ -1,0 +1,430 @@
+"""TransformerLM — one composable model covering all 10 assigned archs.
+
+Families:
+  dense   — scan over uniform (attn + MLP) blocks (qwen2/llama/internlm2)
+  moe     — scan over (attn + MoE) blocks (mixtral / granite-moe)
+  ssm     — scan over Mamba2 blocks (mamba2-1.3b)
+  hybrid  — grouped Mamba2 scans + ONE weight-shared attention block
+            applied every `shared_attn_every` layers (zamba2)
+  encdec  — encoder scan + decoder scan with cross-attn (whisper; stub
+            frontend supplies precomputed frame embeddings)
+  vlm     — dense with M-RoPE 3-D positions and merged embeddings in
+            (qwen2-vl; stub frontend)
+
+Layer parameters are STACKED on a leading L axis and iterated with
+``jax.lax.scan`` (+``jax.checkpoint`` per block) so HLO stays compact for
+the 512-device dry-run and remat keeps activation memory at one block.
+KV caches / SSM states travel through the scan as per-layer xs/ys.
+
+Residual-stream activations carry sharding hints (batch on 'data',
+d_model on 'model' between blocks = Megatron-style sequence/tensor
+hybrid; XLA inserts the all-gather/reduce-scatter pairs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...pjit_utils import shard_hint
+from .config import ModelConfig
+from .layers import (norm_init, norm_apply, attention_init, attention_apply,
+                     attention_kv, mlp_init, mlp_apply, rope_angles)
+from .moe import moe_init, moe_apply
+from .mamba2 import mamba2_init, mamba2_apply
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _residual_hint(h):
+    """Residual-stream sharding between blocks.
+
+    Sequence-sharded over 'model' (Megatron-SP): the TP block outputs
+    reduce-scatter into sequence shards (bf16) instead of all-reducing the
+    full f32 residual, and norms run on 1/16th of the tokens
+    (§Perf qwen2_7b iter 2). Falls back to d_model sharding for
+    single-token (decode) calls."""
+    if h.shape[1] >= 16:
+        return shard_hint(h, "data", "model", None)
+    return shard_hint(h, "data", None, "model")
+
+
+# --------------------------------------------------------------------- #
+# init
+# --------------------------------------------------------------------- #
+def _block_init(key, cfg: ModelConfig, kind: str, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    if kind == "mamba":
+        return {"norm": norm_init(cfg.d_model, cfg.norm),
+                "mixer": mamba2_init(ks[0], cfg, dtype)}
+    p = {"norm1": norm_init(cfg.d_model, cfg.norm),
+         "attn": attention_init(ks[0], cfg, dtype),
+         "norm2": norm_init(cfg.d_model, cfg.norm)}
+    if kind == "moe":
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    if kind == "cross":   # decoder block with cross-attention
+        p["norm_x"] = norm_init(cfg.d_model, cfg.norm)
+        p["xattn"] = attention_init(ks[2], cfg, dtype)
+    return p
+
+
+def _stack_init(key, cfg: ModelConfig, kind: str, n: int, dtype) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _block_init(k, cfg, kind, dtype))(keys)
+
+
+def init_params(key, cfg: ModelConfig, *, max_seq: int = 0) -> Params:
+    """``max_seq`` sizes learned positional tables (encdec only)."""
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    D, V = cfg.d_model, cfg.vocab
+    p: Params = {
+        "embed": (jax.random.normal(keys[0], (V, D)) * 0.02).astype(dtype),
+        "final_norm": norm_init(D, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(keys[1], (V, D)) * 0.02
+                        ).astype(dtype)
+
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        p["blocks"] = _stack_init(keys[2], cfg, "dense", cfg.n_layers, dtype)
+    elif fam == "moe":
+        p["blocks"] = _stack_init(keys[2], cfg, "moe", cfg.n_layers, dtype)
+    elif fam == "ssm":
+        p["blocks"] = _stack_init(keys[2], cfg, "mamba", cfg.n_layers, dtype)
+    elif fam == "hybrid":
+        p["blocks"] = _stack_init(keys[2], cfg, "mamba", cfg.n_layers, dtype)
+        p["shared"] = _block_init(keys[3], cfg, "dense", dtype)
+    elif fam == "encdec":
+        p["enc_blocks"] = _stack_init(keys[2], cfg, "dense",
+                                      cfg.n_enc_layers, dtype)
+        p["blocks"] = _stack_init(keys[3], cfg, "cross", cfg.n_layers, dtype)
+        p["enc_pos"] = (jax.random.normal(keys[4], (cfg.enc_seq, D))
+                        * 0.02).astype(dtype)
+        p["dec_pos"] = (jax.random.normal(keys[5], (max(max_seq, 8), D))
+                        * 0.02).astype(dtype)
+        p["enc_final_norm"] = norm_init(D, cfg.norm)
+    else:
+        raise ValueError(fam)
+    return p
+
+
+# --------------------------------------------------------------------- #
+# blocks
+# --------------------------------------------------------------------- #
+def _attn_block(bp: Params, cfg: ModelConfig, h, angles, *, causal=True,
+                memory=None, cache=None, q_offset=0):
+    x = norm_apply(bp["norm1"], h)
+    y, new_cache = attention_apply(bp["attn"], cfg, x, angles,
+                                   causal=causal, cache=cache,
+                                   q_offset=q_offset)
+    h = h + y
+    new_xcache = None
+    if "xattn" in bp:
+        x = norm_apply(bp["norm_x"], h)
+        # cross-attention K/V: projected from the encoder memory once
+        # (prefill / train) and reused from the cache at decode
+        if memory is not None:
+            xk, xv = attention_kv(bp["xattn"], cfg, memory)
+        else:
+            xk, xv = cache["cross_k"], cache["cross_v"]
+        y, _ = attention_apply(bp["xattn"], cfg, x, None, causal=False,
+                               kv_override=(xk, xv))
+        h = h + y
+        if cache is not None:
+            new_xcache = {"cross_k": xk.astype(cache["cross_k"].dtype),
+                          "cross_v": xv.astype(cache["cross_v"].dtype)}
+    x = norm_apply(bp["norm2"], h)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in bp:
+        y, aux = moe_apply(bp["moe"], cfg, x)
+    else:
+        y = mlp_apply(bp["mlp"], x)
+    h = h + y
+    h = _residual_hint(h)
+    return h, aux, new_cache, new_xcache
+
+
+def _mamba_block(bp: Params, cfg: ModelConfig, h, state=None):
+    x = norm_apply(bp["norm"], h)
+    y, new_state = mamba2_apply(bp["mixer"], cfg, x, state)
+    h = h + y
+    h = _residual_hint(h)
+    return h, new_state
+
+
+# --------------------------------------------------------------------- #
+# stacks (scan over layers, remat per block)
+# --------------------------------------------------------------------- #
+def _scan_attn_stack(blocks: Params, cfg: ModelConfig, h, angles, *,
+                     causal=True, memory=None, caches=None, q_offset=0):
+    """Uniform attention stack. caches: stacked {"k","v","len"} or None."""
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(carry, xs):
+        h, aux = carry
+        bp, cache = xs
+        h, a, new_cache, new_x = _attn_block(bp, cfg, h, angles,
+                                             causal=causal, memory=memory,
+                                             cache=cache, q_offset=q_offset)
+        if new_x is not None and new_cache is not None:
+            new_cache = {**new_cache, **new_x}
+        return (h, aux + a), new_cache
+
+    (h, aux), new_caches = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                        (blocks, caches))
+    return h, aux, new_caches
+
+
+def _scan_mamba_stack(blocks: Params, cfg: ModelConfig, h, states=None):
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(h, xs):
+        bp, st = xs
+        h, new_st = _mamba_block(bp, cfg, h, st)
+        return h, new_st
+
+    h, new_states = jax.lax.scan(body, h, (blocks, states))
+    return h, new_states
+
+
+# --------------------------------------------------------------------- #
+# embedding / logits / loss
+# --------------------------------------------------------------------- #
+def embed_tokens(p: Params, cfg: ModelConfig, tokens) -> jnp.ndarray:
+    e = jnp.take(p["embed"], tokens, axis=0)
+    return _residual_hint(e)
+
+
+def _head_table(p: Params) -> jnp.ndarray:
+    return p["embed"] if "lm_head" not in p else p["lm_head"]
+
+
+def logits_fn(p: Params, cfg: ModelConfig, h) -> jnp.ndarray:
+    w = _head_table(p)
+    return jnp.einsum("bsd,vd->bsv", h, w).astype(jnp.float32)
+
+
+def chunked_ce_loss(p: Params, cfg: ModelConfig, h, labels,
+                    chunk: int = 512) -> jnp.ndarray:
+    """CE over vocab without materializing full (B,S,V) logits.
+
+    Scans the sequence in chunks; per chunk the (B,c,V) logits live only
+    transiently (vocab TP-sharded -> (B,c,V/16) per device).
+    """
+    B, S, D = h.shape
+    w = _head_table(p)
+    nchunk = -(-S // chunk)
+    pad = nchunk * chunk - S
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    hc = h.reshape(B, nchunk, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nchunk, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        hx, lx = xs
+        logits = jnp.einsum("bsd,vd->bsv", hx, w).astype(jnp.float32)
+        logits = shard_hint(logits, "data", None, "model")
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(lx, cfg.vocab, dtype=logits.dtype)
+        lab = jnp.sum(logits * onehot, axis=-1)
+        valid = (lx >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - lab) * valid)
+        cnt = cnt + jnp.sum(valid)
+        return (tot, cnt), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# --------------------------------------------------------------------- #
+# forward passes
+# --------------------------------------------------------------------- #
+def _positions_default(B, S, offset=0):
+    return jnp.broadcast_to(jnp.arange(S) + offset, (B, S))
+
+
+def backbone(p: Params, cfg: ModelConfig, h, positions, *,
+             caches=None, q_offset=0, memory=None):
+    """Shared trunk: embeddings -> blocks -> final norm.
+
+    positions: (B,S) or (3,B,S) for M-RoPE. caches: family-specific pytree
+    (see init_cache). Returns (h, aux_loss, new_caches).
+    """
+    fam = cfg.family
+    zero = jnp.zeros((), jnp.float32)
+    if fam in ("dense", "vlm", "moe"):
+        angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                             cfg.mrope_sections)
+        h, aux, new_caches = _scan_attn_stack(
+            p["blocks"], cfg, h, angles, causal=True, caches=caches,
+            q_offset=q_offset)
+        return norm_apply(p["final_norm"], h), aux, new_caches
+
+    if fam == "ssm":
+        h, new_states = _scan_mamba_stack(p["blocks"], cfg, h,
+                                          states=caches)
+        return norm_apply(p["final_norm"], h), zero, new_states
+
+    if fam == "hybrid":
+        angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta)
+        every = cfg.shared_attn_every
+        n_groups = cfg.n_layers // every
+        blocks = jax.tree.map(
+            lambda x: x.reshape(n_groups, every, *x.shape[1:]), p["blocks"])
+        m_states = caches["mamba"] if caches is not None else None
+        a_caches = caches["attn"] if caches is not None else None
+        new_m, new_a = [], []
+        for gi in range(n_groups):
+            blk_g = jax.tree.map(lambda x: x[gi], blocks)
+            st_g = (jax.tree.map(lambda x: x[gi], m_states)
+                    if m_states is not None else None)
+            h, ns = _scan_mamba_stack(blk_g, cfg, h, states=st_g)
+            new_m.append(ns)
+            ac = (jax.tree.map(lambda x: x[gi], a_caches)
+                  if a_caches is not None else None)
+            h, _, nc, _ = _attn_block(p["shared"], cfg, h, angles,
+                                      causal=True, cache=ac,
+                                      q_offset=q_offset)
+            new_a.append(nc)
+        new_caches = None
+        if caches is not None:
+            new_caches = {
+                "mamba": jax.tree.map(lambda *xs: jnp.stack(xs), *new_m),
+                "attn": jax.tree.map(lambda *xs: jnp.stack(xs), *new_a),
+            }
+        return norm_apply(p["final_norm"], h), zero, new_caches
+
+    if fam == "encdec":
+        angles = None   # learned positions added at embedding time
+        h, aux, new_caches = _scan_attn_stack(
+            p["blocks"], cfg, h, None, causal=True, caches=caches,
+            q_offset=q_offset, memory=memory)
+        return norm_apply(p["final_norm"], h), aux, new_caches
+
+    raise ValueError(fam)
+
+
+def encode(p: Params, cfg: ModelConfig, frames) -> jnp.ndarray:
+    """Whisper encoder over stub frame embeddings (B, enc_seq, D)."""
+    h = frames + p["enc_pos"][None, : frames.shape[1]]
+    h = shard_hint(h, "data", None, "model")
+    h, _, _ = _scan_attn_stack(p["enc_blocks"], cfg, h, None, causal=False)
+    return norm_apply(p["enc_final_norm"], h)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch: Dict) -> jnp.ndarray:
+    """Training loss. batch keys: tokens (B,S) int32, plus per family:
+    encdec: frames (B,enc_seq,D); vlm: positions (3,B,S)."""
+    tokens = batch["tokens"]
+    if "labels" in batch:
+        inputs, labels = tokens, batch["labels"]
+    else:
+        inputs, labels = tokens[:, :-1], tokens[:, 1:]
+    B, S = inputs.shape
+    h = embed_tokens(p, cfg, inputs)
+    memory = None
+    if cfg.family == "encdec":
+        memory = encode(p, cfg, batch["frames"].astype(h.dtype))
+        h = h + p["dec_pos"][None, : h.shape[1]]
+    if cfg.family == "vlm":
+        positions = batch["positions"]
+        if "labels" not in batch:
+            positions = positions[:, :, :-1]
+    else:
+        positions = _positions_default(B, S)
+    h, aux, _ = backbone(p, cfg, h, positions, memory=memory)
+    ce = chunked_ce_loss(p, cfg, h, labels)
+    return ce + 0.01 * aux
+
+
+# --------------------------------------------------------------------- #
+# serving: prefill + decode with caches
+# --------------------------------------------------------------------- #
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> Dict:
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    L = cfg.n_layers
+
+    def attn_cache(n):
+        return {
+            "k": jnp.zeros((n, batch, max_seq, Hkv, Dh), dtype),
+            "v": jnp.zeros((n, batch, max_seq, Hkv, Dh), dtype),
+            "len": jnp.zeros((n,), jnp.int32),
+        }
+
+    def mamba_state(n):
+        di, N = cfg.d_inner, cfg.ssm_state
+        H, P = cfg.ssm_heads, cfg.ssm_head_dim
+        return {
+            "conv": jnp.zeros((n, batch, cfg.ssm_conv - 1, di + 2 * N),
+                              dtype),
+            "ssm": jnp.zeros((n, batch, H, P, N), jnp.float32),
+        }
+
+    if cfg.family == "encdec":
+        c = attn_cache(L)
+        c["cross_k"] = jnp.zeros((L, batch, cfg.enc_seq, Hkv, Dh), dtype)
+        c["cross_v"] = jnp.zeros((L, batch, cfg.enc_seq, Hkv, Dh), dtype)
+        return c
+    if cfg.family in ("dense", "vlm", "moe"):
+        return attn_cache(L)
+    if cfg.family == "ssm":
+        return mamba_state(L)
+    if cfg.family == "hybrid":
+        every = cfg.shared_attn_every
+        n_groups = L // every
+        m = mamba_state(L)
+        m = jax.tree.map(
+            lambda x: x.reshape(n_groups, every, *x.shape[1:]), m)
+        return {"mamba": m, "attn": attn_cache(n_groups)}
+    raise ValueError(cfg.family)
+
+
+def prefill(p: Params, cfg: ModelConfig, tokens, cache, *,
+            positions=None, memory=None):
+    """Run the prompt through the model, filling caches.
+
+    Returns (last-position logits (B, V), caches)."""
+    B, S = tokens.shape
+    h = embed_tokens(p, cfg, tokens)
+    if cfg.family == "encdec":
+        h = h + p["dec_pos"][None, :S]
+    if positions is None:
+        positions = _positions_default(B, S)
+    h, _, new_cache = backbone(p, cfg, h, positions, caches=cache,
+                               q_offset=0, memory=memory)
+    logits = jnp.einsum("bd,vd->bv", h[:, -1], _head_table(p))
+    return logits.astype(jnp.float32), new_cache
+
+
+def decode_step(p: Params, cfg: ModelConfig, token, cache, pos, *,
+                memory=None):
+    """One decode step. token: (B,) int32; pos: () int32 absolute position.
+
+    Returns (logits (B,V), new cache)."""
+    B = token.shape[0]
+    h = embed_tokens(p, cfg, token[:, None])
+    if cfg.family == "encdec":
+        h = h + jax.lax.dynamic_slice_in_dim(p["dec_pos"], pos, 1)[None]
+    if cfg.family == "vlm":
+        positions = jnp.broadcast_to(pos, (3, B, 1))
+    else:
+        positions = jnp.broadcast_to(pos, (B, 1))
+    h, _, new_cache = backbone(p, cfg, h, positions, caches=cache,
+                               q_offset=pos, memory=memory)
+    logits = jnp.einsum("bd,vd->bv", h[:, 0], _head_table(p))
+    return logits.astype(jnp.float32), new_cache

@@ -1,0 +1,157 @@
+"""Mixture-of-Experts FFN (mixtral / granite-moe).
+
+Token dispatch/combine is — structurally — the paper's Copy-Reduce:
+dispatch scatters token vectors to per-expert slots (collision-free by
+construction: slot index = rank of the token within its expert, via a
+cumsum over the one-hot assignment matrix — the same owner-computes trick
+as the pull model), and combine is a gate-weighted gather-reduce
+(``e_mul_v_add_v`` in BR terms). See DESIGN.md §4.
+
+Fixed shapes via capacity: C = ceil(top_k · T · capacity_factor / E);
+overflow tokens are dropped (standard GShard semantics), with an
+auxiliary load-balancing loss to keep drops rare.
+
+Sharding: expert weights (E, d, ff) are TP-sharded on ff over 'model' and
+FSDP-sharded on d over 'data'. The expert axis E is left unsharded because
+the production mesh's model axis (16) does not divide either assigned
+expert count (8, 40); the layer supports EP (experts over 'model') when
+``E % model_axis == 0`` — see launch/shardings.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ...pjit_utils import current_mesh, shard_hint
+from .config import ModelConfig
+
+
+def _block_layout(B: int, S: int, small_ffn: bool):
+    """(dd, dm): token-block grid aligned to the (data, model) mesh.
+
+    Blocks are built by splitting the BATCH dim dd-ways (data axis) and
+    the SEQUENCE dim dm-ways (model axis) — so the (dd, dm) block grid
+    maps 1:1 onto mesh shards and every dispatch gather is provably
+    local. A flat ``T.reshape(ds, Tb)`` blocking only aligns when S is a
+    multiple of Tb — it silently garbles the mapping for prefill shapes
+    and the partitioner falls back to a full all-reduce of the gathered
+    buffer (§Perf granite-prefill iteration).
+
+    dm > 1 only for small (replicated-weight) expert FFNs: tokens are
+    model-replicated there, so model-axis blocks stay local while the FFN
+    compute spreads over the whole mesh (§Perf iter 7)."""
+    mesh = current_mesh()
+    if mesh is None:
+        return 1, 1
+    ds = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    ms = mesh.shape.get("model", 1)
+    dd = ds if B % ds == 0 else 1
+    dm = ms if (small_ffn and S % ms == 0) else 1
+    return dd, dm
+
+
+def moe_init(key, cfg: ModelConfig, dtype) -> Dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in, s_out = D ** -0.5, F ** -0.5
+    return {
+        "router": (jax.random.normal(k1, (D, E)) * s_in).astype(jnp.float32),
+        "w_gate": (jax.random.normal(k2, (E, D, F)) * s_in).astype(dtype),
+        "w_up": (jax.random.normal(k3, (E, D, F)) * s_in).astype(dtype),
+        "w_down": (jax.random.normal(k4, (E, F, D)) * s_out).astype(dtype),
+    }
+
+
+def moe_apply(p: Dict, cfg: ModelConfig, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D). Returns (y, aux_loss)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    T = B * S
+    # per-block capacity: the position-in-expert cumsum runs WITHIN each
+    # token block, so a token's slot lives on the shard that owns the
+    # token — dispatch needs no communication (§Perf iters 5-7; GShard's
+    # "local dispatch" semantics: drops are decided per block). Blocks
+    # form a (data, model)-aligned grid — see _block_layout.
+    small = E * cfg.d_ff * D * 2 * 3 <= 512 * 1024 * 1024
+    dd, dm = _block_layout(B, S, small)
+    ds = dd * dm
+    block_ax = (("data", "model") if dm > 1 else
+                ("data" if dd > 1 else None))
+    Tb = T // ds
+    Cb = max(1, int(K * Tb * cfg.capacity_factor / E))
+    C = ds * Cb
+
+    # mesh-aligned blocking: (B,S,D) -> (dd, B/dd, dm, S/dm, D) ->
+    # (dd, dm, B/dd, S/dm, D) -> (ds, Tb, D). The transpose only reorders
+    # replicated dims; the merges combine (sharded, replicated) dims —
+    # all layout-local under GSPMD.
+    xb = x.reshape(dd, B // dd, dm, S // dm, D)
+    xb = shard_hint(xb, "data", None, "model" if dm > 1 else None,
+                    None, None)
+    xb = xb.transpose(0, 2, 1, 3, 4).reshape(ds, Tb, D)
+    xb = shard_hint(xb, block_ax, None, None)
+
+    logits = xb.astype(jnp.float32) @ p["router"]            # (ds, Tb, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)            # (ds, Tb, K)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                        # (E,)
+    ce = jnp.mean(jax.nn.one_hot(gate_idx[..., 0], E), axis=(0, 1))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- dispatch (paper's pull insight: scatter INDICES, gather
+    # payloads — a payload scatter across shardings replicates the whole
+    # expert buffer; an index scatter is 2+ orders smaller) -------------
+    flat_e = gate_idx.reshape(ds, Tb * K)                    # block-local
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)     # (ds, TbK, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot                # rank in block
+    flat_pos = jnp.sum(pos * onehot, axis=-1)                # (ds, TbK)
+    keep = flat_pos < Cb
+    slot_e = jnp.where(keep, flat_e, E)                      # drop -> pad
+    slot_c = jnp.where(keep, flat_pos, Cb)                   # block-local c
+
+    # batched (vmapped) index scatter: the leading block dim aligns with
+    # the mesh grid, so GSPMD proves every scatter/gather local — dynamic
+    # flat indices would force a conservative all-to-all (§Perf iter 6).
+    tok_local = jnp.broadcast_to(jnp.repeat(jnp.arange(Tb), K)[None],
+                                 (ds, Tb * K))               # (ds, TbK)
+    slot_tok = jax.vmap(
+        lambda e, c, t: jnp.full((E + 1, Cb + 1), Tb, jnp.int32)
+        .at[e, c].set(t, mode="drop"))(slot_e, slot_c, tok_local)
+    slot_tok = slot_tok[:, :E, :Cb]                          # (ds, E, Cb)
+    x_pad = jnp.concatenate([xb, jnp.zeros((ds, 1, D), xb.dtype)], axis=1)
+    buf = jnp.take_along_axis(
+        x_pad, slot_tok.reshape(ds, E * Cb)[:, :, None], axis=1)
+    buf = (buf.reshape(ds, E, Cb, D).transpose(1, 0, 2, 3)
+           .reshape(E, C, D))                                # (E, C, D)
+
+    # ---- expert FFN: ff-TP for big experts; for tiny experts (granite)
+    # replicate the weights and let the block-sharded slot dim carry the
+    # parallelism (§Perf iters 3-6) --------------------------------------
+    ff_ax = None if small else "model"
+    buf = shard_hint(buf, None, block_ax, None)
+    h_g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"])
+    h_u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"])
+    h = jax.nn.silu(shard_hint(h_g, None, block_ax, ff_ax)) * h_u
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_down"])       # (E, C, D)
+    y_buf = shard_hint(y_buf, None, block_ax, None)
+
+    # ---- combine: batched within-block gather, weight, reshape-sum the
+    # K choices — no payload scatter anywhere ----------------------------
+    y_blk = (y_buf.reshape(E, ds, Cb, D).transpose(1, 0, 2, 3)
+             .reshape(ds, E * Cb, D))
+    idx = (jnp.clip(slot_e, 0, E - 1) * Cb
+           + jnp.minimum(slot_c, Cb - 1))                    # (ds, TbK)
+    gathered = jnp.take_along_axis(y_blk, idx[:, :, None], axis=1)
+    gathered = jnp.where(keep[:, :, None], gathered, 0)
+    w = gate_vals.reshape(ds, Tb * K, 1).astype(gathered.dtype)
+    y = (gathered * w).reshape(ds, Tb, K, D).sum(axis=2)
+    # inverse of the mesh-aligned blocking
+    y = (y.reshape(dd, dm, B // dd, S // dm, D)
+         .transpose(0, 2, 1, 3, 4).reshape(B, S, D))
+    return y.astype(x.dtype), aux

@@ -1,0 +1,14 @@
+"""repro.optim — optimizers, schedules, gradient transforms."""
+from .optimizers import (OptState, adamw, sgd, clip_by_global_norm,
+                         apply_updates, global_norm)
+from .schedules import constant, warmup_cosine, warmup_linear
+from .compression import (int8_compress, int8_decompress,
+                          compressed_allreduce_terms, ErrorFeedbackState,
+                          init_error_feedback, quantize_with_feedback)
+
+__all__ = [
+    "OptState", "adamw", "sgd", "clip_by_global_norm", "apply_updates",
+    "global_norm", "constant", "warmup_cosine", "warmup_linear",
+    "int8_compress", "int8_decompress", "compressed_allreduce_terms",
+    "ErrorFeedbackState", "init_error_feedback", "quantize_with_feedback",
+]

@@ -1,0 +1,69 @@
+"""Gradient compression for cross-pod data parallelism.
+
+int8 block quantization with error feedback (EF-SGD style): before the
+DP all-reduce, gradients are quantized to int8 with a per-block f32 scale;
+the quantization residual is carried to the next step so the compression
+is unbiased in the long run. At (pod=2, data=16) this cuts the
+pod-axis all-reduce payload ~3.8× (int8 + 1 scale per 256 values vs f32)
+— a distributed-optimization trick beyond the paper, measured on the
+dry-run collective-bytes term (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: Any  # pytree matching grads
+
+
+def init_error_feedback(params) -> ErrorFeedbackState:
+    return ErrorFeedbackState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def int8_compress(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Blockwise symmetric int8 quantization. Returns (q, scales)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % BLOCK
+    flat = jnp.pad(flat, (0, pad)).reshape(-1, BLOCK)
+    amax = jnp.max(jnp.abs(flat), axis=1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale[:, 0]
+
+
+def int8_decompress(q: jnp.ndarray, scale: jnp.ndarray,
+                    shape, dtype) -> jnp.ndarray:
+    flat = q.astype(jnp.float32) * scale[:, None]
+    n = 1
+    for s in shape:
+        n *= s
+    return flat.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+def quantize_with_feedback(g: jnp.ndarray, residual: jnp.ndarray
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Quantize g+residual; return (q, scale, new_residual)."""
+    target = g.astype(jnp.float32) + residual
+    q, scale = int8_compress(target)
+    deq = int8_decompress(q, scale, g.shape, jnp.float32)
+    return q, scale, target - deq
+
+
+def compressed_allreduce_terms(params) -> Tuple[int, int]:
+    """(raw_bytes, compressed_bytes) for a full-gradient all-reduce."""
+    raw = 0
+    comp = 0
+    for p in jax.tree_util.tree_leaves(params):
+        n = p.size
+        raw += n * 4
+        blocks = -(-n // BLOCK)
+        comp += n * 1 + blocks * 4
+    return raw, comp

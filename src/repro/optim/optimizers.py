@@ -1,0 +1,115 @@
+"""Minimal optax-style optimizers as pure pytree transforms.
+
+An optimizer is a pair ``(init_fn, update_fn)``:
+  * ``init_fn(params) -> state``
+  * ``update_fn(grads, state, params, step) -> (updates, new_state)``
+and ``apply_updates(params, updates)`` adds them. States are plain pytrees
+so they shard/checkpoint like parameters (ZeRO-style sharding happens at
+the launch layer by giving state leaves the same PartitionSpec as their
+parameter).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+OptState = Any
+Schedule = Callable[[jnp.ndarray], jnp.ndarray]
+
+
+def _as_schedule(lr) -> Schedule:
+    if callable(lr):
+        return lr
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), tree), n
+
+
+class AdamState(NamedTuple):
+    mu: Any
+    nu: Any
+
+
+def adamw(lr=1e-3, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0):
+    """AdamW with decoupled weight decay. Moments kept in f32."""
+    sched = _as_schedule(lr)
+
+    def init_fn(params) -> AdamState:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(mu=jax.tree.map(zeros, params),
+                         nu=jax.tree.map(zeros, params))
+
+    def update_fn(grads, state: AdamState, params, step):
+        step = jnp.asarray(step, jnp.int32) + 1
+        lr_t = sched(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * jnp.square(g32)
+            mh = m / b1c
+            vh = v / b2c
+            u = -lr_t * (mh / (jnp.sqrt(vh) + eps)
+                         + weight_decay * p.astype(jnp.float32))
+            return u.astype(p.dtype), m, v
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mu)
+        flat_v = tdef.flatten_up_to(state.nu)
+        flat_p = tdef.flatten_up_to(params)
+        out = [upd(g, m, v, p)
+               for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+        ups = tdef.unflatten([o[0] for o in out])
+        mu = tdef.unflatten([o[1] for o in out])
+        nu = tdef.unflatten([o[2] for o in out])
+        return ups, AdamState(mu=mu, nu=nu)
+
+    return init_fn, update_fn
+
+
+class SGDState(NamedTuple):
+    mom: Any
+
+
+def sgd(lr=1e-2, momentum: float = 0.9, nesterov: bool = False):
+    sched = _as_schedule(lr)
+
+    def init_fn(params) -> SGDState:
+        return SGDState(mom=jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+    def update_fn(grads, state: SGDState, params, step):
+        lr_t = sched(jnp.asarray(step, jnp.int32) + 1)
+
+        def upd(g, m):
+            g32 = g.astype(jnp.float32)
+            m = momentum * m + g32
+            d = g32 + momentum * m if nesterov else m
+            return (-lr_t * d).astype(g.dtype), m
+
+        flat_g, tdef = jax.tree_util.tree_flatten(grads)
+        flat_m = tdef.flatten_up_to(state.mom)
+        out = [upd(g, m) for g, m in zip(flat_g, flat_m)]
+        return (tdef.unflatten([o[0] for o in out]),
+                SGDState(mom=tdef.unflatten([o[1] for o in out])))
+
+    return init_fn, update_fn
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (step -> lr, step is 1-based)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    return lambda step: jnp.asarray(value, jnp.float32)
+
+
+def warmup_linear(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        decay = peak + (floor - peak) * frac
+        return jnp.where(step < warmup_steps, warm, decay)
+    return sched
+
+
+def warmup_cosine(peak: float, warmup_steps: int, total_steps: int,
+                  floor: float = 0.0):
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        frac = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        decay = floor + 0.5 * (peak - floor) * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup_steps, warm, decay)
+    return sched

@@ -1,0 +1,65 @@
+"""Ambient-mesh sharding hints.
+
+Model code calls ``shard_hint(x, "data", None, "model")`` with LOGICAL axis
+names; if a mesh has been installed via ``ambient_mesh(mesh)`` the hint
+becomes a real ``with_sharding_constraint`` (with "data" expanding to
+("pod", "data") on multi-pod meshes), otherwise it is a no-op — so the
+same model runs on 1 CPU device in tests and on the 512-chip mesh in the
+dry-run unchanged.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def ambient_mesh(mesh: Optional[Mesh]):
+    prev = getattr(_state, "mesh", None)
+    _state.mesh = mesh
+    try:
+        yield
+    finally:
+        _state.mesh = prev
+
+
+def resolve_axis(mesh: Mesh, name):
+    """Logical -> physical axes: 'data' covers ('pod','data') if present.
+
+    Accepts a tuple of logical names for multi-axis dims (flattened)."""
+    if name is None:
+        return None
+    if isinstance(name, tuple):
+        flat = []
+        for n in name:
+            r = resolve_axis(mesh, n)
+            if isinstance(r, tuple):
+                flat.extend(r)
+            elif r is not None:
+                flat.append(r)
+        return tuple(flat)
+    if name == "data" and "pod" in mesh.axis_names:
+        return ("pod", "data")
+    return name
+
+
+def make_spec(mesh: Mesh, *axes) -> P:
+    return P(*[resolve_axis(mesh, a) for a in axes])
+
+
+def shard_hint(x, *axes):
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, make_spec(mesh, *axes)))

@@ -1,0 +1,12 @@
+"""repro.substrate — framework primitives (paper §4) + NN building blocks."""
+from .batchnorm import batchnorm1d_init, batchnorm1d_apply, batchnorm1d_naive
+from .embedding import embedding_init, embedding_lookup, embedding_lookup_naive
+from .nn import (linear_init, linear_apply, dropout, leaky_relu,
+                 glorot, he_normal, cross_entropy_loss, accuracy)
+
+__all__ = [
+    "batchnorm1d_init", "batchnorm1d_apply", "batchnorm1d_naive",
+    "embedding_init", "embedding_lookup", "embedding_lookup_naive",
+    "linear_init", "linear_apply", "dropout", "leaky_relu",
+    "glorot", "he_normal", "cross_entropy_loss", "accuracy",
+]

@@ -1,0 +1,64 @@
+"""Small functional NN building blocks shared by GNN and LM stacks."""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def glorot(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = shape[0], shape[-1]
+    lim = jnp.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, dtype, -lim, lim)
+
+
+def he_normal(key, shape, dtype=jnp.float32):
+    std = jnp.sqrt(2.0 / shape[0])
+    return (jax.random.normal(key, shape) * std).astype(dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, bias: bool = True,
+                dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    p = {"w": glorot(key, (d_in, d_out), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p: Dict[str, jnp.ndarray], x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def leaky_relu(x, slope: float = 0.2):
+    return jnp.where(x >= 0, x, slope * x)
+
+
+def dropout(key, x, rate: float, train: bool):
+    if not train or rate <= 0.0:
+        return x
+    keep = 1.0 - rate
+    mask = jax.random.bernoulli(key, keep, x.shape)
+    return jnp.where(mask, x / keep, 0.0).astype(x.dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    if mask is not None:
+        m = mask.astype(nll.dtype)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def accuracy(logits: jnp.ndarray, labels: jnp.ndarray,
+             mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    hit = (jnp.argmax(logits, axis=-1) == labels).astype(jnp.float32)
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(hit * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(hit)

@@ -1,0 +1,25 @@
+"""Shared test fixtures/utilities.
+
+NOTE: XLA_FLAGS device-count tricks are NOT set here — smoke tests and
+benches must see the single real CPU device. Multi-device tests re-exec
+themselves in a subprocess with their own XLA_FLAGS.
+"""
+import numpy as np
+import pytest
+
+
+def make_graph(rng, n_src, n_dst, nnz, *, unique=False):
+    """Random COO graph (host arrays) + a repro.core Graph."""
+    from repro.core import from_coo
+    src = rng.integers(0, n_src, nnz)
+    dst = rng.integers(0, n_dst, nnz)
+    if unique:
+        pairs = np.unique(np.stack([src, dst], 1), axis=0)
+        src, dst = pairs[:, 0], pairs[:, 1]
+    g = from_coo(src, dst, n_src=n_src, n_dst=n_dst)
+    return g, src, dst
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

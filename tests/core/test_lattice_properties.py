@@ -1,0 +1,151 @@
+"""Property-based tests (hypothesis) for the BR/CR lattice invariants."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (from_coo, gspmm, copy_reduce, build_ell, build_tiles,
+                        reverse, parse_op)
+
+
+@st.composite
+def graphs(draw, max_n=40, max_e=150):
+    n_u = draw(st.integers(1, max_n))
+    n_v = draw(st.integers(1, max_n))
+    nnz = draw(st.integers(1, max_e))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n_u, nnz)
+    dst = rng.integers(0, n_v, nnz)
+    return src, dst, n_u, n_v, rng
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_strategies_agree(data):
+    """push / segment / ell / onehot / pallas all compute the same CR."""
+    src, dst, n_u, n_v, rng = data
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    x = jnp.asarray(rng.normal(size=(n_u, 9)).astype(np.float32))
+    outs = {s: np.asarray(copy_reduce(g, x, "sum", strategy=s))
+            for s in ("push", "segment", "ell", "onehot", "pallas")}
+    base = outs.pop("segment")
+    for name, o in outs.items():
+        np.testing.assert_allclose(o, base, rtol=1e-4, atol=1e-4,
+                                   err_msg=name)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_edge_order_invariance(data):
+    """CR must not depend on the caller's edge ordering."""
+    src, dst, n_u, n_v, rng = data
+    x = jnp.asarray(rng.normal(size=(n_u, 5)).astype(np.float32))
+    g1 = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    perm = rng.permutation(len(src))
+    g2 = from_coo(src[perm], dst[perm], n_src=n_u, n_dst=n_v)
+    np.testing.assert_allclose(np.asarray(copy_reduce(g1, x)),
+                               np.asarray(copy_reduce(g2, x)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_linearity_of_sum_reduce(data):
+    """CR_sum(a·x + b·y) == a·CR_sum(x) + b·CR_sum(y)."""
+    src, dst, n_u, n_v, rng = data
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    x = jnp.asarray(rng.normal(size=(n_u, 4)).astype(np.float32))
+    y = jnp.asarray(rng.normal(size=(n_u, 4)).astype(np.float32))
+    lhs = copy_reduce(g, 2.0 * x + 3.0 * y)
+    rhs = 2.0 * copy_reduce(g, x) + 3.0 * copy_reduce(g, y)
+    np.testing.assert_allclose(np.asarray(lhs), np.asarray(rhs),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_mean_equals_sum_over_degree(data):
+    src, dst, n_u, n_v, rng = data
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    x = jnp.asarray(rng.normal(size=(n_u, 3)).astype(np.float32))
+    s = np.asarray(copy_reduce(g, x, "sum"))
+    m = np.asarray(copy_reduce(g, x, "mean"))
+    deg = np.asarray(g.in_degrees)[:, None]
+    np.testing.assert_allclose(m, s / np.maximum(deg, 1), rtol=1e-4,
+                               atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_reverse_transpose_identity(data):
+    """CR on G == push-to-u on reverse(G): A @ x == (Aᵀ)ᵀ @ x."""
+    src, dst, n_u, n_v, rng = data
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    rg = reverse(g)
+    x = jnp.asarray(rng.normal(size=(n_u, 4)).astype(np.float32))
+    a = np.asarray(copy_reduce(g, x))
+    b = np.asarray(gspmm(rg, "v_copy_add_u", v=x))
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(graphs(max_n=25, max_e=80))
+def test_max_min_reductions_bound_sum(data):
+    """max ≥ mean ≥ min wherever degree > 0."""
+    src, dst, n_u, n_v, rng = data
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    x = jnp.asarray(rng.normal(size=(n_u, 3)).astype(np.float32))
+    mx = np.asarray(copy_reduce(g, x, "max"))
+    mn = np.asarray(copy_reduce(g, x, "min"))
+    mean = np.asarray(copy_reduce(g, x, "mean"))
+    has = np.asarray(g.in_degrees) > 0
+    assert (mx[has] + 1e-5 >= mean[has]).all()
+    assert (mean[has] + 1e-5 >= mn[has]).all()
+
+
+def test_parse_round_trip():
+    for name in ["u_copy_add_v", "e_copy_max_v", "u_mul_e_add_v",
+                 "u_dot_v_add_e", "u_add_v_copy_e", "e_sub_v_copy_e",
+                 "e_div_v_copy_e", "v_mul_e_copy_e", "u_copy_mean_v"]:
+        spec = parse_op(name)
+        # round trip through the canonical name parser again
+        assert parse_op(spec.name) == spec
+
+
+def test_parse_rejects_garbage():
+    for bad in ["u_copy_v", "x_mul_e_add_v", "u_pow_e_add_v",
+                "u_mul_e_median_v", "u_mul_e_add_x"]:
+        with pytest.raises(ValueError):
+            parse_op(bad)
+
+
+@settings(max_examples=10, deadline=None)
+@given(graphs(max_n=30, max_e=100))
+def test_training_op_gradients_match_autodiff(data):
+    """weighted_copy_reduce custom VJP == autodiff of the segment path."""
+    import jax
+    from repro.core.training_ops import (make_training_graph,
+                                         weighted_copy_reduce)
+    src, dst, n_u, n_v, rng = data
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    tg = make_training_graph(g)
+    x = jnp.asarray(rng.normal(size=(n_u, 5)).astype(np.float32))
+    w = jnp.asarray(rng.normal(size=(g.n_edges, 1)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(n_v, 5)).astype(np.float32))
+
+    def f_custom(x, w):
+        return jnp.sum(weighted_copy_reduce(tg, x, w) * ct)
+
+    def f_ref(x, w):
+        msg = jnp.take(x, g.src, axis=0) \
+            * jnp.take(w[:, 0], g.eid)[:, None]
+        return jnp.sum(jax.ops.segment_sum(
+            msg, g.dst, num_segments=n_v) * ct)
+
+    gx1, gw1 = jax.grad(f_custom, argnums=(0, 1))(x, w)
+    gx2, gw2 = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(np.asarray(gx1), np.asarray(gx2),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gw1), np.asarray(gw2),
+                               rtol=1e-4, atol=1e-4)

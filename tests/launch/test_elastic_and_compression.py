@@ -1,0 +1,108 @@
+"""Elastic restart (mesh-shape change across restore) + grad compression."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.optim.compression import (int8_compress, int8_decompress,
+                                     quantize_with_feedback,
+                                     compressed_allreduce_terms)
+
+
+def test_int8_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(1000,)).astype(np.float32) * 3)
+    q, s = int8_compress(x)
+    y = int8_decompress(q, s, x.shape, jnp.float32)
+    rel = float(jnp.linalg.norm(y - x) / jnp.linalg.norm(x))
+    assert rel < 0.01  # blockwise int8: <1% relative error on gaussians
+
+
+def test_error_feedback_unbiased_over_time():
+    """With EF, the accumulated applied updates converge to the true sum."""
+    rng = np.random.default_rng(1)
+    true_sum = np.zeros(512, np.float32)
+    applied = np.zeros(512, np.float32)
+    resid = jnp.zeros(512, jnp.float32)
+    for step in range(30):
+        g = jnp.asarray(rng.normal(size=(512,)).astype(np.float32))
+        true_sum += np.asarray(g)
+        q, s, resid = quantize_with_feedback(g, resid)
+        applied += np.asarray(int8_decompress(q, s, g.shape, jnp.float32))
+    # applied = true_sum - residual  (residual bounded, doesn't grow)
+    err = np.abs(true_sum - applied).max()
+    assert err < 0.5, err
+    assert float(jnp.abs(resid).max()) < 0.5
+
+
+def test_compression_ratio():
+    params = {"w": jnp.zeros((1024, 1024)), "b": jnp.zeros((1024,))}
+    raw, comp = compressed_allreduce_terms(params)
+    assert raw / comp > 3.8  # int8 + one f32 scale per 256 values
+
+
+_ELASTIC_PROG = r"""
+import os, sys
+ckpt = sys.argv[1]
+phase = sys.argv[2]
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.configs import get_smoke_config
+from repro.launch.mesh import make_mesh
+from repro.launch import shardings as SR
+from repro.launch.steps import TrainState, make_train_step, init_state
+from repro.launch.train import synthetic_batch
+from repro.checkpoint import CheckpointManager
+from repro.pjit_utils import ambient_mesh
+
+cfg = get_smoke_config("llama3p2_3b")
+mesh = make_mesh((2, 4), ("data", "model")) if phase == "save" \
+    else make_mesh((4, 2), ("data", "model"))    # DIFFERENT mesh on restore
+specs = None
+mgr = CheckpointManager(ckpt)
+state = init_state(jax.random.PRNGKey(0), cfg)
+pspec = SR.param_specs(state.params, cfg, mesh)
+sh = SR.to_named(TrainState(pspec, pspec, pspec,
+                            jax.sharding.PartitionSpec()), mesh)
+if phase == "save":
+    state = jax.device_put(state, sh)
+    step = jax.jit(make_train_step(cfg), donate_argnums=(0,))
+    with ambient_mesh(mesh):
+        for i in range(2):
+            state, m = step(state, synthetic_batch(cfg, i, 4, 32))
+    mgr.save(state, 2)
+    print("SAVED", float(m["loss"]))
+else:
+    restored = mgr.restore_latest(state, shardings=sh)
+    assert restored is not None
+    state, step_no = restored
+    assert step_no == 2
+    # verify leaves landed with the new mesh's sharding
+    some = state.params["blocks"]["attn"]["wq"]
+    assert some.sharding.mesh.shape["data"] == 4
+    step = jax.jit(make_train_step(cfg), donate_argnums=(0,))
+    with ambient_mesh(mesh):
+        state, m = step(state, synthetic_batch(cfg, 2, 4, 32))
+    assert np.isfinite(float(m["loss"]))
+    print("RESTORED_OK", float(m["loss"]))
+"""
+
+
+def test_elastic_restart_different_mesh(tmp_path):
+    """Save on a (2,4) mesh, restore + train on a (4,2) mesh."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    r1 = subprocess.run([sys.executable, "-c", _ELASTIC_PROG,
+                         str(tmp_path), "save"], env=env,
+                        capture_output=True, text=True, timeout=900)
+    assert r1.returncode == 0, r1.stderr[-3000:]
+    assert "SAVED" in r1.stdout
+    r2 = subprocess.run([sys.executable, "-c", _ELASTIC_PROG,
+                         str(tmp_path), "restore"], env=env,
+                        capture_output=True, text=True, timeout=900)
+    assert r2.returncode == 0, r2.stderr[-3000:]
+    assert "RESTORED_OK" in r2.stdout

@@ -1,0 +1,125 @@
+"""Property tests for the LM stack's numerical invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models.lm.layers import (rope_angles, apply_rope,
+                                    blockwise_attention)
+from repro.models.lm.mamba2 import ssd_chunked
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([16, 32, 64]))
+def test_rope_preserves_norm(seed, hd):
+    """Rotation must preserve per-pair L2 norms (orthogonality)."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(2, 5, 3, hd)).astype(np.float32))
+    pos = jnp.asarray(rng.integers(0, 1000, (2, 5)))
+    ang = rope_angles(pos, hd, 1e4)
+    y = apply_rope(x, ang)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1), rtol=1e-4)
+
+
+def test_rope_relative_position_property():
+    """<R(p)q, R(p+k)v> depends only on the offset k."""
+    rng = np.random.default_rng(0)
+    hd = 32
+    q = jnp.asarray(rng.normal(size=(1, 1, 1, hd)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(1, 1, 1, hd)).astype(np.float32))
+
+    def score(p, k):
+        aq = rope_angles(jnp.asarray([[p]]), hd, 1e4)
+        av = rope_angles(jnp.asarray([[p + k]]), hd, 1e4)
+        return float(jnp.sum(apply_rope(q, aq) * apply_rope(v, av)))
+
+    assert abs(score(3, 7) - score(40, 7)) < 1e-3
+    assert abs(score(0, 2) - score(100, 2)) < 1e-3
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_blockwise_attention_matches_dense(seed):
+    """Online-softmax blockwise == dense softmax attention."""
+    rng = np.random.default_rng(seed)
+    B, S, H, Dh = 2, 37, 3, 16
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, H, Dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, H, Dh)).astype(np.float32))
+    out = blockwise_attention(q, k, v, causal=True, block=8)
+
+    s = np.einsum("bqhd,bkhd->bhqk", np.asarray(q),
+                  np.asarray(k)) / np.sqrt(Dh)
+    mask = np.tril(np.ones((S, S), bool))
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    ref = np.einsum("bhqk,bkhd->bqhd", p, np.asarray(v))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-5)
+
+
+def test_blockwise_sliding_window():
+    """window=w must equal dense attention with a banded mask."""
+    rng = np.random.default_rng(1)
+    B, S, H, Dh, W = 1, 29, 2, 8, 7
+    q = jnp.asarray(rng.normal(size=(B, S, H, Dh)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, H, Dh)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, H, Dh)).astype(np.float32))
+    out = blockwise_attention(q, k, v, causal=True, window=W, block=8)
+
+    s = np.einsum("bqhd,bkhd->bhqk", np.asarray(q),
+                  np.asarray(k)) / np.sqrt(Dh)
+    qi = np.arange(S)[:, None]
+    ki = np.arange(S)[None, :]
+    mask = (qi >= ki) & (qi - ki < W)
+    s = np.where(mask[None, None], s, -1e30)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p = p / p.sum(-1, keepdims=True)
+    ref = np.einsum("bhqk,bkhd->bqhd", p, np.asarray(v))
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("Q", [16, 32, 64])
+def test_ssd_chunk_size_invariance(Q):
+    """The chunked SSD scan must not depend on the chunk size."""
+    rng = np.random.default_rng(2)
+    B, S, H, P, N = 1, 48, 2, 4, 8
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)).astype(np.float32))
+    dt = jnp.asarray(rng.uniform(0.1, 0.9, (B, S, H)).astype(np.float32))
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, (H,)).astype(np.float32))
+    Bm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    Cm = jnp.asarray(rng.normal(size=(B, S, N)).astype(np.float32))
+    y_ref, h_ref = ssd_chunked(x, dt, A, Bm, Cm, 8)
+    y, h = ssd_chunked(x, dt, A, Bm, Cm, Q)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_ssd_matches_naive_recurrence():
+    """Chunked SSD == step-by-step h_t = exp(dt·A)h + dt·B xᵀ recurrence."""
+    rng = np.random.default_rng(3)
+    B, S, H, P, N = 1, 20, 1, 3, 5
+    x = rng.normal(size=(B, S, H, P)).astype(np.float32)
+    dt = rng.uniform(0.1, 0.9, (B, S, H)).astype(np.float32)
+    A = -rng.uniform(0.5, 2.0, (H,)).astype(np.float32)
+    Bm = rng.normal(size=(B, S, N)).astype(np.float32)
+    Cm = rng.normal(size=(B, S, N)).astype(np.float32)
+
+    h = np.zeros((B, H, P, N), np.float32)
+    ys = []
+    for t in range(S):
+        dA = np.exp(dt[:, t] * A)                      # (B,H)
+        Bx = np.einsum("bn,bhp->bhpn", Bm[:, t], x[:, t] * dt[:, t][..., None])
+        h = h * dA[:, :, None, None] + Bx
+        ys.append(np.einsum("bn,bhpn->bhp", Cm[:, t], h))
+    ref = np.stack(ys, 1)                              # (B,S,H,P)
+
+    y, h_last = ssd_chunked(jnp.asarray(x), jnp.asarray(dt), jnp.asarray(A),
+                            jnp.asarray(Bm), jnp.asarray(Cm), 8)
+    np.testing.assert_allclose(np.asarray(y), ref, rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h_last), h, rtol=1e-3, atol=1e-4)
