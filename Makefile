@@ -1,0 +1,19 @@
+# Tier-1 verification (see ROADMAP.md) and helpers.
+PYTHON ?= python
+
+.PHONY: test test-fast bench install
+
+install:
+	$(PYTHON) -m pip install -r requirements.txt
+
+# the tier-1 command, verbatim
+test:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q
+
+# skip the slow launch/distributed suites during development
+test-fast:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m pytest -x -q \
+		tests/core tests/kernels tests/substrate
+
+bench:
+	PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} $(PYTHON) -m benchmarks.run

@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import from_coo, gspmm, build_ell, build_tiles
+from repro.core import from_coo, gspmm, planner
 from repro.data import rmat_graph
 
 from .common import time_fn, row
@@ -29,36 +29,43 @@ CONFIGS = [
     "u_dot_v_add_e",       # GCMC
 ]
 
-STRATEGIES = ("push", "segment", "ell")
+STRATEGIES = ("push", "segment", "ell", "auto")
 
 
-def main(d: int = 128):
+def main(d: int = 128, strategy: str = None):
     src, dst, n = rmat_graph(15, 200_000, seed=3)
     g = from_coo(src, dst, n_src=n, n_dst=n)
-    ell = build_ell(g)
+    # packs come from the planner's per-graph cache (built once, shared
+    # between the pinned-ell sweep and the auto mode)
+    planner.get_plan_cache(g).ell()
     nnz = g.n_edges
     rng = np.random.default_rng(0)
     U = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
     V = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
     E = jnp.asarray(rng.normal(size=(nnz, d)).astype(np.float32))
 
+    strategies = (STRATEGIES if strategy is None
+                  else tuple(dict.fromkeys(("push", strategy))))
     for name in CONFIGS:
         times = {}
-        for strategy in STRATEGIES:
-            if name.endswith("_e") and strategy in ("ell",):
+        for s in strategies:
+            if name.endswith("_e") and s == "ell":
                 continue   # edge-output configs have no blocked-pull stage
-            kw = {"ell": ell} if strategy == "ell" else {}
-            fn = jax.jit(lambda u, v, e, s=strategy, nm=name, kw=kw:
-                         gspmm(g, nm, u=u, v=v, e=e, strategy=s, **kw))
-            times[strategy] = time_fn(fn, U, V, E, iters=5, warmup=2)
+            fn = jax.jit(lambda u, v, e, s=s, nm=name:
+                         gspmm(g, nm, u=u, v=v, e=e, strategy=s))
+            times[s] = time_fn(fn, U, V, E, iters=5, warmup=2)
         base = times["push"]
-        best_name = min((k for k in times if k != "push"),
-                        key=lambda k: times[k])
-        sp = base / times[best_name]
-        for strategy, t in times.items():
+        optimized = [k for k in times if k != "push"]
+        best_name = (min(optimized, key=lambda k: times[k])
+                     if optimized else None)
+        sp = base / times[best_name] if best_name else 1.0
+        for s, t in times.items():
             tag = (f"speedup={sp:.2f}x({best_name})"
-                   if strategy == best_name else "")
-            print(row(f"br_{name}_{strategy}", t, tag))
+                   if s == best_name else "")
+            if s == "auto":
+                chosen = planner.last_plan(name) or "edge-order"
+                tag = f"plan={chosen}" + (f";{tag}" if tag else "")
+            print(row(f"br_{name}_{s}", t, tag))
 
 
 if __name__ == "__main__":

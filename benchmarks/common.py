@@ -1,11 +1,16 @@
-"""Benchmark timing helpers (median-of-N, compile excluded)."""
+"""Benchmark timing helpers (median-of-N, compile excluded) + a
+process-wide result collector so ``run.py`` can emit BENCH_*.json."""
 from __future__ import annotations
 
 import time
-from typing import Callable, Tuple
+from typing import Callable, Dict, List
 
 import jax
 import numpy as np
+
+# Every row() call records here; benchmarks.run dumps it as JSON along
+# with the planner's per-op chosen-strategy log.
+RESULTS: List[Dict] = []
 
 
 def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2,
@@ -24,4 +29,6 @@ def time_fn(fn: Callable, *args, iters: int = 5, warmup: int = 2,
 
 
 def row(name: str, seconds: float, derived: str = "") -> str:
+    RESULTS.append({"name": name, "us_per_call": round(seconds * 1e6, 1),
+                    "derived": derived})
     return f"{name},{seconds*1e6:.1f},{derived}"

@@ -22,7 +22,7 @@ from repro.substrate.nn import cross_entropy_loss
 from .common import time_fn, row
 
 BASELINE = "push"
-OPTIMIZED = "ell"
+OPTIMIZED = "ell"       # default; main(strategy=...) overrides (e.g. auto)
 
 
 def _epoch_time(mod, params, bundle, x, labels, mask, strategy):
@@ -121,7 +121,10 @@ def bench_lgnn():
     return t_base / t_opt
 
 
-def main():
+def main(strategy: str = None):
+    global OPTIMIZED
+    if strategy is not None:
+        OPTIMIZED = strategy
     speedups = {}
     speedups["gcn"] = _bench_node_app("gcn", gcn)
     speedups["graphsage"] = _bench_node_app("graphsage", sage)

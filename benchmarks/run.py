@@ -9,8 +9,16 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One section: ``PYTHONPATH=src python -m benchmarks.run --only fig2``
+Planner mode: ``--strategy auto`` times push vs the planner's choice and
+reports which plan served each op (also recorded in the JSON output).
+
+Every run writes ``BENCH_<section>.json`` (``--json`` overrides the
+path) with the timed rows plus the planner's plan log, so the perf
+trajectory is tracked across PRs.
 """
 import argparse
+import inspect
+import json
 import sys
 
 
@@ -18,6 +26,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "br", "prims", "spmm"])
+    ap.add_argument("--strategy", default=None,
+                    choices=["auto", "push", "segment", "ell", "onehot",
+                             "pallas"],
+                    help="pin/override the optimized strategy under "
+                         "test (sections still time 'push' as baseline)")
+    ap.add_argument("--json", default=None,
+                    help="output path for the JSON results "
+                         "(default BENCH_<section>.json)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -29,12 +45,31 @@ def main() -> None:
         "spmm": "benchmarks.kernels_bench",
     }
     import importlib
+
+    from repro.core import planner
+    from . import common
+
     for key, modname in sections.items():
         if args.only and key != args.only:
             continue
         print(f"# --- {key} ---", file=sys.stderr)
         mod = importlib.import_module(modname)
-        mod.main()
+        kw = {}
+        if (args.strategy is not None
+                and "strategy" in inspect.signature(mod.main).parameters):
+            kw["strategy"] = args.strategy
+        mod.main(**kw)
+
+    out_path = args.json or f"BENCH_{args.only or 'all'}.json"
+    plans = {f"{op}|{requested}": chosen
+             for (op, requested), chosen in planner.plan_log().items()}
+    with open(out_path, "w") as f:
+        json.dump({"section": args.only or "all",
+                   "strategy": args.strategy,
+                   "rows": common.RESULTS,
+                   "plans": plans}, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_path} ({len(common.RESULTS)} rows)",
+          file=sys.stderr)
 
 
 if __name__ == '__main__':

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import copy_reduce, from_coo
+from repro.core import copy_reduce, from_coo, planner
 from repro.data import make_node_dataset
 from repro.models.gnn import gcn, make_bundle
 from repro.models.gnn.train import train_full_graph
@@ -17,9 +17,11 @@ def main():
     # --- the primitive itself -------------------------------------------
     g = from_coo([0, 1, 2, 0], [2, 2, 1, 1], n_src=3, n_dst=3)
     x = jnp.asarray(np.eye(3, dtype=np.float32))
-    print("Copy-Reduce (paper Eq. 3), three strategies:")
-    for s in ("push", "segment", "ell"):
+    print("Copy-Reduce (paper Eq. 3), three strategies + the planner:")
+    for s in ("push", "segment", "ell", "auto"):
         print(f"  {s:8s} ->\n{np.asarray(copy_reduce(g, x, strategy=s))}")
+    print(f"planner chose: {planner.last_plan('u_copy_add_v')} "
+          f"(strategy='auto' is the default everywhere)")
 
     # --- a real application ---------------------------------------------
     graph, feats, labels, train_mask, val_mask, nc = \

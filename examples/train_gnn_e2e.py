@@ -23,7 +23,10 @@ def main():
     ap.add_argument("--dataset", default="pubmed-like")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_sage_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=50)
-    ap.add_argument("--strategy", default="ell")
+    ap.add_argument("--strategy", default="auto",
+                    help="aggregation strategy; 'auto' lets the planner "
+                         "pick per op (pin 'push'/'ell' to reproduce the "
+                         "paper's baseline/optimized runs)")
     args = ap.parse_args()
 
     g, feats, labels, tm, vm, nc = make_node_dataset(args.dataset)

@@ -2,6 +2,8 @@
 from .graph import Graph, from_coo, reverse, add_self_loops
 from .tiling import (ELLPack, ELLClass, TilePack, build_ell,
                      build_ell_uniform, build_tiles)
+from . import planner
+from .planner import GraphStats, Plan, PlanCache, get_plan_cache
 from .binary_reduce import (BRSpec, parse_op, gspmm, copy_reduce,
                             binary_reduce, BINARY_OPS, REDUCE_OPS)
 from .edge_softmax import edge_softmax, edge_softmax_fused
@@ -10,6 +12,7 @@ __all__ = [
     "Graph", "from_coo", "reverse", "add_self_loops",
     "ELLPack", "ELLClass", "TilePack", "build_ell",
     "build_ell_uniform", "build_tiles",
+    "planner", "GraphStats", "Plan", "PlanCache", "get_plan_cache",
     "BRSpec", "parse_op", "gspmm", "copy_reduce", "binary_reduce",
     "BINARY_OPS", "REDUCE_OPS",
     "edge_softmax", "edge_softmax_fused",

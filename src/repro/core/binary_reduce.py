@@ -13,21 +13,23 @@ means the per-edge result is written to edges without reduction.
 The reduce stage dispatches across execution strategies (see
 ``strategies.py``): ``push`` (baseline Alg. 1), ``segment`` (Alg. 2),
 ``ell`` (Alg. 3 blocked pull), ``onehot`` (MXU adaptation), ``pallas``
-(TPU kernel, see ``repro.kernels``).
+(TPU kernel, see ``repro.kernels``). By default (``strategy="auto"``)
+the planner (``planner.py``) selects the strategy from graph statistics
+and memoizes any blocked packs per graph; pinning a strategy reproduces
+the paper's baseline-vs-optimized experiments, and a pinned strategy
+that cannot execute a spec falls back gracefully instead of raising.
 """
 from __future__ import annotations
 
 import dataclasses
-import re
-from functools import partial
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
-import jax
 import jax.numpy as jnp
 
+from . import planner
 from . import strategies as S
 from .graph import Graph
-from .tiling import ELLPack, TilePack, build_ell, build_tiles
+from .tiling import ELLPack, TilePack
 
 __all__ = ["BRSpec", "parse_op", "gspmm", "copy_reduce", "binary_reduce",
            "BINARY_OPS", "REDUCE_OPS", "OP_TARGETS"]
@@ -61,9 +63,9 @@ class BRSpec:
 
     @property
     def name(self) -> str:
-        red = {v: k for k, v in REDUCE_OPS.items()}
         r = "copy" if self.reduce == "none" else (
-            "add" if self.reduce == "sum" else self.reduce)
+            "add" if self.reduce == "sum" else
+            "mul" if self.reduce == "prod" else self.reduce)
         if self.op == "copy":
             return f"{self.lhs}_copy_{r}_{self.out}"
         return f"{self.lhs}_{self.op}_{self.rhs}_{r}_{self.out}"
@@ -119,15 +121,21 @@ def gspmm(g: Graph, op_name: str, *,
           u: Optional[jnp.ndarray] = None,
           v: Optional[jnp.ndarray] = None,
           e: Optional[jnp.ndarray] = None,
-          strategy: str = "segment",
+          strategy: str = "auto",
           ell: Optional[ELLPack] = None,
-          tiles: Optional[TilePack] = None) -> jnp.ndarray:
+          tiles: Optional[TilePack] = None,
+          cache: Optional[planner.PlanCache] = None) -> jnp.ndarray:
     """Generalized sparse aggregation (paper Eq. 1/3).
 
     Operand tensors are indexed by node/edge id: ``u``: (n_src, d) or
     (n_src,), ``v``: (n_dst, d), ``e``: (n_edges, d) in the caller's
     original edge order. Returns features on ``spec.out`` — edge outputs
     are returned in the caller's original edge order.
+
+    ``strategy="auto"`` (default) routes through the planner; explicit
+    ``ell``/``tiles`` packs override the per-graph :class:`PlanCache`,
+    and ``cache`` carries a pre-populated cache through ``jit`` (model
+    bundles do this so planning works inside jitted train steps).
     """
     spec = parse_op(op_name)
     data = {"u": u, "v": v, "e": e}
@@ -139,17 +147,39 @@ def gspmm(g: Graph, op_name: str, *,
     lhs_data = _as2d(data[spec.lhs])
     rhs_data = _as2d(data[spec.rhs]) if spec.rhs is not None else None
 
-    # ---- blocked-pull fast path (paper Alg. 3): fuse gather+⊗ per chunk
-    if strategy == "ell" and spec.out == "v":
-        pack = ell if ell is not None else build_ell(g)
-        return _gspmm_ell(g, spec, pack, lhs_data, rhs_data)
+    # edge outputs are strategy-free: one gather per operand, ⊗, un-permute
+    if spec.out == "e":
+        lhs_val = _edge_val(g, spec.lhs, lhs_data)
+        rhs_val = (_edge_val(g, spec.rhs, rhs_data)
+                   if spec.rhs is not None else None)
+        msg = BINARY_OPS[spec.op](lhs_val, rhs_val)
+        return jnp.take(msg, g.eid_inv, axis=0)
 
-    if strategy == "onehot" and spec.out == "v":
-        return _gspmm_onehot(g, spec, tiles, lhs_data, rhs_data)
+    if spec.reduce == "none":
+        raise ValueError(f"{op_name}: copy-reduce to nodes needs a reducer")
 
-    if strategy == "pallas" and spec.out == "v":
+    runner = None
+    if planner.get_mode() == "autotune" and strategy == "auto":
+        def runner(s):
+            return gspmm(g, op_name, u=u, v=v, e=e, strategy=s,
+                         ell=ell, tiles=tiles, cache=cache)
+
+    plan = planner.plan_gspmm(g, spec, lhs_data, rhs_data,
+                              requested=strategy, cache=cache,
+                              ell=ell, tiles=tiles, runner=runner)
+    return _execute(g, spec, lhs_data, rhs_data, plan)
+
+
+def _execute(g: Graph, spec: BRSpec, lhs_data, rhs_data,
+             plan: planner.Plan) -> jnp.ndarray:
+    """Run one node-output BR with a resolved plan."""
+    if plan.strategy == "ell":
+        return _gspmm_ell(g, spec, plan.ell, lhs_data, rhs_data)
+    if plan.strategy == "onehot":
+        return _gspmm_onehot(g, spec, plan.tiles, lhs_data, rhs_data)
+    if plan.strategy == "pallas":
         from repro.kernels.dispatch import gspmm_pallas
-        return gspmm_pallas(g, spec, lhs_data, rhs_data, tiles=tiles)
+        return gspmm_pallas(g, spec, lhs_data, rhs_data, tiles=plan.tiles)
 
     # ---- generic path: per-edge messages then reduce
     lhs_val = _edge_val(g, spec.lhs, lhs_data)
@@ -157,23 +187,14 @@ def gspmm(g: Graph, op_name: str, *,
                if spec.rhs is not None else None)
     msg = BINARY_OPS[spec.op](lhs_val, rhs_val)
 
-    if spec.out == "e":
-        # un-permute to the caller's edge order (gather via eid_inv)
-        return jnp.take(msg, g.eid_inv, axis=0)
-
     if spec.out == "v":
         tgt, n_tgt, deg = g.dst, g.n_dst, g.in_degrees
-        sorted_ok = True
     else:  # 'u'
         msg = jnp.take(msg, g.perm_src, axis=0)
         tgt = jnp.take(g.src, g.perm_src)
         n_tgt, deg = g.n_src, g.out_degrees
-        sorted_ok = True
 
-    if spec.reduce == "none":
-        raise ValueError(f"{op_name}: copy-reduce to nodes needs a reducer")
-
-    if strategy == "push":
+    if plan.strategy == "push":
         return S.push_scatter(msg, tgt, n_tgt, spec.reduce, deg)
     # default: segment (Alg. 2)
     return S.pull_segment(msg, tgt, n_tgt, spec.reduce, deg)
@@ -201,11 +222,11 @@ def _gspmm_ell(g: Graph, spec: BRSpec, pack: ELLPack,
     return S.pull_ell_reduce(pack, msg_fn, spec.reduce, deg=g.in_degrees)
 
 
-def _gspmm_onehot(g: Graph, spec: BRSpec, tiles: Optional[TilePack],
+def _gspmm_onehot(g: Graph, spec: BRSpec, tiles: TilePack,
                   lhs_data, rhs_data) -> jnp.ndarray:
     """MXU one-hot SpMM path. Supports u_copy_{add,mean}_v and
-    u_mul_e_{add,mean}_v with scalar edge weights."""
-    pack = tiles if tiles is not None else build_tiles(g)
+    u_mul_e_{add,mean}_v with scalar edge weights (the planner's
+    ``supports()`` predicate gates dispatch onto this path)."""
     if spec.lhs != "u":
         raise ValueError("onehot strategy needs lhs on source nodes")
     w = None
@@ -213,10 +234,10 @@ def _gspmm_onehot(g: Graph, spec: BRSpec, tiles: Optional[TilePack],
         ew = rhs_data
         if ew.shape[-1] != 1:
             raise ValueError("onehot edge weights must be scalar per edge")
-        w = jnp.take(ew[:, 0], pack.eids, axis=0)  # (T, eb)
+        w = jnp.take(ew[:, 0], tiles.eids, axis=0)  # (T, eb)
     elif spec.op != "copy":
         raise ValueError(f"onehot strategy does not support ⊗={spec.op}")
-    return S.onehot_spmm(pack, lhs_data, spec.reduce, edge_weight=w,
+    return S.onehot_spmm(tiles, lhs_data, spec.reduce, edge_weight=w,
                          deg=g.in_degrees)
 
 
@@ -224,7 +245,7 @@ def _gspmm_onehot(g: Graph, spec: BRSpec, tiles: Optional[TilePack],
 # sugar
 # --------------------------------------------------------------------- #
 def copy_reduce(g: Graph, x: jnp.ndarray, reduce: str = "sum",
-                strategy: str = "segment", **kw) -> jnp.ndarray:
+                strategy: str = "auto", **kw) -> jnp.ndarray:
     """CR: ``u_copy_<reduce>_v`` (paper Eq. 3/4)."""
     red = {"sum": "add", "prod": "mul"}.get(reduce, reduce)
     return gspmm(g, f"u_copy_{red}_v", u=x, strategy=strategy, **kw)
@@ -232,7 +253,7 @@ def copy_reduce(g: Graph, x: jnp.ndarray, reduce: str = "sum",
 
 def binary_reduce(g: Graph, op_name: str, lhs: jnp.ndarray,
                   rhs: Optional[jnp.ndarray] = None,
-                  strategy: str = "segment", **kw) -> jnp.ndarray:
+                  strategy: str = "auto", **kw) -> jnp.ndarray:
     """Positional-operand flavour: operands assigned per the op name."""
     spec = parse_op(op_name)
     ops: Dict[str, jnp.ndarray] = {spec.lhs: lhs}

@@ -86,8 +86,12 @@ def ring_copy_reduce(mesh: Mesh, plan: RingPartition, x: jnp.ndarray,
         me = jax.lax.axis_index(axis)
         out = jnp.zeros((rows, d), x.dtype)
         # mark the accumulator as device-varying so the fori_loop carry
-        # type matches after ppermute (shard_map vma typing)
-        out = jax.lax.pvary(out, (axis,))
+        # type matches after ppermute (shard_map vma typing); pvary only
+        # exists on jax versions with explicit vma tracking — elsewhere
+        # the carry types already agree and no annotation is needed
+        pvary = getattr(jax.lax, "pvary", None)
+        if pvary is not None:
+            out = pvary(out, (axis,))
         block = xs
 
         def stage(s, carry):

@@ -26,16 +26,19 @@ __all__ = ["edge_softmax", "edge_softmax_fused"]
 
 
 def edge_softmax(g: Graph, logits: jnp.ndarray,
-                 strategy: str = "segment") -> jnp.ndarray:
+                 strategy: str = "auto", cache=None) -> jnp.ndarray:
     """Softmax over incoming edges of each destination node.
 
     ``logits``: (n_edges, H) in the caller's edge order. Returns the same
-    shape/order. Composed from the exact BR configs the paper profiles.
+    shape/order. Composed from the exact BR configs the paper profiles;
+    the two node-output reductions route through the planner (pass
+    ``cache`` to reuse a per-graph :class:`PlanCache` inside ``jit``).
     """
-    maxv = gspmm(g, "e_copy_max_v", e=logits, strategy=strategy)
+    maxv = gspmm(g, "e_copy_max_v", e=logits, strategy=strategy,
+                 cache=cache)
     shifted = gspmm(g, "e_sub_v_copy_e", e=logits, v=maxv, strategy=strategy)
     ex = jnp.exp(shifted)
-    z = gspmm(g, "e_copy_add_v", e=ex, strategy=strategy)
+    z = gspmm(g, "e_copy_add_v", e=ex, strategy=strategy, cache=cache)
     return gspmm(g, "e_div_v_copy_e", e=ex, v=z, strategy=strategy)
 
 

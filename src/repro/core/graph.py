@@ -16,7 +16,6 @@ row so edge features never need reordering on the user side.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Tuple
 
 import jax

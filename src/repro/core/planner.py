@@ -1,0 +1,516 @@
+"""Unified execution-plan layer for the BR/CR lattice.
+
+The paper's speedups come from *transparently* swapping aggregation
+implementations (push → segment → blocked pull → fused kernels) under
+one API — DGL users never pick a kernel, the framework does. This module
+is that selection layer for the reproduction:
+
+* :class:`GraphStats` — host-side statistics of a :class:`Graph`
+  (edge count, degree moments, skew, ELL padding estimate) computed once
+  per graph. They are plain Python numbers, so they travel through
+  ``jit`` as *static* pytree aux data.
+* :class:`PlanCache` — per-graph memoized packs (``ELLPack`` /
+  ``TilePack`` / uniform ELL) plus the stats and any autotuned
+  decisions. Keyed on the ``Graph`` object in a process-wide weak
+  registry (:func:`get_plan_cache`), so each pack is built at most once
+  per process per graph. Registered as a pytree: the pack arrays are
+  children (traceable through ``jit``), the stats are static aux.
+* :func:`plan_gspmm` — the planner proper: given a graph, a parsed
+  ``BRSpec`` and operand shapes, it picks an execution strategy via an
+  explicit cost model (see :func:`estimate_cost` and DESIGN.md §4), or
+  measures candidates once and caches the winner when autotune mode is
+  on. Pinned strategies that do not support a spec *fall back* down the
+  chain ``pallas → onehot → ell → segment`` (with a one-time warning)
+  instead of raising.
+
+Every decision is recorded in a process-wide plan log
+(:func:`plan_log`) so benchmarks can report which plan served each op.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+import warnings
+import weakref
+from collections import Counter
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph
+from .tiling import (ELLClass, ELLPack, TilePack, build_ell,
+                     build_ell_uniform, build_tiles)
+
+__all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
+           "compute_stats", "estimate_cost", "plan_gspmm", "supports",
+           "plan_log", "clear_plan_log", "last_plan", "pack_build_totals",
+           "set_mode", "get_mode", "STRATEGIES", "FALLBACK_CHAIN"]
+
+STRATEGIES = ("push", "segment", "ell", "onehot", "pallas")
+
+# Soft-fallback order for unsupported specs: most specialized first.
+FALLBACK_CHAIN = ("pallas", "onehot", "ell", "segment")
+
+# Strategies the auto mode considers (push is the pinned baseline only).
+_AUTO_CANDIDATES = ("pallas", "onehot", "ell", "segment")
+
+_DEFAULT_ELL_CAP = 64
+_DEFAULT_TILE_GEOM = (128, 128, 256)  # (bm, bk, eb) — build_tiles defaults
+
+
+def _is_traced(x: Any) -> bool:
+    return isinstance(x, jax.core.Tracer)
+
+
+def graph_is_traced(g: Graph) -> bool:
+    """True when ``g``'s index arrays are jit tracers (inside a trace)."""
+    return _is_traced(g.src)
+
+
+# --------------------------------------------------------------------- #
+# graph statistics
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class GraphStats:
+    """Static, hashable summary of a graph — the planner's features."""
+    n_src: int
+    n_dst: int
+    n_edges: int
+    avg_in_deg: float
+    max_in_deg: int
+    skew: float               # max_in_deg / avg_in_deg
+    ell_padded_slots: int     # total (row, slot) cells of the bucketed ELL
+    ell_n_classes: int        # number of distinct power-of-two widths
+    pad_ratio: float          # ell_padded_slots / n_edges
+
+
+def _ell_padding(deg: np.ndarray, cap: int) -> Tuple[int, int]:
+    """Padded-slot count + class count of the degree-bucketed ELL,
+    estimated from the in-degree histogram without building the pack."""
+    deg = deg[deg > 0]
+    if deg.size == 0:
+        return 0, 0
+    full, rem = np.divmod(deg, cap)
+    padded = int(full.sum()) * cap
+    widths = set()
+    rem = rem[rem > 0]
+    if rem.size:
+        w = np.where(rem > 1,
+                     (2 ** np.ceil(np.log2(rem))).astype(np.int64),
+                     np.int64(1))
+        padded += int(w.sum())
+        widths.update(int(x) for x in np.unique(w))
+    if full.any():
+        widths.add(cap)
+    return padded, len(widths)
+
+
+def compute_stats(g: Graph, ell_cap: int = _DEFAULT_ELL_CAP) -> GraphStats:
+    """Host-side stats; requires a concrete (non-traced) graph."""
+    deg = np.asarray(g.in_degrees, dtype=np.int64)
+    n_edges = int(g.n_edges)
+    avg = n_edges / max(g.n_dst, 1)
+    mx = int(deg.max()) if deg.size else 0
+    padded, n_cls = _ell_padding(deg, ell_cap)
+    return GraphStats(
+        n_src=int(g.n_src), n_dst=int(g.n_dst), n_edges=n_edges,
+        avg_in_deg=float(avg), max_in_deg=mx,
+        skew=float(mx / max(avg, 1e-9)),
+        ell_padded_slots=int(padded), ell_n_classes=int(n_cls),
+        pad_ratio=float(padded / max(n_edges, 1)))
+
+
+# --------------------------------------------------------------------- #
+# per-graph pack cache
+# --------------------------------------------------------------------- #
+_PACK_BUILDS: Counter = Counter()   # process-wide build counters (tests)
+
+
+def pack_build_totals() -> Dict[str, int]:
+    """How many packs of each kind were *built* (not reused) so far."""
+    return dict(_PACK_BUILDS)
+
+
+@jax.tree_util.register_pytree_node_class
+class PlanCache:
+    """Lazily-built, memoized packs + stats for one :class:`Graph`.
+
+    Pack arrays are pytree children so a cache carried by a model bundle
+    flows through ``jit``; the stats are static aux, which lets the
+    planner run its full cost model inside a trace. Building only
+    happens on the concrete (host) side — inside a trace, a pack that
+    was never built is simply unavailable and the planner plans around
+    it.
+    """
+
+    def __init__(self, ell: Optional[ELLPack] = None,
+                 tiles: Optional[TilePack] = None,
+                 stats: Optional[GraphStats] = None,
+                 graph: Optional[Graph] = None,
+                 ell_cap: int = _DEFAULT_ELL_CAP):
+        self._ell = ell
+        self._tiles = tiles
+        self.stats = stats
+        self.ell_cap = ell_cap
+        self._gref = weakref.ref(graph) if graph is not None else None
+        # host-side keyed memos (not part of the pytree)
+        self._ell_by_cap: Dict[int, ELLPack] = {}
+        self._tiles_by_geom: Dict[Tuple[int, int, int], TilePack] = {}
+        self._uniform: Dict[int, ELLClass] = {}
+        self._autotuned: Dict[Tuple, str] = {}
+
+    # -- pytree protocol ------------------------------------------------
+    def tree_flatten(self):
+        return (self._ell, self._tiles), (self.stats, self.ell_cap)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        ell, tiles = children
+        return cls(ell=ell, tiles=tiles, stats=aux[0], ell_cap=aux[1])
+
+    # -- pack access -----------------------------------------------------
+    def _graph(self) -> Optional[Graph]:
+        g = self._gref() if self._gref is not None else None
+        if g is None or graph_is_traced(g):
+            return None
+        return g
+
+    def peek(self, kind: str):
+        """Return an already-built pack or None (never builds)."""
+        return {"ell": self._ell, "tiles": self._tiles}[kind]
+
+    def set_ell_cap(self, cap: int) -> None:
+        """Change the default ELL width cap. Re-slots any pack built at
+        the old cap into the keyed memo (never hands out a pack with
+        the wrong blocking) and recomputes the padding stats so the
+        cost model describes the cap actually in use."""
+        if cap == self.ell_cap:
+            return
+        if self._ell is not None:
+            self._ell_by_cap[self.ell_cap] = self._ell
+            self._ell = self._ell_by_cap.pop(cap, None)
+        self.ell_cap = cap
+        g = self._graph()
+        if g is not None:
+            self.stats = compute_stats(g, cap)
+
+    def ell(self, width_cap: Optional[int] = None) -> Optional[ELLPack]:
+        cap = self.ell_cap if width_cap is None else width_cap
+        if cap == self.ell_cap:
+            if self._ell is None:
+                g = self._graph()
+                if g is None:
+                    return None
+                self._ell = build_ell(g, cap)
+                _PACK_BUILDS["ell"] += 1
+            return self._ell
+        if cap not in self._ell_by_cap:
+            g = self._graph()
+            if g is None:
+                return None
+            self._ell_by_cap[cap] = build_ell(g, cap)
+            _PACK_BUILDS["ell"] += 1
+        return self._ell_by_cap[cap]
+
+    def tiles(self, bm: int = 128, bk: int = 128, eb: int = 256
+              ) -> Optional[TilePack]:
+        geom = (bm, bk, eb)
+        if geom == _DEFAULT_TILE_GEOM:
+            if self._tiles is None:
+                g = self._graph()
+                if g is None:
+                    return None
+                self._tiles = build_tiles(g, bm, bk, eb)
+                _PACK_BUILDS["tiles"] += 1
+            return self._tiles
+        if geom not in self._tiles_by_geom:
+            g = self._graph()
+            if g is None:
+                return None
+            self._tiles_by_geom[geom] = build_tiles(g, bm, bk, eb)
+            _PACK_BUILDS["tiles"] += 1
+        return self._tiles_by_geom[geom]
+
+    def ell_uniform(self, width: int) -> Optional[ELLClass]:
+        if width not in self._uniform:
+            g = self._graph()
+            if g is None:
+                return None
+            self._uniform[width] = build_ell_uniform(g, width)
+            _PACK_BUILDS["ell_uniform"] += 1
+        return self._uniform[width]
+
+    # -- planning helpers -------------------------------------------------
+    def prefers_ell(self, d: int) -> bool:
+        """True when the cost model ranks blocked pull above segment."""
+        if self.stats is None:
+            return False
+        return (estimate_cost("ell", self.stats, d)
+                < estimate_cost("segment", self.stats, d))
+
+
+_CACHES: "weakref.WeakKeyDictionary[Graph, PlanCache]" = \
+    weakref.WeakKeyDictionary()
+
+
+def get_plan_cache(g: Graph) -> PlanCache:
+    """Process-wide cache registry: one :class:`PlanCache` per graph."""
+    if graph_is_traced(g):
+        raise ValueError("get_plan_cache needs a concrete Graph; inside "
+                         "jit, pass the cache in explicitly")
+    cache = _CACHES.get(g)
+    if cache is None:
+        cache = PlanCache(stats=compute_stats(g), graph=g)
+        _CACHES[g] = cache
+    return cache
+
+
+# --------------------------------------------------------------------- #
+# cost model (explicit — see DESIGN.md §4)
+# --------------------------------------------------------------------- #
+# Relative cost per effective element-op (lower = faster). The numbers
+# encode the paper's qualitative ordering, not absolute hardware rates:
+# scatter (push) serializes, segment reduce is the vendor baseline,
+# blocked pull streams densely, and the MXU formulations only pay off on
+# a real TPU (on CPU the Pallas kernels run in interpret mode).
+_THROUGHPUT = {
+    "cpu": {"push": 6.0, "segment": 1.0, "ell": 0.35,
+            "onehot": 64.0, "pallas": 512.0},
+    "tpu": {"push": 8.0, "segment": 1.5, "ell": 0.8,
+            "onehot": 0.5, "pallas": 0.25},
+}
+# Fixed per-call overhead (dispatch + padding setup), in element-ops.
+_FIXED = {"push": 0.0, "segment": 0.0, "ell": 2e4,
+          "onehot": 5e4, "pallas": 5e4}
+_ELL_CLASS_OVERHEAD = 1.5e3     # per degree class: one segment combine
+_TILE_EDGE_BUDGET = 256         # eb — edge slots per tile bucket
+
+
+def estimate_cost(strategy: str, stats: GraphStats, d: int,
+                  backend: Optional[str] = None) -> float:
+    """Estimated execution cost of one gspmm call, in element-ops."""
+    backend = backend or jax.default_backend()
+    tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])[strategy]
+    dd = max(int(d), 1)
+    if strategy in ("push", "segment"):
+        work = stats.n_edges * dd
+    elif strategy == "ell":
+        work = stats.ell_padded_slots * dd
+    else:  # onehot / pallas: padded tile-bucket slots (lower bound on T)
+        n_buckets = max(1, -(-stats.n_edges // _TILE_EDGE_BUDGET))
+        work = n_buckets * _TILE_EDGE_BUDGET * dd
+    cost = tp * work + _FIXED[strategy]
+    if strategy == "ell":
+        cost += _ELL_CLASS_OVERHEAD * stats.ell_n_classes
+    return cost
+
+
+# --------------------------------------------------------------------- #
+# spec support predicates
+# --------------------------------------------------------------------- #
+# Binary ops the fused Pallas BR kernel implements (kernels/binary_reduce).
+_PALLAS_BINOPS = ("add", "sub", "mul", "div")
+
+
+def supports(strategy: str, spec, lhs_data, rhs_data) -> bool:
+    """Can ``strategy`` execute this node-output spec at all?
+
+    ``spec`` is a parsed ``BRSpec`` (duck-typed to avoid a circular
+    import); edge-output specs never reach the planner (they are
+    strategy-free gathers).
+    """
+    red = spec.reduce
+    if strategy in ("push", "segment"):
+        return spec.out in ("u", "v") and red != "none"
+    if spec.out != "v" or red == "none":
+        return False
+    if strategy == "ell":
+        return True     # any ⊗, any operand targets, all reducers
+    # MXU formulations: rank-2 operands only, sum/mean only
+    rank_ok = (lhs_data.ndim == 2
+               and (rhs_data is None or rhs_data.ndim == 2))
+    if not rank_ok or red not in ("sum", "mean"):
+        return False
+    if strategy == "onehot":
+        if spec.lhs != "u":
+            return False
+        if spec.op == "copy":
+            return True
+        return (spec.op == "mul" and spec.rhs == "e"
+                and rhs_data.shape[-1] == 1)
+    if strategy == "pallas":
+        if spec.op == "copy" and spec.lhs in ("u", "e"):
+            return True
+        if (spec.lhs == "u" and spec.rhs == "e"
+                and spec.op in _PALLAS_BINOPS):
+            return True
+        return (spec.lhs == "e" and spec.rhs == "u"
+                and spec.op in ("add", "mul"))
+    raise ValueError(f"unknown strategy {strategy!r}")
+
+
+# --------------------------------------------------------------------- #
+# plan log + fallback warnings
+# --------------------------------------------------------------------- #
+_PLAN_LOG: Dict[Tuple[str, str], Counter] = {}
+_LAST_PLAN: Dict[Tuple[str, str], str] = {}
+_WARNED: set = set()
+
+
+def _record(spec_name: str, requested: str, chosen: str) -> None:
+    key = (spec_name, requested)
+    _PLAN_LOG.setdefault(key, Counter())[chosen] += 1
+    _LAST_PLAN[key] = chosen
+
+
+def plan_log() -> Dict[Tuple[str, str], Dict[str, int]]:
+    """(op name, requested strategy) -> {chosen strategy: count}."""
+    return {k: dict(v) for k, v in _PLAN_LOG.items()}
+
+
+def clear_plan_log() -> None:
+    _PLAN_LOG.clear()
+    _LAST_PLAN.clear()
+
+
+def last_plan(spec_name: str, requested: str = "auto") -> Optional[str]:
+    """Most-recently chosen strategy for (op, requested), or None."""
+    return _LAST_PLAN.get((spec_name, requested))
+
+
+def _warn_fallback(spec_name: str, requested: str, chosen: str) -> None:
+    key = (spec_name, requested)
+    if key in _WARNED:
+        return
+    _WARNED.add(key)
+    warnings.warn(f"strategy {requested!r} does not support {spec_name!r}"
+                  f"; falling back to {chosen!r}", stacklevel=3)
+
+
+# --------------------------------------------------------------------- #
+# planner mode (cost model vs measure-and-cache autotune)
+# --------------------------------------------------------------------- #
+_MODE = os.environ.get("REPRO_PLANNER_MODE", "cost")
+
+
+def set_mode(mode: str) -> None:
+    """'cost' (default) or 'autotune' (measure candidates once, cache)."""
+    global _MODE
+    if mode not in ("cost", "autotune"):
+        raise ValueError(f"unknown planner mode {mode!r}")
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+def _measure(runner: Callable[[str], Any], strategy: str) -> float:
+    jax.block_until_ready(runner(strategy))     # warmup/compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(runner(strategy))
+    return time.perf_counter() - t0
+
+
+# --------------------------------------------------------------------- #
+# the planner
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass
+class Plan:
+    """Resolved execution plan for one gspmm call."""
+    strategy: str
+    requested: str
+    reason: str                     # 'pinned' | 'cost' | 'autotune' | ...
+    ell: Optional[ELLPack] = None
+    tiles: Optional[TilePack] = None
+
+
+def plan_gspmm(g: Graph, spec, lhs_data, rhs_data, *,
+               requested: str = "auto",
+               cache: Optional[PlanCache] = None,
+               ell: Optional[ELLPack] = None,
+               tiles: Optional[TilePack] = None,
+               runner: Optional[Callable[[str], Any]] = None) -> Plan:
+    """Pick the execution strategy (and packs) for one node-output BR.
+
+    ``requested='auto'`` consults the cost model (or the autotune cache);
+    an explicitly pinned strategy is honored when it supports the spec
+    and falls back down :data:`FALLBACK_CHAIN` otherwise. ``runner``
+    (optional) executes the call with a pinned strategy — used by
+    autotune mode to measure candidates.
+    """
+    concrete = not graph_is_traced(g)
+    if cache is None and concrete:
+        cache = get_plan_cache(g)
+    stats = cache.stats if cache is not None else None
+
+    def pack_available(strategy: str) -> bool:
+        if strategy in ("push", "segment"):
+            return True
+        kind = "ell" if strategy == "ell" else "tiles"
+        explicit = ell if kind == "ell" else tiles
+        if explicit is not None:
+            return True
+        if cache is not None and cache.peek(kind) is not None:
+            return True
+        # buildable on the host side only
+        return concrete and cache is not None
+
+    def ok(strategy: str) -> bool:
+        return (supports(strategy, spec, lhs_data, rhs_data)
+                and pack_available(strategy))
+
+    if requested == "auto":
+        chosen, reason = _plan_auto(spec, lhs_data, rhs_data, stats, ok,
+                                    cache, runner, concrete)
+    else:
+        if requested not in STRATEGIES:
+            raise ValueError(f"unknown strategy {requested!r}; expected "
+                             f"one of {STRATEGIES + ('auto',)}")
+        if ok(requested):
+            chosen, reason = requested, "pinned"
+        else:
+            chain = (FALLBACK_CHAIN[FALLBACK_CHAIN.index(requested) + 1:]
+                     if requested in FALLBACK_CHAIN else ("segment",))
+            chosen = next((s for s in chain if ok(s)), "segment")
+            reason = f"fallback({requested})"
+            _warn_fallback(spec.name, requested, chosen)
+
+    plan = Plan(strategy=chosen, requested=requested, reason=reason)
+    if chosen == "ell":
+        plan.ell = ell if ell is not None else cache.ell()
+    elif chosen in ("onehot", "pallas"):
+        plan.tiles = tiles if tiles is not None else cache.tiles()
+    _record(spec.name, requested, chosen)
+    return plan
+
+
+def _plan_auto(spec, lhs_data, rhs_data, stats, ok, cache, runner,
+               concrete) -> Tuple[str, str]:
+    if stats is None:
+        # traced graph with no cache: only static sizes are known, and
+        # no pack can be built — segment is always valid and collision-free
+        return "segment", "no-stats(traced)"
+    d = int(np.prod(lhs_data.shape[1:])) if lhs_data.ndim > 1 else 1
+    candidates = [s for s in _AUTO_CANDIDATES if ok(s)]
+    if not candidates:           # out == 'u' etc. → segment path
+        return "segment", "only-generic"
+    operands_concrete = (not _is_traced(lhs_data)
+                         and not _is_traced(rhs_data)
+                         if rhs_data is not None else
+                         not _is_traced(lhs_data))
+    if (_MODE == "autotune" and concrete and operands_concrete
+            and runner is not None and cache is not None):
+        key = (spec.name, d, str(lhs_data.dtype),
+               None if rhs_data is None else rhs_data.shape[-1])
+        winner = cache._autotuned.get(key)
+        if winner is None:
+            winner = min(candidates,
+                         key=lambda s: _measure(runner, s))
+            cache._autotuned[key] = winner
+        return winner, "autotune"
+    chosen = min(candidates, key=lambda s: estimate_cost(s, stats, d))
+    return chosen, "cost"

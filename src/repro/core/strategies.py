@@ -20,7 +20,6 @@ Every strategy computes the same mathematical object:
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable, Optional
 
 import jax

@@ -24,7 +24,8 @@ import jax
 import jax.numpy as jnp
 
 from .graph import Graph, from_coo, reverse
-from .tiling import ELLPack, build_ell
+from .planner import get_plan_cache
+from .tiling import ELLPack
 from . import strategies as S
 
 __all__ = ["TrainingGraph", "make_training_graph", "weighted_copy_reduce"]
@@ -48,9 +49,13 @@ class TrainingGraph:
 
 
 def make_training_graph(g: Graph, width_cap: int = 64) -> TrainingGraph:
+    """Packs come from the per-graph :class:`PlanCache`, so the forward
+    ELL is shared with direct ``gspmm(strategy="auto"/"ell")`` calls and
+    built at most once per process."""
     g_rev = reverse(g)
-    return TrainingGraph(g=g, g_rev=g_rev, ell=build_ell(g, width_cap),
-                         ell_rev=build_ell(g_rev, width_cap))
+    return TrainingGraph(g=g, g_rev=g_rev,
+                         ell=get_plan_cache(g).ell(width_cap),
+                         ell_rev=get_plan_cache(g_rev).ell(width_cap))
 
 
 def _pull_weighted(g: Graph, pack: ELLPack, x, w):

@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.graph import Graph
-from ...core.tiling import TilePack, build_tiles
+from ...core.planner import get_plan_cache
+from ...core.tiling import TilePack
 from ..common import should_interpret
 from .kernel import binary_reduce_pallas_call
 
@@ -58,7 +59,7 @@ def binary_reduce(g: Graph, B: jnp.ndarray, E: jnp.ndarray,
     """
     if reduce_op not in ("sum", "mean"):
         raise ValueError("pallas binary_reduce supports sum/mean")
-    pack = tiles if tiles is not None else build_tiles(g)
+    pack = tiles if tiles is not None else get_plan_cache(g).tiles()
     d = B.shape[-1]
     E = E.reshape(E.shape[0], -1)
     if E.shape[1] == 1 and d != 1:

@@ -1,4 +1,9 @@
-"""Dispatch from BRSpec (core lattice) onto the Pallas kernels."""
+"""Dispatch from BRSpec (core lattice) onto the Pallas kernels.
+
+Spec support is decided up front by ``repro.core.planner.supports()``
+(the planner falls back to onehot/ell/segment for anything not covered
+here); the ``NotImplementedError`` at the bottom is a safety net for
+callers that bypass the planner."""
 from __future__ import annotations
 
 from typing import Optional
@@ -43,4 +48,5 @@ def gspmm_pallas(g, spec: BRSpec, lhs_data, rhs_data,
                              reduce_op=red, tiles=tiles)
 
     raise NotImplementedError(
-        f"no pallas kernel for {spec.name}; use strategy='segment'")
+        f"no pallas kernel for {spec.name}; the planner should have "
+        f"fallen back — use strategy='auto' or 'segment'")

@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.graph import Graph
-from ...core.tiling import ELLClass, build_ell_uniform
+from ...core.planner import get_plan_cache
+from ...core.tiling import ELLClass
 from ..common import should_interpret
 from .kernel import edge_softmax_pallas_call
 
@@ -63,7 +64,7 @@ def edge_softmax(g: Graph, logits: jnp.ndarray,
     x = logits[:, None] if squeeze else logits
     if ell is None:
         max_deg = int(jnp.max(g.in_degrees)) if g.n_dst else 1
-        ell = build_ell_uniform(g, max(max_deg, 1))
+        ell = get_plan_cache(g).ell_uniform(max(max_deg, 1))
     elif int(jnp.max(g.in_degrees)) > ell.width:
         raise ValueError("pack splits rows; edge_softmax needs "
                          "width >= max in-degree")

@@ -8,7 +8,8 @@ import jax
 import jax.numpy as jnp
 
 from ...core.graph import Graph
-from ...core.tiling import TilePack, build_tiles
+from ...core.planner import get_plan_cache
+from ...core.tiling import TilePack
 from ..common import should_interpret
 from .kernel import spmm_pallas_call
 
@@ -59,7 +60,7 @@ def spmm(g: Graph, B: jnp.ndarray, reduce_op: str = "sum",
     """
     if reduce_op not in ("sum", "mean"):
         raise ValueError("pallas spmm supports sum/mean (see DESIGN.md)")
-    pack = tiles if tiles is not None else build_tiles(g)
+    pack = tiles if tiles is not None else get_plan_cache(g).tiles()
     wt = None
     if weight is not None:
         wt = jnp.take(weight.reshape(-1), pack.eids, axis=0)  # (T, eb)

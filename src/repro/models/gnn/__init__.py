@@ -1,9 +1,12 @@
 """The seven GNN applications the paper profiles (paper §5.1).
 
 Each model is a pair of pure functions ``init(key, ...) -> params`` and
-``forward(params, bundle, x, ...) -> logits`` taking an aggregation
-``strategy`` so the paper's baseline ('push') and optimized ('ell' /
-'pallas') paths are swappable per run — that switch IS the experiment.
+``forward(params, bundle, x, ...) -> logits``. Aggregation defaults to
+``strategy='auto'``: the planner (``repro.core.planner``) picks the
+execution strategy per op from graph statistics and memoized packs.
+Pinning ``strategy`` ('push' baseline vs 'ell'/'segment'/'pallas'
+optimized) reproduces the paper's experiments — that switch IS the
+experiment.
 """
 from .common import GraphBundle, make_bundle
 from . import gcn, sage, gat, rgcn, monet, gcmc, lgnn

@@ -1,4 +1,4 @@
-"""Shared GNN plumbing: graph bundles with precomputed packs."""
+"""Shared GNN plumbing: graph bundles riding on the planner's PlanCache."""
 from __future__ import annotations
 
 import dataclasses
@@ -9,28 +9,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from ...core.graph import Graph
-from ...core.tiling import ELLPack, TilePack, build_ell, build_tiles
+from ...core.planner import PlanCache, get_plan_cache
+from ...core.tiling import ELLPack, TilePack
 from ...core.training_ops import TrainingGraph, make_training_graph
 
 
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass(frozen=True, eq=False)
 class GraphBundle:
-    """Graph + blocked packs + precomputed normalization weights.
+    """Graph + its PlanCache + precomputed normalization weights.
 
-    ``tg`` carries the reverse-graph packs so weighted Copy-Reduce runs
-    blocked-pull in the BACKWARD pass too (core/training_ops.py).
-    ``mean_norm``: per-edge 1/deg_in(dst) — mean aggregation as weighted CR.
+    ``cache`` is the graph's process-wide :class:`PlanCache`: its packs
+    are pytree children (so they cross ``jit`` as traced arrays) and its
+    stats are static aux (so the planner can run its cost model inside a
+    jitted train step). ``tg`` carries the reverse-graph packs so
+    weighted Copy-Reduce runs blocked-pull in the BACKWARD pass too
+    (core/training_ops.py). ``mean_norm``: per-edge 1/deg_in(dst) —
+    mean aggregation as weighted CR.
     """
     g: Graph
-    ell: Optional[ELLPack]
-    tiles: Optional[TilePack]
+    cache: PlanCache
     gcn_norm: Optional[jnp.ndarray]  # (n_edges,) 1/sqrt(d_u d_v), caller order
     tg: Optional[TrainingGraph]
     mean_norm: Optional[jnp.ndarray]  # (n_edges,) 1/deg_in(dst)
 
+    # back-compat views onto the cache (never build)
+    @property
+    def ell(self) -> Optional[ELLPack]:
+        return self.cache.peek("ell")
+
+    @property
+    def tiles(self) -> Optional[TilePack]:
+        return self.cache.peek("tiles")
+
+    def use_training_graph(self, strategy: str, d: int) -> bool:
+        """Route through the custom-VJP blocked pull (fwd AND bwd)?
+        Yes when ell is pinned, or under auto when the cost model
+        prefers blocked pull at feature width ``d``."""
+        return self.tg is not None and (
+            strategy == "ell"
+            or (strategy == "auto" and self.cache.prefers_ell(d)))
+
     def tree_flatten(self):
-        return ((self.g, self.ell, self.tiles, self.gcn_norm, self.tg,
+        return ((self.g, self.cache, self.gcn_norm, self.tg,
                  self.mean_norm), ())
 
     @classmethod
@@ -40,7 +61,9 @@ class GraphBundle:
 
 def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
                 ell_width: int = 64, training: bool = True) -> GraphBundle:
-    """Build packs once per graph (host-side preprocessing)."""
+    """Assemble a bundle; packs are pulled from (and memoized in) the
+    graph's PlanCache, so they are built at most once per process even
+    across bundles and direct ``gspmm`` calls."""
     deg_in = np.asarray(g.in_degrees, np.float64)
     deg_out = np.asarray(g.out_degrees, np.float64)
     src = np.asarray(g.src)
@@ -53,22 +76,17 @@ def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
     w_caller[np.asarray(g.eid)] = w
     m_caller = np.zeros_like(mean_w)
     m_caller[np.asarray(g.eid)] = mean_w
+    cache = get_plan_cache(g)
+    cache.set_ell_cap(ell_width)
+    if ell or training:
+        cache.ell()            # force-build so it crosses jit boundaries
+    if tiles:
+        cache.tiles()
     tg = make_training_graph(g, ell_width) if training else None
     return GraphBundle(
         g=g,
-        ell=(tg.ell if tg is not None else
-             (build_ell(g, ell_width) if ell else None)),
-        tiles=build_tiles(g) if tiles else None,
+        cache=cache,
         gcn_norm=jnp.asarray(w_caller, jnp.float32),
         tg=tg,
         mean_norm=jnp.asarray(m_caller, jnp.float32),
     )
-
-
-def strategy_kwargs(bundle: GraphBundle, strategy: str) -> dict:
-    kw = {"strategy": strategy}
-    if strategy == "ell":
-        kw["ell"] = bundle.ell
-    elif strategy in ("onehot", "pallas"):
-        kw["tiles"] = bundle.tiles
-    return kw

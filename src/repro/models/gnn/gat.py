@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from ...core.binary_reduce import gspmm
 from ...core.edge_softmax import edge_softmax, edge_softmax_fused
 from ...substrate.nn import glorot, dropout, leaky_relu
-from .common import GraphBundle, strategy_kwargs
+from .common import GraphBundle
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int, n_heads: int = 4,
@@ -40,27 +40,26 @@ def init(key, d_in: int, d_hidden: int, n_classes: int, n_heads: int = 4,
 def _gat_layer(lyr, bundle: GraphBundle, h, heads: int, out: int, *,
                strategy: str, fused_softmax: bool):
     g = bundle.g
-    kw = strategy_kwargs(bundle, strategy)
     z = (h @ lyr["w"]).reshape(-1, heads, out)           # (n, H, F)
     el = jnp.sum(z * lyr["attn_l"], axis=-1)             # (n, H)
     er = jnp.sum(z * lyr["attn_r"], axis=-1)
-    # u_add_v_copy_e: per-edge logits (the paper's config)
-    logits = gspmm(g, "u_add_v_copy_e", u=el, v=er, strategy="segment")
+    # u_add_v_copy_e: per-edge logits (strategy-free edge output)
+    logits = gspmm(g, "u_add_v_copy_e", u=el, v=er)
     logits = leaky_relu(logits)
     if fused_softmax:
         alpha = edge_softmax_fused(g, logits)            # (nnz, H)
     else:
-        alpha = edge_softmax(g, logits, strategy="segment")
-    # u_mul_e_add_v with per-head scalar α: 3-D broadcast on segment/ell
-    agg_strategy = strategy if strategy in ("segment", "ell", "push") \
-        else "segment"
-    kw3 = strategy_kwargs(bundle, agg_strategy)
-    out_feat = gspmm(g, "u_mul_e_add_v", u=z, e=alpha[:, :, None], **kw3)
+        alpha = edge_softmax(g, logits, strategy=strategy,
+                             cache=bundle.cache)
+    # u_mul_e_add_v with per-head scalar α is a 3-D broadcast: the
+    # planner keeps it on segment/ell (pallas/onehot are rank-2 only)
+    out_feat = gspmm(g, "u_mul_e_add_v", u=z, e=alpha[:, :, None],
+                     strategy=strategy, cache=bundle.cache)
     return out_feat.reshape(-1, heads * out)
 
 
 def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
-            strategy: str = "segment", train: bool = False, rng=None,
+            strategy: str = "auto", train: bool = False, rng=None,
             drop: float = 0.4, fused_softmax: bool = False) -> jnp.ndarray:
     h = x
     n_layers = len(params["layers"])

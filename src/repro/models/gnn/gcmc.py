@@ -47,7 +47,7 @@ def init(key, d_user: int, d_item: int, d_hidden: int, d_out: int,
 
 def encode(params: Dict, fwd: Sequence[Graph], bwd: Sequence[Graph],
            x_user: jnp.ndarray, x_item: jnp.ndarray, *,
-           strategy: str = "segment") -> Tuple[jnp.ndarray, jnp.ndarray]:
+           strategy: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
     levels = len(fwd)
     h_item = 0.0
     h_user = 0.0
@@ -75,7 +75,7 @@ def decode(params: Dict, g_all: Graph, h_user: jnp.ndarray,
 
 
 def forward(params: Dict, graphs, x_user, x_item, *,
-            strategy: str = "segment") -> jnp.ndarray:
+            strategy: str = "auto") -> jnp.ndarray:
     fwd, bwd, g_all = graphs
     hu, hi = encode(params, fwd, bwd, x_user, x_item, strategy=strategy)
     return decode(params, g_all, hu, hi)

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 from ...core.binary_reduce import gspmm
 from ...core.training_ops import weighted_copy_reduce
 from ...substrate.nn import linear_init, linear_apply, dropout
-from .common import GraphBundle, strategy_kwargs
+from .common import GraphBundle
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int,
@@ -29,9 +29,8 @@ def init(key, d_in: int, d_hidden: int, n_classes: int,
 
 
 def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
-            strategy: str = "segment", train: bool = False,
+            strategy: str = "auto", train: bool = False,
             rng=None, drop: float = 0.5) -> jnp.ndarray:
-    kw = strategy_kwargs(bundle, strategy)
     h = x
     n_layers = len(params["layers"])
     for i, lyr in enumerate(params["layers"]):
@@ -39,12 +38,13 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
             rng, sub = jax.random.split(rng)
             h = dropout(sub, h, drop, train)
         h = linear_apply(lyr, h)
-        if strategy == "ell" and bundle.tg is not None:
+        if bundle.use_training_graph(strategy, h.shape[-1]):
             # blocked pull in fwd AND bwd (custom VJP over the reverse pack)
             h = weighted_copy_reduce(bundle.tg, h, bundle.gcn_norm[:, None])
         else:
             h = gspmm(bundle.g, "u_mul_e_add_v", u=h,
-                      e=bundle.gcn_norm[:, None], **kw)
+                      e=bundle.gcn_norm[:, None], strategy=strategy,
+                      cache=bundle.cache)
         if i < n_layers - 1:
             h = jax.nn.relu(h)
     return h

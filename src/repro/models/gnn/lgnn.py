@@ -74,7 +74,7 @@ def init(key, n_nodes: int, d_emb: int, d_hidden: int, n_classes: int,
 
 
 def forward(params: Dict, g: Graph, lg: Graph, *,
-            strategy: str = "segment", train: bool = True
+            strategy: str = "auto", train: bool = True
             ) -> Tuple[jnp.ndarray, Dict]:
     """Returns (node logits, params-with-updated-BN-stats)."""
     n = g.n_dst

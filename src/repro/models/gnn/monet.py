@@ -13,7 +13,7 @@ import jax.numpy as jnp
 
 from ...core.binary_reduce import gspmm
 from ...substrate.nn import linear_init, linear_apply
-from .common import GraphBundle, strategy_kwargs
+from .common import GraphBundle
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int,
@@ -44,9 +44,8 @@ def edge_pseudo_coords(bundle: GraphBundle) -> jnp.ndarray:
 
 
 def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
-            strategy: str = "segment", train: bool = False,
+            strategy: str = "auto", train: bool = False,
             rng=None) -> jnp.ndarray:
-    kw = strategy_kwargs(bundle, strategy)
     pseudo = edge_pseudo_coords(bundle)                  # (nnz, 2)
     h = x
     n_layers = len(params["layers"])
@@ -61,7 +60,8 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
         acc = 0.0
         for k in range(K):
             acc = acc + gspmm(bundle.g, "u_mul_e_add_v", u=z[:, k],
-                              e=w[:, k:k + 1], **kw)
+                              e=w[:, k:k + 1], strategy=strategy,
+                              cache=bundle.cache)
         h = acc / K
         if i < n_layers - 1:
             h = jax.nn.relu(h)

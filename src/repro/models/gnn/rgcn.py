@@ -36,7 +36,7 @@ def init(key, d_in: int, d_hidden: int, n_classes: int, n_rel: int,
 
 
 def forward(params: Dict, rel_graphs: Sequence[Graph], x: jnp.ndarray, *,
-            strategy: str = "segment", train: bool = False,
+            strategy: str = "auto", train: bool = False,
             rng=None) -> jnp.ndarray:
     h = x
     n_layers = len(params["layers"])

@@ -13,7 +13,7 @@ import jax.numpy as jnp
 from ...core.binary_reduce import gspmm
 from ...core.training_ops import weighted_copy_reduce
 from ...substrate.nn import linear_init, linear_apply, dropout
-from .common import GraphBundle, strategy_kwargs
+from .common import GraphBundle
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int,
@@ -25,21 +25,21 @@ def init(key, d_in: int, d_hidden: int, n_classes: int,
 
 
 def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
-            strategy: str = "segment", train: bool = False, rng=None,
+            strategy: str = "auto", train: bool = False, rng=None,
             drop: float = 0.5) -> jnp.ndarray:
-    kw = strategy_kwargs(bundle, strategy)
     h = x
     n_layers = len(params["layers"])
     for i, lyr in enumerate(params["layers"]):
         if train and rng is not None:
             rng, sub = jax.random.split(rng)
             h = dropout(sub, h, drop, train)
-        if strategy == "ell" and bundle.tg is not None:
+        if bundle.use_training_graph(strategy, h.shape[-1]):
             # mean = weighted CR with 1/deg(dst); blocked pull both ways
             hn = weighted_copy_reduce(bundle.tg, h,
                                       bundle.mean_norm[:, None])
         else:
-            hn = gspmm(bundle.g, "u_copy_mean_v", u=h, **kw)
+            hn = gspmm(bundle.g, "u_copy_mean_v", u=h, strategy=strategy,
+                       cache=bundle.cache)
         h = linear_apply(lyr, jnp.concatenate([h, hn], axis=-1))
         if i < n_layers - 1:
             h = jax.nn.relu(h)
@@ -47,7 +47,7 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
 
 
 def forward_sampled(params: Dict, blocks, feats_fn, *,
-                    strategy: str = "segment", batch_size: int
+                    strategy: str = "auto", batch_size: int
                     ) -> jnp.ndarray:
     """Sampled mini-batch forward (paper Fig. 3).
 

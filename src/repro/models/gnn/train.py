@@ -2,8 +2,10 @@
 
 One jitted step = forward + CE loss on the train mask + AdamW update;
 per-epoch wall time is the paper's reported metric. ``strategy`` selects
-the aggregation implementation — 'push' reproduces the DGL baseline,
-'ell'/'segment' the optimized paths.
+the aggregation implementation — 'auto' (default) lets the planner pick
+per op from graph statistics (the bundle's PlanCache carries static
+stats through the jitted step); pinning 'push' reproduces the DGL
+baseline and 'ell'/'segment' the optimized paths.
 """
 from __future__ import annotations
 
@@ -40,7 +42,7 @@ def make_train_step(forward_fn: Callable, strategy: str, lr: float = 1e-2,
 
 
 def train_full_graph(forward_fn: Callable, params: Dict, bundle, x,
-                     labels, train_mask, *, strategy: str = "segment",
+                     labels, train_mask, *, strategy: str = "auto",
                      epochs: int = 10, lr: float = 1e-2, seed: int = 0,
                      val_mask=None) -> Tuple[Dict, Dict]:
     """Returns (params, history) with per-epoch times and losses."""

@@ -1,0 +1,208 @@
+"""Planner layer: auto strategy selection, fallback, and pack caching.
+
+These tests are hypothesis-free on purpose — they must run on the bare
+tier-1 environment (seeded numpy loops instead of property search).
+"""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (from_coo, gspmm, copy_reduce, edge_softmax,
+                        parse_op, planner)
+
+# the exact configurations from the paper's Table 2
+TABLE2 = [
+    "u_copy_add_v",        # GCN/SAGE/GCMC/LGNN/RGCN
+    "u_mul_e_add_v",       # MoNet, GAT
+    "e_copy_add_v",        # GAT
+    "e_copy_max_v",        # GAT
+    "u_add_v_copy_e",      # GAT
+    "e_sub_v_copy_e",      # GAT
+    "e_div_v_copy_e",      # GAT
+    "v_mul_e_copy_e",      # GAT
+    "u_dot_v_add_e",       # GCMC
+]
+
+REDUCERS = ["add", "max", "min", "mul", "mean"]
+
+
+def _graph(rng, n_u, n_v, nnz):
+    src = rng.integers(0, n_u, nnz)
+    dst = rng.integers(0, n_v, nnz)
+    return from_coo(src, dst, n_src=n_u, n_dst=n_v)
+
+
+def _operands(rng, n_u, n_v, nnz, d):
+    """Values bounded away from 0 so div/prod stay well-conditioned."""
+    def draw(shape):
+        x = rng.uniform(0.5, 1.5, size=shape).astype(np.float32)
+        sgn = np.where(rng.random(shape) < 0.5, -1.0, 1.0).astype(np.float32)
+        return jnp.asarray(x * sgn)
+    return draw((n_u, d)), draw((n_v, d)), draw((nnz, d))
+
+
+def _assert_matches_segment(g, name, U, V, E, **kw):
+    out = gspmm(g, name, u=U, v=V, e=E, **kw)
+    ref = gspmm(g, name, u=U, v=V, e=E, strategy="segment")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5, err_msg=name)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_auto_matches_segment_table2(seed):
+    """strategy='auto' (the default) is numerically the segment answer
+    for every Table-2 config, across random graph shapes."""
+    rng = np.random.default_rng(seed)
+    n_u, n_v, nnz = [(30, 20, 120), (80, 80, 1200), (200, 150, 3000)][seed]
+    g = _graph(rng, n_u, n_v, nnz)
+    U, V, E = _operands(rng, n_u, n_v, g.n_edges, 7)
+    for name in TABLE2:
+        _assert_matches_segment(g, name, U, V, E)   # no strategy argument
+
+
+def test_auto_matches_segment_all_reducers():
+    rng = np.random.default_rng(7)
+    g = _graph(rng, 60, 40, 700)
+    U, V, E = _operands(rng, 60, 40, g.n_edges, 5)
+    for red in REDUCERS:
+        _assert_matches_segment(g, f"u_copy_{red}_v", U, V, E)
+        _assert_matches_segment(g, f"u_mul_e_{red}_v", U, V, E)
+        _assert_matches_segment(g, f"e_copy_{red}_v", U, V, E)
+
+
+def test_pinned_unsupported_falls_back_not_raises():
+    """Pallas/onehot specs they can't run fall back down the chain."""
+    rng = np.random.default_rng(3)
+    g = _graph(rng, 40, 30, 200)
+    U, V, E = _operands(rng, 40, 30, g.n_edges, 6)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        # max reducer: no pallas kernel
+        _assert_matches_segment(g, "u_copy_max_v", U, V, E,
+                                strategy="pallas")
+        # dot ⊗: no pallas kernel, no onehot formulation
+        _assert_matches_segment(g, "u_dot_v_add_v", U, V, E,
+                                strategy="pallas")
+        # onehot needs lhs on source nodes
+        _assert_matches_segment(g, "e_copy_add_v", U, V, E,
+                                strategy="onehot")
+        # min reducer via onehot
+        _assert_matches_segment(g, "u_copy_min_v", U, V, E,
+                                strategy="onehot")
+        # ell cannot reduce to source nodes -> generic path
+        _assert_matches_segment(g, "v_copy_add_u", U, V, E,
+                                strategy="ell")
+
+
+def test_fallback_warns_once():
+    rng = np.random.default_rng(4)
+    g = _graph(rng, 25, 25, 100)
+    U, _, _ = _operands(rng, 25, 25, g.n_edges, 4)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        gspmm(g, "u_copy_prod_v", u=U, strategy="pallas")
+        gspmm(g, "u_copy_prod_v", u=U, strategy="pallas")
+    ours = [x for x in w if "falling back" in str(x.message)]
+    assert len(ours) <= 1
+
+
+def test_packs_built_at_most_once_per_graph():
+    """Repeated auto calls + direct cache hits build each pack once."""
+    rng = np.random.default_rng(5)
+    # big enough (and wide enough) that the cost model picks ell
+    g = _graph(rng, 1000, 1000, 6000)
+    X = jnp.asarray(rng.normal(size=(1000, 64)).astype(np.float32))
+    before = planner.pack_build_totals().get("ell", 0)
+    for _ in range(3):
+        out = copy_reduce(g, X)                       # default: auto
+    cache = planner.get_plan_cache(g)
+    assert cache.ell() is not None                    # direct hit, no build
+    after = planner.pack_build_totals().get("ell", 0)
+    assert after - before == 1
+    assert planner.last_plan("u_copy_add_v") == "ell"
+    np.testing.assert_allclose(
+        np.asarray(out),
+        np.asarray(copy_reduce(g, X, strategy="segment")),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_auto_under_jit_with_cache():
+    """A bundle-carried PlanCache lets the planner run inside a trace:
+    static stats drive the cost model, traced packs feed the kernels."""
+    rng = np.random.default_rng(6)
+    g = _graph(rng, 800, 800, 5000)
+    X = jnp.asarray(rng.normal(size=(800, 64)).astype(np.float32))
+    cache = planner.get_plan_cache(g)
+    cache.ell()
+    f = jax.jit(lambda g, c, x: gspmm(g, "u_copy_add_v", u=x, cache=c))
+    out = f(g, cache, X)
+    ref = copy_reduce(g, X, strategy="segment")
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    # traced graph with NO cache: planner degrades to segment, still right
+    f2 = jax.jit(lambda g, x: gspmm(g, "u_copy_add_v", u=x))
+    np.testing.assert_allclose(np.asarray(f2(g, X)), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_edge_softmax_auto_matches_pinned():
+    rng = np.random.default_rng(8)
+    g = _graph(rng, 50, 50, 400)
+    logits = jnp.asarray(rng.normal(size=(g.n_edges, 4)).astype(np.float32))
+    a = edge_softmax(g, logits)                       # auto
+    b = edge_softmax(g, logits, strategy="segment")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_autotune_mode_matches_segment():
+    rng = np.random.default_rng(9)
+    g = _graph(rng, 300, 300, 2500)
+    X = jnp.asarray(rng.normal(size=(300, 16)).astype(np.float32))
+    ref = copy_reduce(g, X, strategy="segment")
+    planner.set_mode("autotune")
+    try:
+        out1 = copy_reduce(g, X)
+        out2 = copy_reduce(g, X)                      # cached decision
+    finally:
+        planner.set_mode("cost")
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(out2), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_stats_and_cost_model_sanity():
+    rng = np.random.default_rng(10)
+    g = _graph(rng, 100, 100, 900)
+    stats = planner.get_plan_cache(g).stats
+    assert stats.n_edges == g.n_edges
+    assert stats.ell_padded_slots >= stats.n_edges
+    assert stats.pad_ratio >= 1.0
+    # every strategy costs something, and costs grow with feature width
+    for s in planner.STRATEGIES:
+        assert planner.estimate_cost(s, stats, 8) > 0
+        assert (planner.estimate_cost(s, stats, 128)
+                > planner.estimate_cost(s, stats, 8))
+
+
+def test_supports_predicates():
+    spec2 = parse_op("u_mul_e_add_v")
+    x = jnp.zeros((4, 3))
+    e1 = jnp.zeros((5, 1))
+    assert planner.supports("onehot", spec2, x, e1)
+    assert planner.supports("pallas", spec2, x, e1)
+    # 3-D operands are segment/ell territory
+    x3 = jnp.zeros((4, 2, 3))
+    e3 = jnp.zeros((5, 2, 1))
+    assert planner.supports("ell", spec2, x3, e3)
+    assert not planner.supports("onehot", spec2, x3, e3)
+    assert not planner.supports("pallas", spec2, x3, e3)
+    # max reducer never hits the MXU formulations
+    specmax = parse_op("u_copy_max_v")
+    assert not planner.supports("pallas", specmax, x, None)
+    assert not planner.supports("onehot", specmax, x, None)
+    assert planner.supports("ell", specmax, x, None)
