@@ -1,71 +1,87 @@
 """Paper Fig. 3: sampled GraphSAGE per-epoch time, baseline vs optimized.
 
-Two synthetic datasets stand in for Reddit / OGB-Products (scaled to CPU;
-see EXPERIMENTS.md). Sampling (host) + aggregation (device) per batch —
-the aggregation strategy is the variable.
+Synthetic datasets stand in for Reddit / OGB-Products (scaled to CPU;
+see EXPERIMENTS.md). Each configuration trains real minibatch epochs
+through ONE jitted train step per strategy — host-side neighbor
+sampling (double-buffered prefetch) overlapped with the device step.
+Reported per row: epoch wall time, the sampling-vs-aggregation split,
+and (via ``benchmarks.run``'s JSON dump) the planner's chosen block
+plan per op. ``push`` is the DGL baseline; ``segment`` the vendor
+analogue; ``auto`` lets the shape-keyed block planner pick per op.
 """
 from __future__ import annotations
 
-import time
+import os
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.data import make_node_dataset, NeighborSampler
+from repro.data import make_node_dataset
 from repro.models.gnn import sage
+from repro.models.gnn.train import train_sampled
 
 from .common import row
 
+import numpy as np
 
-def bench(dataset: str, n_batches: int = 8, batch_size: int = 64):
-    g, feats, labels, tm, vm, nc = make_node_dataset(dataset)
-    fz = np.vstack([feats, np.zeros((1, feats.shape[1]), np.float32)])
-    feats_j = jnp.asarray(fz)
-    params = sage.init(jax.random.PRNGKey(0), feats.shape[1], 64, nc)
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
 
-    def feats_fn(ids):
-        safe = jnp.where(jnp.asarray(ids) >= 0, jnp.asarray(ids),
-                         feats_j.shape[0] - 1)
-        return jnp.take(feats_j, safe, axis=0)
+# (dataset, fanouts, batch_size, n_batches) sweep — EXPERIMENTS.md maps
+# each dataset preset to the paper dataset it stands in for.
+SWEEP = [
+    ("pubmed-like", (5, 5), 64, 8),
+    ("pubmed-like", (10, 10), 64, 8),
+    ("pubmed-like", (10, 10), 256, 4),
+    ("reddit-like", (10, 10), 64, 4),
+]
+if QUICK:
+    SWEEP = [("tiny", (5, 5), 32, 4), ("tiny", (10, 10), 32, 4)]
 
+_DATASETS = {}
+
+
+def _dataset(name):
+    if name not in _DATASETS:
+        _DATASETS[name] = make_node_dataset(name)
+    return _DATASETS[name]
+
+
+def bench_config(dataset: str, fanouts, batch_size: int, n_batches: int,
+                 strategies) -> dict:
+    g, feats, labels, tm, vm, nc = _dataset(dataset)
     ids = np.nonzero(tm)[0]
+    tag = f"fig3_sage_{dataset}_f{'x'.join(map(str, fanouts))}_b{batch_size}"
     out = {}
-    for strategy in ("push", "segment"):
-        fwd = jax.jit(lambda blocks_leaves, ids_in:  # noqa: E731
-                      None)  # placeholder; defined below per strategy
-
-        def run_epoch():
-            sampler = NeighborSampler(g, fanouts=[10, 10],
-                                      batch_size=batch_size, seed=1)
-            t_total = 0.0
-            n = 0
-            for mb in sampler.batches(ids, labels[ids]):
-                t0 = time.perf_counter()
-                o = sage.forward_sampled(params, mb.blocks, feats_fn,
-                                         strategy=strategy,
-                                         batch_size=batch_size)
-                jax.block_until_ready(o)
-                t_total += time.perf_counter() - t0
-                n += 1
-                if n >= n_batches:
-                    break
-            return t_total
-
-        run_epoch()           # warmup/compile
-        out[strategy] = run_epoch()
-
-    sp = out["push"] / out["segment"]
-    print(row(f"fig3_sage_{dataset}_baseline", out["push"],
-              f"{n_batches} batches"))
-    print(row(f"fig3_sage_{dataset}_optimized", out["segment"],
-              f"speedup={sp:.2f}x"))
-    return sp
+    for strategy in strategies:
+        params = sage.init(jax.random.PRNGKey(0), feats.shape[1], 64, nc,
+                           n_layers=len(fanouts))
+        # epoch 0 pays the jit compile; epoch 1 is the measured epoch
+        # (matches the paper's compile-excluded epoch averages)
+        _, hist = train_sampled(
+            sage.forward_blocks, params, g, feats, labels, ids,
+            fanouts=fanouts, batch_size=batch_size, strategy=strategy,
+            epochs=2, seed=1, max_batches=n_batches)
+        epoch = hist["epoch_time"][1]
+        sample = hist["sample_time"][1]
+        agg = hist["step_time"][1]
+        out[strategy] = epoch
+        split = (f"sample={sample/max(epoch, 1e-12):.0%}"
+                 f" agg={agg/max(epoch, 1e-12):.0%}"
+                 f" batches={hist['n_batches'][1]}")
+        if strategy != "push" and "push" in out:
+            split += f" speedup={out['push']/max(epoch, 1e-12):.2f}x"
+        print(row(f"{tag}_{strategy}", epoch, split))
+    return out
 
 
-def main():
-    bench("pubmed-like")
-    bench("reddit-like", n_batches=4)
+def main(strategy: str = None):
+    if strategy is None:
+        strategies = ("push", "segment", "auto")
+    elif strategy == "push":
+        strategies = ("push",)          # baseline only, not twice
+    else:
+        strategies = ("push", strategy)
+    for dataset, fanouts, batch_size, n_batches in SWEEP:
+        bench_config(dataset, fanouts, batch_size, n_batches, strategies)
 
 
 if __name__ == "__main__":

@@ -6,9 +6,12 @@ from . import planner
 from .planner import GraphStats, Plan, PlanCache, get_plan_cache
 from .binary_reduce import (BRSpec, parse_op, gspmm, copy_reduce,
                             binary_reduce, BINARY_OPS, REDUCE_OPS)
-from .edge_softmax import edge_softmax, edge_softmax_fused
+from .edge_softmax import (edge_softmax, edge_softmax_fused,
+                           block_edge_softmax)
+from .blocks import BlockGraph, block_gspmm, block_supports
 
 __all__ = [
+    "BlockGraph", "block_gspmm", "block_supports", "block_edge_softmax",
     "Graph", "from_coo", "reverse", "add_self_loops",
     "ELLPack", "ELLClass", "TilePack", "build_ell",
     "build_ell_uniform", "build_tiles",

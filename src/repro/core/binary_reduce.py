@@ -24,6 +24,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Callable, Dict, Optional
 
+import jax
 import jax.numpy as jnp
 
 from . import planner
@@ -178,8 +179,7 @@ def _execute(g: Graph, spec: BRSpec, lhs_data, rhs_data,
     if plan.strategy == "onehot":
         return _gspmm_onehot(g, spec, plan.tiles, lhs_data, rhs_data)
     if plan.strategy == "pallas":
-        from repro.kernels.dispatch import gspmm_pallas
-        return gspmm_pallas(g, spec, lhs_data, rhs_data, tiles=plan.tiles)
+        return _gspmm_pallas_diff(g, spec, plan.tiles, lhs_data, rhs_data)
 
     # ---- generic path: per-edge messages then reduce
     lhs_val = _edge_val(g, spec.lhs, lhs_data)
@@ -198,6 +198,42 @@ def _execute(g: Graph, spec: BRSpec, lhs_data, rhs_data,
         return S.push_scatter(msg, tgt, n_tgt, spec.reduce, deg)
     # default: segment (Alg. 2)
     return S.pull_segment(msg, tgt, n_tgt, spec.reduce, deg)
+
+
+def _gspmm_pallas_diff(g: Graph, spec: BRSpec, tiles, lhs_data, rhs_data
+                       ) -> jnp.ndarray:
+    """Pallas forward with a segment-path adjoint.
+
+    ``pallas_call`` has no transpose rule (and interpret mode never will),
+    but the kernel computes the same operator as the segment strategy —
+    so the segment path's VJP IS the pallas path's VJP. This keeps the
+    planner free to choose pallas inside differentiated train steps.
+    """
+    from repro.kernels.dispatch import gspmm_pallas
+
+    seg_plan = planner.Plan(strategy="segment", requested="segment",
+                            reason="pallas-adjoint")
+
+    def seg(l, r):
+        return _execute(g, spec, l, r, seg_plan)
+
+    if rhs_data is None:
+        @jax.custom_vjp
+        def f(l):
+            return gspmm_pallas(g, spec, l, None, tiles=tiles)
+
+        f.defvjp(lambda l: (f(l), (l,)),
+                 lambda res, ct: jax.vjp(lambda l: seg(l, None),
+                                         *res)[1](ct))
+        return f(lhs_data)
+
+    @jax.custom_vjp
+    def f2(l, r):
+        return gspmm_pallas(g, spec, l, r, tiles=tiles)
+
+    f2.defvjp(lambda l, r: (f2(l, r), (l, r)),
+              lambda res, ct: jax.vjp(seg, *res)[1](ct))
+    return f2(lhs_data, rhs_data)
 
 
 def _gspmm_ell(g: Graph, spec: BRSpec, pack: ELLPack,

@@ -1,0 +1,197 @@
+"""Minibatch block-graph execution — sampled training (paper Fig. 3).
+
+A *block* is the bipartite graph of one message-passing layer of a
+sampled minibatch: sources are the layer-l frontier nodes, destinations
+the layer-(l+1) seeds. Blocks produced by :class:`repro.data.NeighborSampler`
+are padded to fully static shapes (node pads into a trailing dummy source
+slot, edge pads into a trailing dummy destination row) so one jitted
+train step serves every batch.
+
+Because every real destination row holds at most ``fanout`` sampled
+in-edges, a block admits a *uniform* blocked-pull format for free: the
+sampler emits a dense ``(n_dst_real, fanout)`` neighbor table
+(:class:`BlockGraph.nbr`) alongside the COO graph. That table is the
+single-class analogue of the degree-bucketed :class:`~repro.core.tiling.ELLPack`
+— no host-side pack build, no per-batch pytree-structure changes, and a
+mask-corrected mean so pad slots contribute exactly zero.
+
+:func:`block_gspmm` mirrors :func:`repro.core.binary_reduce.gspmm` for
+blocks. ``strategy="auto"`` routes through the planner's *shape-keyed*
+block plan cache (:func:`repro.core.planner.plan_block_gspmm`): the
+decision depends only on the static padded shapes + op + feature width,
+so it is stable across batches and valid inside a trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import planner
+from .binary_reduce import (BINARY_OPS, BRSpec, _as2d, _execute, gspmm,
+                            parse_op)
+from .graph import Graph
+from .strategies import REDUCE_IDENTITY
+
+__all__ = ["BlockGraph", "block_gspmm", "block_supports"]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class BlockGraph:
+    """One sampled bipartite layer with its uniform neighbor table.
+
+    ``g`` is the padded COO/CSR block graph (``n_dst = n_dst_real + 1``:
+    the extra row absorbs pad edges). The neighbor table views the same
+    edges row-major: ``nbr[j, k]`` is the source *slot* of destination
+    ``j``'s k-th sampled in-edge (pad slots point at the dummy source and
+    are masked out), ``nbr_eid[j, k]`` the matching caller-order edge id
+    (edge features are indexed with it), and ``real_deg[j]`` the number
+    of real sampled in-edges — the mask-corrected mean denominator.
+    """
+    g: Graph
+    nbr: jnp.ndarray        # (n_dst_real, fanout) int32 source slots
+    nbr_eid: jnp.ndarray    # (n_dst_real, fanout) int32 caller edge ids
+    nbr_mask: jnp.ndarray   # (n_dst_real, fanout) bool — True for real edges
+    real_deg: jnp.ndarray   # (n_dst_real,) int32
+    n_dst_real: int = dataclasses.field(metadata={"static": True})
+    fanout: int = dataclasses.field(metadata={"static": True})
+
+    def tree_flatten(self):
+        return ((self.g, self.nbr, self.nbr_eid, self.nbr_mask,
+                 self.real_deg), (self.n_dst_real, self.fanout))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        g, nbr, nbr_eid, nbr_mask, real_deg = children
+        return cls(g=g, nbr=nbr, nbr_eid=nbr_eid, nbr_mask=nbr_mask,
+                   real_deg=real_deg, n_dst_real=aux[0], fanout=aux[1])
+
+    @property
+    def signature(self) -> Tuple[int, int, int, int]:
+        """Static shape signature — the planner's block-plan cache key."""
+        return (self.g.n_src, self.n_dst_real, self.g.n_edges, self.fanout)
+
+    def __repr__(self):
+        return (f"BlockGraph(n_src={self.g.n_src}, "
+                f"n_dst_real={self.n_dst_real}, fanout={self.fanout})")
+
+
+def block_supports(strategy: str, spec: BRSpec) -> bool:
+    """Can ``strategy`` execute this spec on a block?
+
+    The uniform pull ('ell') handles any ⊗ over u/v/e operands and every
+    reducer, but only destination outputs. push/segment run the generic
+    COO path on the padded graph. The MXU formulations (onehot/pallas)
+    need host-built tile packs, which cannot be rebuilt per batch with a
+    static pytree structure — they are never block candidates.
+    """
+    if spec.out != "v" or spec.reduce == "none":
+        return False
+    if strategy in ("push", "segment"):
+        return True
+    if strategy == "ell":
+        return True
+    return False  # onehot / pallas: no static per-batch tile pack
+
+
+def _nbr_fetch(bg: BlockGraph, target: str, data: jnp.ndarray) -> jnp.ndarray:
+    """Operand values laid out on the (n_dst_real, fanout) slot grid."""
+    if target == "u":
+        return jnp.take(data, bg.nbr, axis=0)            # (nd, F, d)
+    if target == "e":
+        return jnp.take(data, bg.nbr_eid, axis=0)        # (nd, F, d)
+    if target == "v":
+        # destination's own value, broadcast along the slot axis;
+        # v operands are sized like g.n_dst (they include the pad row)
+        return data[: bg.n_dst_real][:, None]            # (nd, 1, d)
+    raise ValueError(target)
+
+
+def _block_pull(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data
+                ) -> jnp.ndarray:
+    """Uniform blocked pull: dense masked reduce over the fanout axis."""
+    lhs_val = _nbr_fetch(bg, spec.lhs, lhs_data)
+    rhs_val = (_nbr_fetch(bg, spec.rhs, rhs_data)
+               if spec.rhs is not None else None)
+    msg = BINARY_OPS[spec.op](lhs_val, rhs_val)          # (nd, F, *feat)
+    red = spec.reduce
+    ident = jnp.asarray(REDUCE_IDENTITY[red], msg.dtype)
+    mask = bg.nbr_mask.reshape(bg.nbr_mask.shape + (1,) * (msg.ndim - 2))
+    msg = jnp.where(mask, msg, ident)
+    base = "sum" if red in ("sum", "mean") else red
+    if base == "sum":
+        out = msg.sum(axis=1)
+    elif base == "max":
+        out = msg.max(axis=1)
+    elif base == "min":
+        out = msg.min(axis=1)
+    elif base == "prod":
+        out = msg.prod(axis=1)
+    else:
+        raise ValueError(f"unknown reduce op {red!r}")
+    deg = bg.real_deg
+    if red == "mean":
+        d = jnp.maximum(deg, 1).astype(out.dtype)
+        out = out / d.reshape((out.shape[0],) + (1,) * (out.ndim - 1))
+    # DGL semantics: rows with no (real) incoming edge are 0 for every ⊕
+    if red != "sum":
+        has = (deg > 0).reshape((out.shape[0],) + (1,) * (out.ndim - 1))
+        out = jnp.where(has, out, jnp.zeros((), out.dtype))
+    return out
+
+
+def block_gspmm(bg: BlockGraph, op_name: str, *,
+                u: Optional[jnp.ndarray] = None,
+                v: Optional[jnp.ndarray] = None,
+                e: Optional[jnp.ndarray] = None,
+                strategy: str = "auto") -> jnp.ndarray:
+    """Generalized sparse aggregation over one sampled block.
+
+    Same operand conventions as :func:`~repro.core.binary_reduce.gspmm`
+    on ``bg.g`` — ``u``: (n_src_pad, d); ``v``: (n_dst_real + 1, d)
+    (callers pad one dummy row); ``e``: (n_edges_pad, d) caller edge
+    order. Node outputs are returned for REAL destination rows only:
+    shape (n_dst_real, d) — the pad row is consumed internally.
+
+    ``strategy="auto"`` consults the planner's shape-keyed block plan
+    cache, so the choice is identical for every batch of the same
+    sampler configuration and survives ``jit`` tracing. Pinned
+    strategies unsupported on blocks fall back with a one-time warning.
+    """
+    spec = parse_op(op_name)
+    data = {"u": u, "v": v, "e": e}
+    if data[spec.lhs] is None:
+        raise ValueError(f"{op_name}: operand {spec.lhs!r} missing")
+    if spec.rhs is not None and data[spec.rhs] is None:
+        raise ValueError(f"{op_name}: operand {spec.rhs!r} missing")
+
+    # edge outputs are strategy-free gathers — delegate to the COO path
+    if spec.out == "e":
+        return gspmm(bg.g, op_name, u=u, v=v, e=e)
+
+    if spec.out != "v":
+        raise ValueError(f"{op_name}: blocks only produce destination or "
+                         f"edge outputs (got {spec.out!r})")
+    if spec.reduce == "none":
+        raise ValueError(f"{op_name}: copy-reduce to nodes needs a reducer")
+
+    lhs_data = _as2d(data[spec.lhs])
+    rhs_data = _as2d(data[spec.rhs]) if spec.rhs is not None else None
+    d = int(np.prod(lhs_data.shape[1:]))
+
+    chosen = planner.plan_block_gspmm(bg.signature, spec, d,
+                                      requested=strategy)
+    if chosen == "ell":
+        return _block_pull(bg, spec, lhs_data, rhs_data)
+    # planning is already done (shape-keyed) — execute the resolved
+    # strategy directly rather than re-entering gspmm's planning front
+    # door, which would build a PlanCache + stats for every throwaway
+    # per-batch block graph in eager mode
+    plan = planner.Plan(strategy=chosen, requested=strategy,
+                        reason="block")
+    out = _execute(bg.g, spec, lhs_data, rhs_data, plan)
+    return out[: bg.n_dst_real]

@@ -20,9 +20,10 @@ import jax
 import jax.numpy as jnp
 
 from .binary_reduce import gspmm
+from .blocks import BlockGraph, block_gspmm
 from .graph import Graph
 
-__all__ = ["edge_softmax", "edge_softmax_fused"]
+__all__ = ["edge_softmax", "edge_softmax_fused", "block_edge_softmax"]
 
 
 def edge_softmax(g: Graph, logits: jnp.ndarray,
@@ -40,6 +41,30 @@ def edge_softmax(g: Graph, logits: jnp.ndarray,
     ex = jnp.exp(shifted)
     z = gspmm(g, "e_copy_add_v", e=ex, strategy=strategy, cache=cache)
     return gspmm(g, "e_div_v_copy_e", e=ex, v=z, strategy=strategy)
+
+
+def block_edge_softmax(bg: BlockGraph, logits: jnp.ndarray,
+                       strategy: str = "auto") -> jnp.ndarray:
+    """Edge softmax over one sampled block's real in-edges.
+
+    Same five-primitive chain as :func:`edge_softmax`, with the two
+    node-output reductions routed through the shape-keyed block planner.
+    Pad edges live in the dummy destination row, so real rows' softmax
+    sees exactly their real edges; pad edges' output values are garbage
+    but masked out of every downstream block aggregation.
+    """
+    x = logits[:, None] if logits.ndim == 1 else logits
+    pad = jnp.zeros((1,) + x.shape[1:], x.dtype)
+    maxv = block_gspmm(bg, "e_copy_max_v", e=x, strategy=strategy)
+    shifted = gspmm(bg.g, "e_sub_v_copy_e", e=x,
+                    v=jnp.concatenate([maxv, pad], axis=0))
+    ex = jnp.exp(shifted)
+    z = block_gspmm(bg, "e_copy_add_v", e=ex, strategy=strategy)
+    # dummy row gets z=1 so pad edges divide by a finite value; every
+    # real edge's destination has ≥ 1 real edge, so z > 0 on real rows
+    zp = jnp.concatenate([z, jnp.ones_like(pad)], axis=0)
+    out = gspmm(bg.g, "e_div_v_copy_e", e=ex, v=zp)
+    return out[:, 0] if logits.ndim == 1 else out
 
 
 def edge_softmax_fused(g: Graph, logits: jnp.ndarray) -> jnp.ndarray:

@@ -47,7 +47,8 @@ from .tiling import (ELLClass, ELLPack, TilePack, build_ell,
 __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "compute_stats", "estimate_cost", "plan_gspmm", "supports",
            "plan_log", "clear_plan_log", "last_plan", "pack_build_totals",
-           "set_mode", "get_mode", "STRATEGIES", "FALLBACK_CHAIN"]
+           "set_mode", "get_mode", "STRATEGIES", "FALLBACK_CHAIN",
+           "block_stats", "plan_block_gspmm", "clear_block_plans"]
 
 STRATEGIES = ("push", "segment", "ell", "onehot", "pallas")
 
@@ -514,3 +515,82 @@ def _plan_auto(spec, lhs_data, rhs_data, stats, ok, cache, runner,
         return winner, "autotune"
     chosen = min(candidates, key=lambda s: estimate_cost(s, stats, d))
     return chosen, "cost"
+
+
+# --------------------------------------------------------------------- #
+# block (sampled-minibatch) planning — shape-keyed, trace-safe
+# --------------------------------------------------------------------- #
+# Sampled blocks are padded to static shapes, so their planner features
+# depend only on the shape signature (n_src_pad, n_dst_real, n_edges_pad,
+# fanout) — not on the particular batch. Decisions are memoized on that
+# signature (plus op/width/backend), which makes planning deterministic
+# across batches and safe inside a jitted train step: the same compiled
+# step serves every minibatch of a sampler configuration.
+_BLOCK_PLANS: Dict[Tuple, str] = {}
+
+# Candidates for auto mode on blocks. The uniform pull reuses the 'ell'
+# cost entry (it IS a single-class ELL); onehot/pallas need host-built
+# tile packs that cannot be rebuilt per batch, so they never qualify.
+_BLOCK_AUTO_CANDIDATES = ("ell", "segment")
+_BLOCK_FALLBACK = ("ell", "segment")
+
+
+def block_stats(n_src: int, n_dst_real: int, n_edges: int,
+                fanout: int) -> GraphStats:
+    """Nominal :class:`GraphStats` of a padded block.
+
+    Every real destination row holds at most ``fanout`` sampled in-edges
+    and the neighbor table pads all rows TO ``fanout`` — so the block is
+    a uniform single-class ELL by construction: max degree == avg degree
+    == fanout, one width class, ``n_dst_real * fanout`` padded slots.
+    """
+    slots = n_dst_real * fanout
+    return GraphStats(
+        n_src=int(n_src), n_dst=int(n_dst_real), n_edges=int(n_edges),
+        avg_in_deg=float(fanout), max_in_deg=int(fanout), skew=1.0,
+        ell_padded_slots=int(slots), ell_n_classes=1,
+        pad_ratio=float(slots / max(n_edges, 1)))
+
+
+def clear_block_plans() -> None:
+    _BLOCK_PLANS.clear()
+
+
+def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
+                     requested: str = "auto") -> str:
+    """Pick the execution strategy for one block aggregation.
+
+    ``signature`` is :attr:`BlockGraph.signature` — static padded shapes
+    only, so this function never touches traced values. The chosen
+    strategy is memoized per (signature, op, width, requested, backend)
+    and recorded in the plan log under ``block:<op>``.
+    """
+    from .blocks import block_supports  # local: blocks imports planner
+
+    backend = jax.default_backend()
+    key = (signature, spec.name, int(d), requested, backend)
+    log_name = f"block:{spec.name}"
+    chosen = _BLOCK_PLANS.get(key)
+    if chosen is None:
+        if requested == "auto":
+            stats = block_stats(*signature)
+            candidates = [s for s in _BLOCK_AUTO_CANDIDATES
+                          if block_supports(s, spec)]
+            if not candidates:
+                chosen = "segment"
+            else:
+                chosen = min(candidates,
+                             key=lambda s: estimate_cost(s, stats, d,
+                                                         backend=backend))
+        elif requested not in STRATEGIES:
+            raise ValueError(f"unknown strategy {requested!r}; expected "
+                             f"one of {STRATEGIES + ('auto',)}")
+        elif block_supports(requested, spec):
+            chosen = requested
+        else:
+            chosen = next((s for s in _BLOCK_FALLBACK
+                           if block_supports(s, spec)), "segment")
+            _warn_fallback(log_name, requested, chosen)
+        _BLOCK_PLANS[key] = chosen
+    _record(log_name, requested, chosen)
+    return chosen

@@ -2,9 +2,12 @@
 from .synthetic import (rmat_graph, sbm_graph, bipartite_ratings,
                         planted_node_labels, make_node_dataset, DATASETS,
                         relational_graph)
-from .sampler import NeighborSampler
+from .sampler import NeighborSampler, SampledBlock, MiniBatch
+from .pipeline import Prefetcher, prefetch, SignatureTracker
 
 __all__ = [
     "rmat_graph", "sbm_graph", "bipartite_ratings", "planted_node_labels",
     "make_node_dataset", "DATASETS", "relational_graph", "NeighborSampler",
+    "SampledBlock", "MiniBatch", "Prefetcher", "prefetch",
+    "SignatureTracker",
 ]

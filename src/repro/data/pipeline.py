@@ -1,0 +1,127 @@
+"""Host-side minibatch pipeline: prefetch + compile-cache accounting.
+
+Sampling runs on the host (numpy) while the train step runs on the
+device — the classic overlap. :class:`Prefetcher` keeps ``depth``
+minibatches in flight on a daemon thread (``depth=2`` is the
+double-buffer: one batch being consumed, one being sampled), so the
+host sampler hides behind device time instead of serializing with it.
+
+:class:`SignatureTracker` watches the static shape signatures of the
+minibatches that reach the jitted step. The sampler pads every batch to
+one signature per configuration, so the tracker is both documentation
+and a tripwire: if a code change ever lets shapes vary per batch (→ a
+recompile per batch), ``assert_bounded`` fails loudly instead of the
+run silently crawling.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Iterable, Iterator, Set, Tuple
+
+__all__ = ["Prefetcher", "prefetch", "SignatureTracker"]
+
+_DONE = object()
+
+
+class Prefetcher:
+    """Iterator wrapper that materializes up to ``depth`` items ahead.
+
+    Exceptions raised by the producer are re-raised at the consumer's
+    ``next()`` call site; the thread is a daemon, so an abandoned
+    prefetcher never blocks interpreter exit.
+    """
+
+    def __init__(self, it: Iterable, depth: int = 2):
+        if depth < 1:
+            raise ValueError("prefetch depth must be ≥ 1")
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._err = None
+        self._closed = False
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._fill, args=(iter(it),),
+                                        daemon=True)
+        self._thread.start()
+
+    def _fill(self, it: Iterator) -> None:
+        try:
+            for item in it:
+                # bounded put that notices close(): never leaves the
+                # producer blocked (and then hard-killed mid-XLA-call)
+                while not self._stop.is_set():
+                    try:
+                        self._q.put(item, timeout=0.1)
+                        break
+                    except queue.Full:
+                        continue
+                if self._stop.is_set():
+                    return
+        except BaseException as e:          # propagate to the consumer
+            self._err = e
+        finally:
+            # the sentinel must not be dropped on a full queue (the
+            # consumer would block forever) — same stop-aware put
+            while not self._stop.is_set():
+                try:
+                    self._q.put(_DONE, timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+
+    def close(self) -> None:
+        """Stop the producer and drain — call when abandoning the
+        iterator early (e.g. a capped batch loop). A closed iterator is
+        exhausted: further ``next()`` raises StopIteration."""
+        self._closed = True
+        self._stop.set()
+        while True:
+            try:
+                self._q.get_nowait()
+            except queue.Empty:
+                break
+        self._thread.join(timeout=10.0)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._closed:
+            raise StopIteration
+        item = self._q.get()
+        if item is _DONE:
+            # re-queue the sentinel: exhausted iterators must keep
+            # raising StopIteration instead of blocking a later next()
+            try:
+                self._q.put_nowait(_DONE)
+            except queue.Full:
+                pass
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item
+
+
+def prefetch(it: Iterable, depth: int = 2) -> Iterator:
+    """Double-buffered (by default) background iteration over ``it``."""
+    return Prefetcher(it, depth=depth)
+
+
+class SignatureTracker:
+    """Counts distinct static shape signatures seen by a jitted step."""
+
+    def __init__(self, limit: int = 4):
+        self.limit = limit
+        self.seen: Set[Tuple] = set()
+
+    def observe(self, signature: Tuple) -> bool:
+        """Record a signature; True if it is new (⇒ a fresh compile)."""
+        new = signature not in self.seen
+        self.seen.add(signature)
+        return new
+
+    def assert_bounded(self) -> None:
+        if len(self.seen) > self.limit:
+            raise RuntimeError(
+                f"{len(self.seen)} distinct minibatch shape signatures "
+                f"(> {self.limit}): static padding is broken, every batch "
+                f"recompiles the train step")

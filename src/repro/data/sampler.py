@@ -1,37 +1,99 @@
-"""Neighbor sampling for batched (sampled) GraphSAGE — paper Fig. 3.
+"""Neighbor sampling for batched (sampled) GNN training — paper Fig. 3.
 
 Produces fixed-shape (padded) mini-batch blocks so a single jitted train
 step serves every batch: per layer l, a bipartite block graph from sampled
-frontier nodes to the previous frontier. Padding uses a dedicated dummy
-node whose features are zero, so padded edges contribute nothing to mean
-aggregation (mask-corrected degree).
+frontier nodes to the previous frontier. Two padding devices keep every
+array shape static:
+
+* node pads go into a trailing *dummy source slot* whose features are
+  zero (``feats_fn`` maps global id -1 to a zero row);
+* edge pads go into a trailing *dummy destination row*, so real rows'
+  in-degrees — and therefore mean aggregation — are untouched.
+
+Each block also carries the dense uniform neighbor table of
+:class:`repro.core.blocks.BlockGraph` (built here for free from the
+per-row sample lists), which is what the planner's blocked-pull strategy
+consumes, plus per-edge GCN normalization weights gathered from the
+FULL graph's degrees (pad edges get weight 0, so they contribute
+exactly zero to weighted aggregation).
+
+Sampling is uniform WITHOUT replacement; a node with in-degree ≤ fanout
+keeps all its in-edges — so with ``fanout ≥ max in-degree`` the blocks
+reproduce the full graph exactly (tests/data/test_sampler.py holds the
+sampled forward to the full-graph forward under that condition).
+
+:class:`SampledBlock` and :class:`MiniBatch` are registered pytrees:
+a whole minibatch is passed straight into a jitted train step, and its
+static aux (padded sizes, fanout) keys the compilation cache — one
+compile per sampler configuration.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence, Tuple
+from typing import Iterator, List, Optional, Sequence, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
+from ..core.blocks import BlockGraph
 from ..core.graph import Graph, from_coo
 
 
-@dataclasses.dataclass
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
 class SampledBlock:
-    graph: Graph                 # bipartite: src = layer-l nodes, dst = layer-(l+1) seeds
-    src_ids: np.ndarray          # (n_src_pad,) global ids (dummy = -1)
+    """One bipartite layer of a minibatch (outer hop = larger side).
+
+    ``bg`` holds the padded block graph + uniform neighbor table;
+    ``src_ids`` the global node id per source slot (-1 = pad);
+    ``gcn_norm`` per-edge 1/√(deg_out(u)·deg_in(v)) from the FULL
+    graph's degrees, caller edge order, 0 on pad edges.
+    """
+    bg: BlockGraph
+    src_ids: jnp.ndarray        # (n_src_pad,) int32 global ids, -1 = pad
+    gcn_norm: jnp.ndarray       # (n_edges_pad,) float32, 0 on pads
+
+    @property
+    def graph(self) -> Graph:   # back-compat view
+        return self.bg.g
+
+    def tree_flatten(self):
+        return ((self.bg, self.src_ids, self.gcn_norm), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
 
 
-@dataclasses.dataclass
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
 class MiniBatch:
-    blocks: List[SampledBlock]   # outermost hop first
-    input_ids: np.ndarray        # (n_input_pad,) global node ids, -1 = pad
-    seed_ids: np.ndarray         # (batch,) global seed ids
-    labels: np.ndarray           # (batch,)
+    """Blocks (outermost hop first) + seeds. ``label_mask`` is False on
+    pad seeds (short final batch padded up to the static batch size) —
+    the train step masks their loss rows out."""
+    blocks: Tuple[SampledBlock, ...]
+    input_ids: jnp.ndarray      # (n_input_pad,) global node ids, -1 = pad
+    seed_ids: jnp.ndarray       # (batch,) global seed ids, -1 = pad
+    labels: jnp.ndarray         # (batch,) pad rows hold 0
+    label_mask: jnp.ndarray     # (batch,) bool
+
+    def tree_flatten(self):
+        return ((self.blocks, self.input_ids, self.seed_ids, self.labels,
+                 self.label_mask), ())
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    def shape_signature(self) -> Tuple:
+        """Static padded-shape signature — identical for every batch of
+        one sampler configuration (bounded jit compilations)."""
+        return tuple(b.bg.signature for b in self.blocks)
 
 
 class NeighborSampler:
-    """Uniform neighbor sampler over CSC (incoming edges per node)."""
+    """Uniform without-replacement neighbor sampler over incoming edges."""
 
     def __init__(self, g: Graph, fanouts: Sequence[int], batch_size: int,
                  seed: int = 0):
@@ -39,63 +101,143 @@ class NeighborSampler:
         self.src = np.asarray(g.src, np.int64)
         self.fanouts = list(fanouts)
         self.batch_size = batch_size
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.n = g.n_dst
-        # static padded sizes per layer
+        # full-graph degrees for GCN-style symmetric normalization
+        self.deg_in = np.maximum(np.asarray(g.in_degrees, np.float64), 1)
+        self.deg_out = np.maximum(np.asarray(g.out_degrees, np.float64), 1)
+        # static padded sizes per layer (innermost = batch itself)
         self.layer_sizes = [batch_size]
         for f in reversed(self.fanouts):
             self.layer_sizes.append(self.layer_sizes[-1] * (f + 1))
 
-    def sample(self, seeds: np.ndarray, labels: np.ndarray) -> MiniBatch:
+    def reset(self, seed: Optional[int] = None) -> None:
+        """Re-seed the sampling stream (determinism: same seed ⇒ same
+        batches, bit for bit)."""
+        self.rng = np.random.default_rng(self.seed if seed is None
+                                         else seed)
+
+    # ------------------------------------------------------------------ #
+    @staticmethod
+    def _sample_row(indptr, rng, node: int, fanout: int) -> np.ndarray:
+        """Uniform sample of ≤ fanout incoming edge slots, no replacement;
+        all of them when the in-degree fits."""
+        lo, hi = indptr[node], indptr[node + 1]
+        deg = int(hi - lo)
+        if deg == 0:
+            return np.empty(0, np.int64)
+        if deg <= fanout:
+            return np.arange(lo, hi)
+        return lo + rng.choice(deg, size=fanout, replace=False)
+
+    def sample(self, seeds: np.ndarray, labels: np.ndarray,
+               rng: Optional[np.random.Generator] = None) -> MiniBatch:
         """Build fully static-shape (node- AND edge-padded) blocks.
 
         Each block graph has ``n_dst + 1`` destination rows; padded edges
         point at the extra dummy row, so real rows are untouched and a
-        single jitted step serves every batch. Consumers slice ``[:n_dst]``.
+        single jitted step serves every batch. Consumers slice
+        ``[:n_dst]`` (``block_gspmm`` does it internally).
         """
+        if rng is None:
+            rng = self.rng
+        seeds = np.asarray(seeds, np.int64)
+        labels = np.asarray(labels, np.int64)
+        if len(seeds) < self.batch_size:     # short final batch: pad seeds
+            pad = self.batch_size - len(seeds)
+            seeds = np.concatenate([seeds, np.full(pad, -1, np.int64)])
+            labels = np.concatenate([labels, np.zeros(pad, np.int64)])
+        label_mask = seeds >= 0
+
         blocks: List[SampledBlock] = []
         frontier = seeds
         for li, fanout in enumerate(reversed(self.fanouts)):
             n_dst = self.layer_sizes[li]
             n_src_pad = self.layer_sizes[li + 1]
             n_edges_pad = n_dst * fanout
-            srcs, dsts = [], []
+            srcs, dsts, norms = [], [], []
+            nbr = np.full((n_dst, fanout), n_src_pad - 1, np.int32)
+            nbr_eid = np.zeros((n_dst, fanout), np.int32)
+            nbr_mask = np.zeros((n_dst, fanout), bool)
             # dst-first source numbering: src slot j == dst node j, so a
             # layer can read its destinations' own features as h[:n_dst]
             src_ids = list(frontier)
-            uniq: dict = {int(n): j for j, n in enumerate(frontier)
-                          if n >= 0}
+            uniq: dict = {}
+            for j, node in enumerate(frontier):
+                if node >= 0 and node not in uniq:
+                    uniq[int(node)] = j
             for j, node in enumerate(frontier):
                 if node < 0:
                     continue
-                lo, hi = self.indptr[node], self.indptr[node + 1]
-                deg = hi - lo
-                if deg > 0:
-                    take = self.rng.integers(lo, hi, size=min(fanout, deg))
-                    for t in take:
-                        nb = self.src[t]
-                        if nb not in uniq:
-                            uniq[nb] = len(src_ids)
-                            src_ids.append(nb)
-                        srcs.append(uniq[nb])
-                        dsts.append(j)
+                for k, t in enumerate(self._sample_row(
+                        self.indptr, rng, int(node), fanout)):
+                    nb = int(self.src[t])
+                    if nb not in uniq:
+                        uniq[nb] = len(src_ids)
+                        src_ids.append(nb)
+                    nbr[j, k] = uniq[nb]
+                    nbr_eid[j, k] = len(srcs)
+                    nbr_mask[j, k] = True
+                    srcs.append(uniq[nb])
+                    dsts.append(j)
+                    norms.append(1.0 / np.sqrt(self.deg_out[nb]
+                                               * self.deg_in[node]))
             # pad sources to static size; dummy source = last slot
             n_real_src = len(src_ids)
             src_ids = np.asarray(src_ids + [-1] * (n_src_pad - n_real_src),
                                  np.int64)
-            # pad edges into the dummy destination row n_dst
-            pad = n_edges_pad - len(srcs)
+            # pad edges into the dummy destination row n_dst (never any
+            # real source slot: a pad edge exists only when some row is
+            # under fanout, which leaves the dummy source slot free)
+            n_real = len(srcs)
+            pad = n_edges_pad - n_real
             srcs = np.asarray(srcs + [n_src_pad - 1] * pad, np.int64)
             dsts = np.asarray(dsts + [n_dst] * pad, np.int64)
+            norms = np.asarray(norms + [0.0] * pad, np.float32)
+            # pad slots of the neighbor table index SOME valid edge id;
+            # they are masked, so the value never reaches a reduction
+            nbr_eid[~nbr_mask] = min(n_real, n_edges_pad - 1)
+            real_deg = nbr_mask.sum(axis=1).astype(np.int32)
             g = from_coo(srcs, dsts, n_src=n_src_pad, n_dst=n_dst + 1)
-            blocks.append(SampledBlock(graph=g, src_ids=src_ids))
+            bg = BlockGraph(g=g, nbr=jnp.asarray(nbr),
+                            nbr_eid=jnp.asarray(nbr_eid),
+                            nbr_mask=jnp.asarray(nbr_mask),
+                            real_deg=jnp.asarray(real_deg),
+                            n_dst_real=n_dst, fanout=fanout)
+            blocks.append(SampledBlock(
+                bg=bg, src_ids=jnp.asarray(src_ids, jnp.int32),
+                gcn_norm=jnp.asarray(norms)))
             frontier = src_ids
         blocks.reverse()
-        return MiniBatch(blocks=blocks, input_ids=blocks[0].src_ids,
-                         seed_ids=seeds, labels=labels)
+        return MiniBatch(blocks=tuple(blocks),
+                         input_ids=blocks[0].src_ids,
+                         seed_ids=jnp.asarray(seeds, jnp.int32),
+                         labels=jnp.asarray(labels, jnp.int32),
+                         label_mask=jnp.asarray(label_mask))
 
-    def batches(self, node_ids: np.ndarray, labels: np.ndarray):
-        order = self.rng.permutation(len(node_ids))
-        for s in range(0, len(order) - self.batch_size + 1, self.batch_size):
-            idx = order[s:s + self.batch_size]
-            yield self.sample(node_ids[idx], labels[idx])
+    def batches(self, node_ids: np.ndarray, labels: np.ndarray,
+                drop_last: bool = True) -> Iterator[MiniBatch]:
+        """Shuffled minibatches. With ``drop_last=False`` the short final
+        batch is padded up to ``batch_size`` (masked via ``label_mask``)
+        so even the tail reuses the one compiled step.
+
+        The whole epoch is drawn from a child RNG seeded EAGERLY (one
+        draw from the sampler stream per call, before the generator
+        runs), so a prefetch thread abandoned mid-epoch can never leave
+        the shared stream in a timing-dependent state — epoch k's
+        batches depend only on the seed and k, bit for bit.
+        """
+        node_ids = np.asarray(node_ids)
+        labels = np.asarray(labels)
+        child = np.random.default_rng(int(self.rng.integers(2 ** 63)))
+
+        def gen() -> Iterator[MiniBatch]:
+            order = child.permutation(len(node_ids))
+            stop = (len(order) - self.batch_size + 1 if drop_last
+                    else len(order))
+            for s in range(0, stop, self.batch_size):
+                idx = order[s:s + self.batch_size]
+                yield self.sample(node_ids[idx], labels[idx], rng=child)
+
+        return gen()

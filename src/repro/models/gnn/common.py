@@ -1,8 +1,10 @@
-"""Shared GNN plumbing: graph bundles riding on the planner's PlanCache."""
+"""Shared GNN plumbing: graph bundles riding on the planner's PlanCache,
+plus the one code path every app's sampled-minibatch forward runs on
+(:func:`run_blocks` — see DESIGN.md §5)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +14,7 @@ from ...core.graph import Graph
 from ...core.planner import PlanCache, get_plan_cache
 from ...core.tiling import ELLPack, TilePack
 from ...core.training_ops import TrainingGraph, make_training_graph
+from ...substrate.nn import dropout
 
 
 @jax.tree_util.register_pytree_node_class
@@ -90,3 +93,48 @@ def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
         tg=tg,
         mean_norm=jnp.asarray(m_caller, jnp.float32),
     )
+
+
+# --------------------------------------------------------------------- #
+# sampled-minibatch (block) forward — one code path for every app
+# --------------------------------------------------------------------- #
+def pad_features(feats) -> jnp.ndarray:
+    """Append one zero row so global id -1 (pad) gathers zeros."""
+    feats = np.asarray(feats, np.float32)
+    return jnp.asarray(np.vstack([feats,
+                                  np.zeros((1, feats.shape[1]),
+                                           np.float32)]))
+
+
+def block_features(feats_padded: jnp.ndarray, ids) -> jnp.ndarray:
+    """Gather input features for padded global ids (-1 → the zero row)."""
+    ids = jnp.asarray(ids)
+    safe = jnp.where(ids >= 0, ids, feats_padded.shape[0] - 1)
+    return jnp.take(feats_padded, safe, axis=0)
+
+
+def run_blocks(block_layer: Callable, layers: Sequence, blocks: Sequence,
+               h: jnp.ndarray, *, strategy: str = "auto",
+               activation: Callable = jax.nn.relu, train: bool = False,
+               rng=None, drop: float = 0.0) -> jnp.ndarray:
+    """Drive a per-app layer function over a minibatch's blocks.
+
+    ``block_layer(lyr, blk, h, strategy=...)`` maps the layer-l frontier
+    features ``h`` (n_src_pad, d) to destination features
+    (n_dst_real, d'). Thanks to the sampler's dst-first source numbering
+    the next block's frontier IS this block's destination set, so the
+    loop just chains layers — exactly the full-graph forward with the
+    graph swapped per layer. The final block's destinations are the
+    seeds: the return value is (batch_size, d_out), no slicing needed.
+    """
+    if len(layers) != len(blocks):
+        raise ValueError(f"{len(layers)} layers but {len(blocks)} blocks: "
+                         f"sampler fanouts must match model depth")
+    for i, (lyr, blk) in enumerate(zip(layers, blocks)):
+        if train and rng is not None and drop > 0.0:
+            rng, sub = jax.random.split(rng)
+            h = dropout(sub, h, drop, train)
+        h = block_layer(lyr, blk, h, strategy=strategy)
+        if i < len(layers) - 1:
+            h = activation(h)
+    return h

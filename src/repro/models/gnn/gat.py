@@ -15,9 +15,11 @@ import jax
 import jax.numpy as jnp
 
 from ...core.binary_reduce import gspmm
-from ...core.edge_softmax import edge_softmax, edge_softmax_fused
+from ...core.blocks import block_gspmm
+from ...core.edge_softmax import (edge_softmax, edge_softmax_fused,
+                                  block_edge_softmax)
 from ...substrate.nn import glorot, dropout, leaky_relu
-from .common import GraphBundle
+from .common import GraphBundle, run_blocks
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int, n_heads: int = 4,
@@ -74,3 +76,34 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
         if i < n_layers - 1:
             h = jax.nn.elu(h)
     return h
+
+
+def block_layer(lyr, blk, h: jnp.ndarray, *,
+                strategy: str = "auto") -> jnp.ndarray:
+    """One GAT layer on a sampled block.
+
+    Attention logits are per-edge over the block's sampled edges; the
+    destination-side term uses ``z[:n_dst_real]`` (dst-first numbering)
+    padded with one dummy row, and the softmax normalizes over each
+    destination's REAL in-edges only (pads live in the dummy row)."""
+    bg = blk.bg
+    heads, out = lyr["attn_l"].shape
+    z = (h @ lyr["w"]).reshape(-1, heads, out)           # (n_src_pad, H, F)
+    el = jnp.sum(z * lyr["attn_l"], axis=-1)             # (n_src_pad, H)
+    er = jnp.sum(z[: bg.n_dst_real] * lyr["attn_r"], axis=-1)
+    er = jnp.concatenate([er, jnp.zeros((1, heads), er.dtype)], axis=0)
+    logits = gspmm(bg.g, "u_add_v_copy_e", u=el, v=er)
+    logits = leaky_relu(logits)
+    alpha = block_edge_softmax(bg, logits, strategy=strategy)  # (nnz, H)
+    out_feat = block_gspmm(bg, "u_mul_e_add_v", u=z, e=alpha[:, :, None],
+                           strategy=strategy)            # (nd, H, F)
+    return out_feat.reshape(bg.n_dst_real, heads * out)
+
+
+def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
+                   strategy: str = "auto", train: bool = False, rng=None,
+                   drop: float = 0.4) -> jnp.ndarray:
+    """Sampled mini-batch forward on the shared block path."""
+    return run_blocks(block_layer, params["layers"], blocks, x,
+                      strategy=strategy, activation=jax.nn.elu,
+                      train=train, rng=rng, drop=drop)

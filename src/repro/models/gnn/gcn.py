@@ -15,9 +15,10 @@ import jax
 import jax.numpy as jnp
 
 from ...core.binary_reduce import gspmm
+from ...core.blocks import block_gspmm
 from ...core.training_ops import weighted_copy_reduce
 from ...substrate.nn import linear_init, linear_apply, dropout
-from .common import GraphBundle
+from .common import GraphBundle, run_blocks
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int,
@@ -48,3 +49,23 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
         if i < n_layers - 1:
             h = jax.nn.relu(h)
     return h
+
+
+def block_layer(lyr, blk, h: jnp.ndarray, *,
+                strategy: str = "auto") -> jnp.ndarray:
+    """One GCN layer on a sampled block: linear, then the weighted sum
+    ``u_mul_e_add_v`` with the FULL graph's symmetric normalization
+    gathered per sampled edge (``blk.gcn_norm``; pad edges weigh 0).
+    With fanout ≥ max in-degree this is exactly the full-graph layer."""
+    h = linear_apply(lyr, h)
+    return block_gspmm(blk.bg, "u_mul_e_add_v", u=h,
+                       e=blk.gcn_norm[:, None], strategy=strategy)
+
+
+def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
+                   strategy: str = "auto", train: bool = False, rng=None,
+                   drop: float = 0.5) -> jnp.ndarray:
+    """Sampled mini-batch forward on the shared block path."""
+    return run_blocks(block_layer, params["layers"], blocks, x,
+                      strategy=strategy, activation=jax.nn.relu,
+                      train=train, rng=rng, drop=drop)

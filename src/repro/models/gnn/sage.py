@@ -11,9 +11,10 @@ import jax
 import jax.numpy as jnp
 
 from ...core.binary_reduce import gspmm
+from ...core.blocks import block_gspmm
 from ...core.training_ops import weighted_copy_reduce
 from ...substrate.nn import linear_init, linear_apply, dropout
-from .common import GraphBundle
+from .common import GraphBundle, run_blocks
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int,
@@ -46,22 +47,31 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
     return h
 
 
+def block_layer(lyr, blk, h: jnp.ndarray, *,
+                strategy: str = "auto") -> jnp.ndarray:
+    """One SAGE layer on a sampled block: mean over sampled in-edges
+    (mask-corrected, pad slots contribute zero) concat the destination's
+    own features (dst-first numbering: ``h[:n_dst_real]``)."""
+    bg = blk.bg
+    hn = block_gspmm(bg, "u_copy_mean_v", u=h, strategy=strategy)
+    return linear_apply(lyr, jnp.concatenate(
+        [h[: bg.n_dst_real], hn], axis=-1))
+
+
+def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
+                   strategy: str = "auto", train: bool = False, rng=None,
+                   drop: float = 0.5) -> jnp.ndarray:
+    """Sampled mini-batch forward (paper Fig. 3) on the shared path."""
+    return run_blocks(block_layer, params["layers"], blocks, x,
+                      strategy=strategy, activation=jax.nn.relu,
+                      train=train, rng=rng, drop=drop)
+
+
 def forward_sampled(params: Dict, blocks, feats_fn, *,
                     strategy: str = "auto", batch_size: int
                     ) -> jnp.ndarray:
-    """Sampled mini-batch forward (paper Fig. 3).
-
-    ``blocks``: list of SampledBlock (outermost hop first), block graphs
-    have a trailing dummy destination row (see data.sampler). ``feats_fn``
-    maps padded global ids (-1 = pad) to zero-padded features.
-    """
+    """Back-compat wrapper: gather inputs via ``feats_fn`` then run the
+    shared block path. ``feats_fn`` maps padded global ids (-1 = pad) to
+    zero-padded features."""
     h = feats_fn(blocks[0].src_ids)
-    for i, (blk, lyr) in enumerate(zip(blocks, params["layers"])):
-        g = blk.graph
-        hn = gspmm(g, "u_copy_mean_v", u=h, strategy=strategy)
-        h_self = h[: g.n_dst - 1]            # drop dummy row sources
-        h = linear_apply(lyr, jnp.concatenate(
-            [h_self, hn[: g.n_dst - 1]], axis=-1))
-        if i < len(params["layers"]) - 1:
-            h = jax.nn.relu(h)
-    return h[:batch_size]
+    return forward_blocks(params, blocks, h, strategy=strategy)[:batch_size]

@@ -5,22 +5,11 @@ import pytest
 
 pytest.importorskip("hypothesis",
                     reason="property tests need hypothesis installed")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, settings
 
 from repro.core import (from_coo, gspmm, copy_reduce, build_ell, build_tiles,
                         reverse, parse_op)
-
-
-@st.composite
-def graphs(draw, max_n=40, max_e=150):
-    n_u = draw(st.integers(1, max_n))
-    n_v = draw(st.integers(1, max_n))
-    nnz = draw(st.integers(1, max_e))
-    seed = draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(seed)
-    src = rng.integers(0, n_u, nnz)
-    dst = rng.integers(0, n_v, nnz)
-    return src, dst, n_u, n_v, rng
+from tests.graphgen import graphs
 
 
 @settings(max_examples=25, deadline=None)

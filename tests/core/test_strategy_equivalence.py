@@ -1,0 +1,172 @@
+"""Cross-strategy differential harness.
+
+For random graphs, every execution strategy that *supports* a
+(op, reducer) node-output config must produce (a) the same gspmm output
+and (b) the same VJPs w.r.t. every differentiable operand as the
+segment reference. This is the contract that lets the planner swap
+strategies freely inside differentiated train steps — including the
+pallas kernels, whose adjoint is the segment path by construction
+(``core.binary_reduce._gspmm_pallas_diff``).
+
+Graphs come from the shared generator in ``tests.graphgen`` (unique
+edges: parallel duplicate edges tie max/min subgradients, which
+strategies may legitimately break differently). The checks run twice:
+hypothesis-generated graphs when hypothesis is installed, and a seeded
+fallback sweep that always runs on the bare tier-1 environment.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import block_gspmm, from_coo, gspmm, parse_op, planner
+from tests.graphgen import random_graph
+
+try:
+    from hypothesis import given, settings
+    from tests.graphgen import graphs
+    HAS_HYPOTHESIS = True
+except ImportError:
+    HAS_HYPOTHESIS = False
+
+STRATEGIES = ("push", "ell", "onehot", "pallas")   # vs segment reference
+
+# node-output templates × reducers; {} is filled with the reducer name
+OP_TEMPLATES = ("u_copy_{}_v", "u_mul_e_{}_v", "e_copy_{}_v",
+                "u_add_v_{}_v", "u_dot_v_{}_v")
+REDUCERS = ("add", "max", "min", "mul", "mean")
+
+
+def _operands(rng, g, d=5):
+    """Well-conditioned operands: bounded away from 0 (div/prod), edge
+    data scalar-width so the MXU strategies qualify."""
+    def draw(shape):
+        x = rng.uniform(0.5, 1.5, size=shape).astype(np.float32)
+        sgn = np.where(rng.random(shape) < 0.5, -1.0,
+                       1.0).astype(np.float32)
+        return jnp.asarray(x * sgn)
+    return {"u": draw((g.n_src, d)), "v": draw((g.n_dst, d)),
+            "e": draw((g.n_edges, 1))}
+
+
+def _value_and_grads(g, name, spec, operands, ct, strategy):
+    """gspmm output + VJPs w.r.t. the spec's present operands."""
+    keys = [spec.lhs] + ([spec.rhs] if spec.rhs else [])
+    args = {k: operands[k] for k in keys}
+
+    def f(a):
+        return jnp.sum(gspmm(g, name, **a, strategy=strategy) * ct)
+
+    val = gspmm(g, name, **args, strategy=strategy)
+    grads = jax.grad(f)(args)
+    return val, grads
+
+
+def check_all_strategies(src, dst, n_u, n_v, rng):
+    """The differential property proper (shared by both entry points)."""
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    operands = _operands(rng, g)
+    ct = jnp.asarray(rng.normal(size=(g.n_dst, 5)).astype(np.float32))
+
+    for template in OP_TEMPLATES:
+        for red in REDUCERS:
+            name = template.format(red)
+            spec = parse_op(name)
+            lhs = operands[spec.lhs]
+            rhs = operands[spec.rhs] if spec.rhs else None
+            ct_d = ct[:, :1] if spec.op == "dot" else ct
+            # jax implements no scatter/segment-prod transpose for
+            # duplicate indices — the prod reducer is forward-only for
+            # EVERY strategy, so its differential check is output-only
+            diff = red != "mul"
+            args = {k: operands[k]
+                    for k in [spec.lhs] + ([spec.rhs] if spec.rhs else [])}
+            if diff:
+                ref, ref_g = _value_and_grads(g, name, spec, operands,
+                                              ct_d, "segment")
+            else:
+                ref = gspmm(g, name, **args, strategy="segment")
+            for s in STRATEGIES:
+                if not planner.supports(s, spec, lhs, rhs):
+                    continue   # pinned call would fall back, not execute
+                tag = f"{name} via {s}"
+                if diff:
+                    out, out_g = _value_and_grads(g, name, spec, operands,
+                                                  ct_d, s)
+                    for k in ref_g:
+                        np.testing.assert_allclose(
+                            np.asarray(out_g[k]), np.asarray(ref_g[k]),
+                            rtol=1e-4, atol=1e-4,
+                            err_msg=f"d/d{k}: {tag}")
+                else:
+                    out = gspmm(g, name, **args, strategy=s)
+                np.testing.assert_allclose(
+                    np.asarray(out), np.asarray(ref), rtol=1e-4,
+                    atol=1e-4, err_msg=f"output: {tag}")
+
+
+def check_block_pull(src, dst, n_u, n_v, rng):
+    """Uniform block pull == segment on the SAME padded block graph —
+    outputs and VJPs — for the configs the apps run on blocks."""
+    from repro.data import NeighborSampler
+
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
+    fanout = max(1, int(np.asarray(g.in_degrees).max()))
+    batch = min(4, g.n_dst)
+    sampler = NeighborSampler(g, fanouts=[fanout], batch_size=batch,
+                              seed=0)
+    seeds = rng.permutation(g.n_dst)[:batch]
+    mb = sampler.sample(seeds, np.zeros(len(seeds), np.int64))
+    bg = mb.blocks[0].bg
+    u = jnp.asarray(rng.normal(size=(bg.g.n_src, 4)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(bg.g.n_edges, 1)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(bg.n_dst_real, 4)).astype(np.float32))
+
+    for name, args in [("u_copy_mean_v", {"u": u}),
+                       ("u_mul_e_add_v", {"u": u, "e": e}),
+                       ("u_copy_max_v", {"u": u})]:
+        outs, grads = {}, {}
+        for s in ("ell", "segment"):
+            outs[s] = block_gspmm(bg, name, **args, strategy=s)
+            for k in args:
+                grads[s, k] = jax.grad(
+                    lambda x, k=k, s=s: jnp.sum(block_gspmm(
+                        bg, name, **{**args, k: x}, strategy=s) * ct)
+                )(args[k])
+        np.testing.assert_allclose(np.asarray(outs["ell"]),
+                                   np.asarray(outs["segment"]),
+                                   rtol=1e-4, atol=1e-4, err_msg=name)
+        for k in args:
+            np.testing.assert_allclose(
+                np.asarray(grads["ell", k]),
+                np.asarray(grads["segment", k]),
+                rtol=1e-4, atol=1e-4, err_msg=f"d/d{k}: {name}")
+
+
+# ---------------- seeded sweep: always runs on tier-1 ----------------- #
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_outputs_and_vjps_agree_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n_u, n_v, nnz = [(18, 12, 60), (24, 24, 90), (7, 30, 45)][seed]
+    g, src, dst = random_graph(rng, n_u, n_v, nnz, unique=True)
+    check_all_strategies(src, dst, n_u, n_v, rng)
+
+
+@pytest.mark.parametrize("seed", [3, 4])
+def test_block_pull_matches_segment_seeded(seed):
+    rng = np.random.default_rng(seed)
+    g, src, dst = random_graph(rng, 20, 15, 60, unique=True)
+    check_block_pull(src, dst, 20, 15, rng)
+
+
+# ---------------- hypothesis search: richer shapes -------------------- #
+if HAS_HYPOTHESIS:
+    @settings(max_examples=6, deadline=None)
+    @given(graphs(max_n=24, max_e=90, unique=True))
+    def test_outputs_and_vjps_agree_hypothesis(data):
+        check_all_strategies(*data)
+
+    @settings(max_examples=4, deadline=None)
+    @given(graphs(max_n=20, max_e=60, unique=True))
+    def test_block_pull_matches_segment_hypothesis(data):
+        check_block_pull(*data)

@@ -1,0 +1,80 @@
+"""Prefetcher / signature-tracker unit tests (host pipeline)."""
+import time
+
+import pytest
+
+from repro.data import Prefetcher, SignatureTracker, prefetch
+
+
+def test_prefetch_preserves_sequence():
+    assert list(prefetch(iter(range(20)), depth=2)) == list(range(20))
+
+
+def test_prefetch_exhausted_keeps_raising_stopiteration():
+    it = prefetch(iter(range(3)), depth=2)
+    assert list(it) == [0, 1, 2]
+    # iterator protocol: further next() calls must raise again, not hang
+    assert next(it, None) is None
+    assert next(it, None) is None
+
+
+def test_prefetch_propagates_producer_exception():
+    def gen():
+        yield 1
+        yield 2
+        raise ValueError("boom")
+
+    it = prefetch(gen(), depth=2)
+    assert next(it) == 1
+    assert next(it) == 2
+    with pytest.raises(ValueError, match="boom"):
+        next(it)
+
+
+def test_prefetch_runs_ahead():
+    """With depth 2 the producer works ahead of the consumer."""
+    produced = []
+
+    def gen():
+        for i in range(5):
+            produced.append(i)
+            yield i
+
+    it = prefetch(gen(), depth=2)
+    first = next(it)
+    assert first == 0
+    deadline = time.time() + 2.0
+    while len(produced) < 3 and time.time() < deadline:
+        time.sleep(0.01)    # producer should fill the buffer unprompted
+    assert len(produced) >= 3
+    it.close()
+
+
+def test_close_stops_producer_early():
+    state = {"n": 0}
+
+    def gen():
+        while True:
+            state["n"] += 1
+            yield state["n"]
+
+    it = Prefetcher(gen(), depth=2)
+    next(it)
+    it.close()
+    n_after_close = state["n"]
+    time.sleep(0.1)
+    assert state["n"] == n_after_close   # producer actually stopped
+    # a closed iterator is exhausted — never a hang or a stale item
+    with pytest.raises(StopIteration):
+        next(it)
+
+
+def test_signature_tracker_trips_on_shape_drift():
+    t = SignatureTracker(limit=2)
+    assert t.observe(("a",)) is True
+    assert t.observe(("a",)) is False
+    t.observe(("b",))
+    t.assert_bounded()
+    t.observe(("c",))
+    with pytest.raises(RuntimeError, match="shape signatures"):
+        t.assert_bounded()

@@ -1,0 +1,167 @@
+"""Sampler property tests (paper Fig. 3 preconditions).
+
+The properties the minibatch subsystem leans on:
+
+* determinism — same seed ⇒ bit-identical batches;
+* padding hygiene — pad slots/edges contribute EXACTLY zero to mean
+  aggregation, even when the dummy feature row is poisoned;
+* fanout bounds — no destination ever receives more than ``fanout``
+  sampled in-edges, and sampling is without replacement;
+* exactness — with fanout ≥ max in-degree the blocks contain every
+  in-edge, so the sampled forward equals the full-graph forward for
+  every app on the shared block path (SAGE, GCN, GAT).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import block_gspmm
+from repro.data import NeighborSampler, make_node_dataset
+from repro.models.gnn import gat, gcn, sage
+from repro.models.gnn.common import (block_features, make_bundle,
+                                     pad_features)
+from tests.graphgen import random_graph
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    return make_node_dataset("tiny")
+
+
+def _batches(sampler, ids, labels, n=3):
+    out = []
+    for i, mb in enumerate(sampler.batches(ids, labels)):
+        out.append(mb)
+        if i + 1 >= n:
+            break
+    return out
+
+
+def test_seed_determinism(tiny):
+    g, feats, labels, tm, vm, nc = tiny
+    ids = np.nonzero(tm)[0]
+    a = _batches(NeighborSampler(g, [4, 4], 16, seed=7), ids, labels[ids])
+    b = _batches(NeighborSampler(g, [4, 4], 16, seed=7), ids, labels[ids])
+    c = _batches(NeighborSampler(g, [4, 4], 16, seed=8), ids, labels[ids])
+    for mb_a, mb_b in zip(a, b):
+        assert (np.asarray(mb_a.seed_ids) == np.asarray(mb_b.seed_ids)).all()
+        for blk_a, blk_b in zip(mb_a.blocks, mb_b.blocks):
+            np.testing.assert_array_equal(np.asarray(blk_a.bg.nbr),
+                                          np.asarray(blk_b.bg.nbr))
+            np.testing.assert_array_equal(np.asarray(blk_a.src_ids),
+                                          np.asarray(blk_b.src_ids))
+            np.testing.assert_array_equal(np.asarray(blk_a.bg.g.src),
+                                          np.asarray(blk_b.bg.g.src))
+    assert any((np.asarray(x.seed_ids) != np.asarray(y.seed_ids)).any()
+               for x, y in zip(a, c))
+
+
+def test_reset_replays_stream(tiny):
+    g, feats, labels, tm, vm, nc = tiny
+    ids = np.nonzero(tm)[0]
+    s = NeighborSampler(g, [3], 8, seed=5)
+    first = _batches(s, ids, labels[ids], n=2)
+    s.reset()
+    again = _batches(s, ids, labels[ids], n=2)
+    for mb1, mb2 in zip(first, again):
+        np.testing.assert_array_equal(np.asarray(mb1.input_ids),
+                                      np.asarray(mb2.input_ids))
+
+
+@pytest.mark.parametrize("strategy", ["ell", "segment", "push"])
+def test_pad_rows_contribute_zero_to_mean(strategy):
+    """Poisoning every PAD source slot's features must not change any
+    real row of the mean aggregation, for every block strategy."""
+    rng = np.random.default_rng(0)
+    g, src, dst = random_graph(rng, 40, 40, 160)
+    sampler = NeighborSampler(g, fanouts=[3], batch_size=8, seed=1)
+    seeds = rng.permutation(g.n_dst)[:8]
+    mb = sampler.sample(seeds, np.zeros(8, np.int64))
+    blk = mb.blocks[0]
+    bg = blk.bg
+    feats = rng.normal(size=(g.n_src, 6)).astype(np.float32)
+    h = block_features(pad_features(feats), blk.src_ids)
+    poison = np.asarray(h).copy()
+    poison[np.asarray(blk.src_ids) < 0] = 1e9      # garbage in pad slots
+    clean = block_gspmm(bg, "u_copy_mean_v", u=h, strategy=strategy)
+    dirty = block_gspmm(bg, "u_copy_mean_v", u=jnp.asarray(poison),
+                        strategy=strategy)
+    np.testing.assert_array_equal(np.asarray(clean), np.asarray(dirty))
+    # and the mean denominator is the REAL degree, not the padded width
+    s = block_gspmm(bg, "u_copy_add_v", u=h, strategy=strategy)
+    deg = np.maximum(np.asarray(bg.real_deg), 1)[:, None]
+    np.testing.assert_allclose(np.asarray(clean), np.asarray(s) / deg,
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_fanout_bounds_and_no_replacement():
+    rng = np.random.default_rng(2)
+    # unique edges: without-replacement sampling repeats a neighbor only
+    # through parallel edges, which a simple graph rules out
+    g, src, dst = random_graph(rng, 60, 60, 600, unique=True)
+    fanout = 5
+    sampler = NeighborSampler(g, fanouts=[fanout], batch_size=16, seed=3)
+    indptr = np.asarray(g.indptr_dst)
+    gsrc = np.asarray(g.src)
+    for mb in _batches(sampler, np.arange(g.n_dst),
+                       np.zeros(g.n_dst, np.int64), n=3):
+        blk = mb.blocks[0]
+        bg = blk.bg
+        real_deg = np.asarray(bg.real_deg)
+        mask = np.asarray(bg.nbr_mask)
+        assert (real_deg <= fanout).all()
+        assert (mask.sum(1) == real_deg).all()
+        seeds = np.asarray(mb.seed_ids)
+        src_ids = np.asarray(blk.src_ids)
+        nbr = np.asarray(bg.nbr)
+        for j, node in enumerate(seeds):
+            if node < 0:
+                continue
+            in_deg = indptr[node + 1] - indptr[node]
+            # never more than min(fanout, degree) samples
+            assert real_deg[j] == min(fanout, in_deg)
+            neigh = src_ids[nbr[j][mask[j]]]
+            # without replacement: sampled globals are distinct, and all
+            # are true in-neighbors of the seed
+            true_nb = gsrc[indptr[node]:indptr[node + 1]]
+            assert len(set(neigh.tolist())) == len(neigh)
+            assert set(neigh.tolist()) <= set(true_nb.tolist())
+
+
+def test_short_final_batch_padded_and_masked(tiny):
+    g, feats, labels, tm, vm, nc = tiny
+    ids = np.nonzero(tm)[0][:37]        # 37 = 2×16 + 5 tail
+    sampler = NeighborSampler(g, [3], 16, seed=0)
+    mbs = list(sampler.batches(ids, labels[ids], drop_last=False))
+    assert len(mbs) == 3
+    for mb in mbs:
+        assert mb.seed_ids.shape == (16,)
+        assert mb.labels.shape == (16,)
+    tail = mbs[-1]
+    assert int(tail.label_mask.sum()) == 5
+    assert (np.asarray(tail.seed_ids)[np.asarray(~tail.label_mask)]
+            == -1).all()
+    # padded batch keeps the one static shape signature
+    assert tail.shape_signature() == mbs[0].shape_signature()
+
+
+@pytest.mark.parametrize("mod", [sage, gcn, gat],
+                         ids=["sage", "gcn", "gat"])
+def test_sampled_equals_full_when_fanout_covers_degree(tiny, mod):
+    """fanout ≥ max in-degree ⇒ blocks hold every in-edge ⇒ the sampled
+    forward must equal the full-graph forward on the seed rows."""
+    g, feats, labels, tm, vm, nc = tiny
+    maxdeg = int(np.asarray(g.in_degrees).max())
+    sampler = NeighborSampler(g, fanouts=[maxdeg, maxdeg], batch_size=16,
+                              seed=4)
+    ids = np.nonzero(tm)[0][:16]
+    mb = sampler.sample(ids, labels[ids])
+    bundle = make_bundle(g)
+    params = mod.init(jax.random.PRNGKey(0), feats.shape[1], 16, nc)
+    full = mod.forward(params, bundle, jnp.asarray(feats))
+    x = block_features(pad_features(feats), mb.input_ids)
+    sampled = mod.forward_blocks(params, mb.blocks, x)
+    ref = np.asarray(full)[np.asarray(mb.seed_ids)]
+    np.testing.assert_allclose(np.asarray(sampled), ref,
+                               rtol=2e-4, atol=2e-5)

@@ -1,0 +1,52 @@
+"""Shared random-graph generators for the test suite.
+
+Two flavours:
+
+* :func:`random_graph` — plain seeded-numpy generator, usable on the
+  bare tier-1 environment (no hypothesis).
+* :func:`graphs` — a hypothesis composite strategy emitting
+  ``(src, dst, n_u, n_v, rng)`` tuples. Only defined when hypothesis is
+  installed; test files that need it must ``pytest.importorskip`` first.
+
+Both support ``unique=True`` (dedup (src, dst) pairs), which the
+differential VJP tests rely on: duplicate parallel edges make max/min
+reductions tie between identical messages, and different strategies may
+then route the subgradient to different edges.
+"""
+import numpy as np
+
+
+def random_edges(rng, n_src, n_dst, nnz, *, unique=False):
+    """Random COO arrays; ``unique`` dedups (src, dst) pairs — the ONE
+    place that rule lives, shared by both generator flavours."""
+    src = rng.integers(0, n_src, nnz)
+    dst = rng.integers(0, n_dst, nnz)
+    if unique:
+        pairs = np.unique(np.stack([src, dst], 1), axis=0)
+        src, dst = pairs[:, 0], pairs[:, 1]
+    return src, dst
+
+
+def random_graph(rng, n_src, n_dst, nnz, *, unique=False):
+    """Random COO arrays + a repro.core Graph built from them."""
+    from repro.core import from_coo
+    src, dst = random_edges(rng, n_src, n_dst, nnz, unique=unique)
+    g = from_coo(src, dst, n_src=n_src, n_dst=n_dst)
+    return g, src, dst
+
+
+try:
+    from hypothesis import strategies as st
+
+    @st.composite
+    def graphs(draw, max_n=40, max_e=150, unique=False):
+        """(src, dst, n_u, n_v, rng): random graph + its seeded rng."""
+        n_u = draw(st.integers(1, max_n))
+        n_v = draw(st.integers(1, max_n))
+        nnz = draw(st.integers(1, max_e))
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        src, dst = random_edges(rng, n_u, n_v, nnz, unique=unique)
+        return src, dst, n_u, n_v, rng
+except ImportError:      # hypothesis is optional on tier-1
+    graphs = None

@@ -2,13 +2,12 @@
 
 These re-exec themselves in a subprocess with
 XLA_FLAGS=--xla_force_host_platform_device_count=8 so the main pytest
-process keeps seeing the single real CPU device.
+process keeps seeing the single real CPU device. The runner converts
+emulation crashes (signal death) into skips — see tests/conftest.py.
 """
-import os
-import subprocess
-import sys
-
 import pytest
+
+from tests.conftest import run_multidevice
 
 _RING_PROG = r"""
 import os
@@ -81,21 +80,13 @@ print("SHARDED_TRAIN_OK")
 """
 
 
-def _run(prog: str, timeout=900):
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
-    return subprocess.run([sys.executable, "-c", prog], env=env,
-                          capture_output=True, text=True, timeout=timeout)
-
-
 def test_ring_copy_reduce_8dev():
-    r = _run(_RING_PROG)
+    r = run_multidevice(_RING_PROG)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "RING_OK" in r.stdout
 
 
 def test_sharded_train_matches_single_device():
-    r = _run(_SHARDED_TRAIN_PROG)
+    r = run_multidevice(_SHARDED_TRAIN_PROG)
     assert r.returncode == 0, r.stderr[-3000:]
     assert "SHARDED_TRAIN_OK" in r.stdout

@@ -1,8 +1,4 @@
 """Elastic restart (mesh-shape change across restore) + grad compression."""
-import os
-import subprocess
-import sys
-
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -10,6 +6,7 @@ import jax.numpy as jnp
 from repro.optim.compression import (int8_compress, int8_decompress,
                                      quantize_with_feedback,
                                      compressed_allreduce_terms)
+from tests.conftest import run_multidevice
 
 
 def test_int8_roundtrip_error_bounded():
@@ -93,16 +90,9 @@ else:
 
 def test_elastic_restart_different_mesh(tmp_path):
     """Save on a (2,4) mesh, restore + train on a (4,2) mesh."""
-    env = dict(os.environ)
-    env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
-    r1 = subprocess.run([sys.executable, "-c", _ELASTIC_PROG,
-                         str(tmp_path), "save"], env=env,
-                        capture_output=True, text=True, timeout=900)
+    r1 = run_multidevice(_ELASTIC_PROG, str(tmp_path), "save")
     assert r1.returncode == 0, r1.stderr[-3000:]
     assert "SAVED" in r1.stdout
-    r2 = subprocess.run([sys.executable, "-c", _ELASTIC_PROG,
-                         str(tmp_path), "restore"], env=env,
-                        capture_output=True, text=True, timeout=900)
+    r2 = run_multidevice(_ELASTIC_PROG, str(tmp_path), "restore")
     assert r2.returncode == 0, r2.stderr[-3000:]
     assert "RESTORED_OK" in r2.stdout
