@@ -6,6 +6,8 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   br    — BR/CR primitive configs (Table 2)
   prims — BatchNorm1d / Embedding (paper §4)
   spmm  — CR strategy sweep
+  partitioned — multi-device ring training swept over shard counts
+                (2/4/8 host-emulated shards, GCN/SAGE/GAT + delayed halo)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One section: ``PYTHONPATH=src python -m benchmarks.run --only fig2``
@@ -25,7 +27,8 @@ import sys
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    choices=["fig2", "fig3", "br", "prims", "spmm"])
+                    choices=["fig2", "fig3", "br", "prims", "spmm",
+                             "partitioned"])
     ap.add_argument("--strategy", default=None,
                     choices=["auto", "push", "segment", "ell", "onehot",
                              "pallas"],
@@ -43,6 +46,7 @@ def main() -> None:
         "br": "benchmarks.br_primitives",
         "prims": "benchmarks.framework_prims",
         "spmm": "benchmarks.kernels_bench",
+        "partitioned": "benchmarks.fig_partitioned",
     }
     import importlib
 

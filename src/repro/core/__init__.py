@@ -3,7 +3,11 @@ from .graph import Graph, from_coo, reverse, add_self_loops
 from .tiling import (ELLPack, ELLClass, TilePack, build_ell,
                      build_ell_uniform, build_tiles)
 from . import planner
-from .planner import GraphStats, Plan, PlanCache, get_plan_cache
+from .planner import (GraphStats, Plan, PlanCache, get_plan_cache,
+                      use_ring, active_ring)
+from .partition import (PartitionStats, PartitionedGraph, build_partition,
+                        ring_gspmm, ring_edge_values, bucket_softmax,
+                        local_gspmm, ring_gspmm_delayed, ring_reference)
 from .binary_reduce import (BRSpec, parse_op, gspmm, copy_reduce,
                             binary_reduce, BINARY_OPS, REDUCE_OPS)
 from .edge_softmax import (edge_softmax, edge_softmax_fused,
@@ -16,6 +20,10 @@ __all__ = [
     "ELLPack", "ELLClass", "TilePack", "build_ell",
     "build_ell_uniform", "build_tiles",
     "planner", "GraphStats", "Plan", "PlanCache", "get_plan_cache",
+    "use_ring", "active_ring",
+    "PartitionStats", "PartitionedGraph", "build_partition",
+    "ring_gspmm", "ring_edge_values", "bucket_softmax",
+    "local_gspmm", "ring_gspmm_delayed", "ring_reference",
     "BRSpec", "parse_op", "gspmm", "copy_reduce", "binary_reduce",
     "BINARY_OPS", "REDUCE_OPS",
     "edge_softmax", "edge_softmax_fused",

@@ -180,6 +180,8 @@ def _execute(g: Graph, spec: BRSpec, lhs_data, rhs_data,
         return _gspmm_onehot(g, spec, plan.tiles, lhs_data, rhs_data)
     if plan.strategy == "pallas":
         return _gspmm_pallas_diff(g, spec, plan.tiles, lhs_data, rhs_data)
+    if plan.strategy == "ring":
+        return _gspmm_ring(g, spec, plan.partition, lhs_data, rhs_data)
 
     # ---- generic path: per-edge messages then reduce
     lhs_val = _edge_val(g, spec.lhs, lhs_data)
@@ -198,6 +200,34 @@ def _execute(g: Graph, spec: BRSpec, lhs_data, rhs_data,
         return S.push_scatter(msg, tgt, n_tgt, spec.reduce, deg)
     # default: segment (Alg. 2)
     return S.pull_segment(msg, tgt, n_tgt, spec.reduce, deg)
+
+
+def _gspmm_ring(g: Graph, spec: BRSpec, pg, lhs_data, rhs_data
+                ) -> jnp.ndarray:
+    """Partitioned (multi-device ring) execution of a weighted CR.
+
+    The planner only routes here under an active :func:`planner.use_ring`
+    context (``supports``/``pack_available`` gate it), so the mesh is
+    live. Mean folds 1/deg into the per-edge weights — the ring itself
+    is a pure weighted CR-sum (core/partition.py). Layout conversions
+    happen per call; partitioned *training* keeps features in the
+    padded sharded layout end-to-end instead (models/gnn/train.py).
+    """
+    from .partition import ring_gspmm
+
+    ctx = planner.active_ring()
+    if spec.op == "mul":
+        w = rhs_data[:, 0]
+    else:                       # copy
+        w = jnp.ones((g.n_edges,), lhs_data.dtype)
+    if spec.reduce == "mean":
+        deg = jnp.maximum(g.in_degrees, 1).astype(lhs_data.dtype)
+        dst_caller = jnp.take(g.dst, g.eid_inv)
+        w = w / jnp.take(deg, dst_caller)
+    out = ring_gspmm(pg, pg.scatter_nodes(lhs_data), pg.scatter_edges(w),
+                     mesh=ctx.mesh if ctx is not None else None,
+                     axis=ctx.axis if ctx is not None else "data")
+    return pg.gather_nodes(out, g.n_dst)
 
 
 def _gspmm_pallas_diff(g: Graph, spec: BRSpec, tiles, lhs_data, rhs_data

@@ -183,15 +183,31 @@ def block_gspmm(bg: BlockGraph, op_name: str, *,
     rhs_data = _as2d(data[spec.rhs]) if spec.rhs is not None else None
     d = int(np.prod(lhs_data.shape[1:]))
 
+    runner = None
+    if planner.get_mode() == "autotune" and strategy == "auto":
+        concrete = (not planner.graph_is_traced(bg.g)
+                    and not planner._is_traced(lhs_data)
+                    and (rhs_data is None
+                         or not planner._is_traced(rhs_data)))
+        if concrete:    # measuring candidates only works eagerly
+            def runner(s):
+                return _block_execute(bg, spec, lhs_data, rhs_data, s)
+
     chosen = planner.plan_block_gspmm(bg.signature, spec, d,
-                                      requested=strategy)
+                                      requested=strategy, runner=runner)
+    return _block_execute(bg, spec, lhs_data, rhs_data, chosen)
+
+
+def _block_execute(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data,
+                   chosen: str) -> jnp.ndarray:
+    """Run one block aggregation with an already-resolved strategy."""
     if chosen == "ell":
         return _block_pull(bg, spec, lhs_data, rhs_data)
     # planning is already done (shape-keyed) — execute the resolved
     # strategy directly rather than re-entering gspmm's planning front
     # door, which would build a PlanCache + stats for every throwaway
     # per-batch block graph in eager mode
-    plan = planner.Plan(strategy=chosen, requested=strategy,
+    plan = planner.Plan(strategy=chosen, requested=chosen,
                         reason="block")
     out = _execute(bg.g, spec, lhs_data, rhs_data, plan)
     return out[: bg.n_dst_real]

@@ -1,143 +1,53 @@
-"""Distributed Copy-Reduce: the paper's K-blocking mapped to a device ring.
+"""Back-compat shims over :mod:`repro.core.partition`.
 
-1-D partitioning: destination rows (and their output) are sharded across
-the 'data' axis; source features are sharded the same way. Each device
-owns the edges whose DESTINATION falls in its shard (pull model — owner
-computes, no write conflicts across devices, exactly the paper's Alg. 2
-argument lifted to the cluster level).
+This module used to carry its own ring plan (``RingPartition`` +
+``plan_ring``) and its own single-device oracle — an orphaned,
+forward-only primitive no app or planner could reach. PR 3 promoted
+that 130-line sketch into the partitioned-execution subsystem
+(``core/partition.py``: pytree partition plans, a differentiable ring
+with a transposed-ring VJP, planner integration, partitioned training).
+The old entry points below delegate:
 
-The source features a device needs live on other shards. Instead of an
-up-front all-gather (peak memory = full feature matrix), the shards rotate
-around a ``lax.ppermute`` ring: at stage s, device d holds shard
-(d - s) mod n and reduces the edges whose sources fall in that shard —
-**each ring stage is one paper K-block**: a bounded working set that is
-consumed fully while resident, then replaced. Compute at stage s overlaps
-the permute launched for stage s+1 (async collective start/done pairs in
-the HLO).
+* ``plan_ring(g, n)``            -> ``build_partition(g, n, "uniform")``
+  (the old fixed ``id // rows`` layout is the ``uniform`` mode, under
+  which the padded layout is the identity: ``x[:n]`` are the original
+  rows)
+* ``ring_copy_reduce(mesh, ...)``-> ``ring_gspmm`` with unit weights
+* ``ring_copy_reduce_reference`` -> ``ring_reference``
 
-Edges are pre-bucketed by source shard host-side (the radix-sort step at
-cluster granularity).
+The ring path is now covered by the shared cross-strategy differential
+harness (tests/core/test_strategy_equivalence.py) instead of a bespoke
+oracle, and by the multi-device tests in tests/launch/.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import List, Tuple
-
-import jax
 import jax.numpy as jnp
-import numpy as np
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
 from .graph import Graph
+from .partition import (PartitionedGraph, build_partition, ring_gspmm,
+                        ring_reference)
+
+__all__ = ["plan_ring", "ring_copy_reduce", "ring_copy_reduce_reference"]
 
 
-@dataclasses.dataclass(frozen=True, eq=False)
-class RingPartition:
-    """Host-side plan: per (dst-shard, src-shard) padded edge buckets."""
-    # (n_shards, n_shards, eb): [dst_shard][stage bucket] edges
-    src_local: np.ndarray   # source offset within its shard
-    dst_local: np.ndarray   # destination offset within its shard
-    mask: np.ndarray
-    n_shards: int
-    rows_per_shard: int
-    eb: int                 # max edges per bucket (padded)
+def plan_ring(g: Graph, n_shards: int) -> PartitionedGraph:
+    """Uniform-rows ring plan (the historical layout)."""
+    return build_partition(g, n_shards, mode="uniform")
 
 
-def plan_ring(g: Graph, n_shards: int) -> RingPartition:
-    src = np.asarray(g.src, np.int64)
-    dst = np.asarray(g.dst, np.int64)
-    n = max(g.n_src, g.n_dst)
-    rows = -(-n // n_shards)
-    src_shard = src // rows
-    dst_shard = dst // rows
-    buckets: List[List[List[Tuple[int, int]]]] = [
-        [[] for _ in range(n_shards)] for _ in range(n_shards)]
-    for s, d in zip(src, dst):
-        buckets[d // rows][s // rows].append((s % rows, d % rows))
-    eb = max(1, max(len(b) for row in buckets for b in row))
-    SL = np.zeros((n_shards, n_shards, eb), np.int32)
-    DL = np.zeros((n_shards, n_shards, eb), np.int32)
-    MK = np.zeros((n_shards, n_shards, eb), bool)
-    for i in range(n_shards):
-        for j in range(n_shards):
-            for k, (sl, dl) in enumerate(buckets[i][j]):
-                SL[i, j, k] = sl
-                DL[i, j, k] = dl
-                MK[i, j, k] = True
-    return RingPartition(src_local=SL, dst_local=DL, mask=MK,
-                         n_shards=n_shards, rows_per_shard=rows, eb=eb)
+def _unit_weights(plan: PartitionedGraph, dtype) -> jnp.ndarray:
+    return jnp.where(plan.mask, 1.0, 0.0).astype(dtype)
 
 
-def ring_copy_reduce(mesh: Mesh, plan: RingPartition, x: jnp.ndarray,
+def ring_copy_reduce(mesh: Mesh, plan: PartitionedGraph, x: jnp.ndarray,
                      axis: str = "data") -> jnp.ndarray:
-    """CR-sum over the ring. ``x``: (n_pad, d) with n_pad = shards×rows.
-
-    Returns (n_pad, d) destination sums, sharded like ``x``.
-    """
-    n_shards, rows, eb = plan.n_shards, plan.rows_per_shard, plan.eb
-    d = x.shape[-1]
-
-    def local_fn(xs, sl, dl, mk):
-        # xs: (1, rows, d) this device's source shard
-        # sl/dl/mk: (1, n_shards, eb) buckets for this DST shard
-        xs = xs[0]
-        sl, dl, mk = sl[0], dl[0], mk[0]
-        me = jax.lax.axis_index(axis)
-        out = jnp.zeros((rows, d), x.dtype)
-        # mark the accumulator as device-varying so the fori_loop carry
-        # type matches after ppermute (shard_map vma typing); pvary only
-        # exists on jax versions with explicit vma tracking — elsewhere
-        # the carry types already agree and no annotation is needed
-        pvary = getattr(jax.lax, "pvary", None)
-        if pvary is not None:
-            out = pvary(out, (axis,))
-        block = xs
-
-        def stage(s, carry):
-            out, block = carry
-            # shard id currently resident on this device
-            shard_id = (me - s) % n_shards
-            # kick off the NEXT block transfer (overlaps the reduce below)
-            nxt = jax.lax.ppermute(
-                block, axis,
-                [(i, (i + 1) % n_shards) for i in range(n_shards)])
-            # reduce the resident K-block's bucket
-            sel = jnp.take(sl, shard_id, axis=0)      # (eb,)
-            dls = jnp.take(dl, shard_id, axis=0)
-            mks = jnp.take(mk, shard_id, axis=0)
-            vals = jnp.take(block, sel, axis=0)       # (eb, d)
-            vals = jnp.where(mks[:, None], vals, 0)
-            out = out.at[dls].add(vals)
-            return out, nxt
-
-        out, _ = jax.lax.fori_loop(0, n_shards, stage, (out, block))
-        return out[None]
-
-    from jax.experimental.shard_map import shard_map
-    f = shard_map(local_fn, mesh=mesh,
-                  in_specs=(P(axis, None, None), P(axis, None, None),
-                            P(axis, None, None), P(axis, None, None)),
-                  out_specs=P(axis, None, None))
-    out = f(x.reshape(n_shards, rows, d),
-            jnp.asarray(plan.src_local),
-            jnp.asarray(plan.dst_local),
-            jnp.asarray(plan.mask))
-    return out.reshape(n_shards * rows, d)
+    """CR-sum over the ring. ``x``: (n_pad, d); returns (n_pad, d)."""
+    return ring_gspmm(plan, x, _unit_weights(plan, x.dtype),
+                      mesh=mesh, axis=axis)
 
 
-def ring_copy_reduce_reference(plan: RingPartition,
+def ring_copy_reduce_reference(plan: PartitionedGraph,
                                x: jnp.ndarray) -> jnp.ndarray:
     """Single-device oracle for the ring (same padded layout)."""
-    n_shards, rows = plan.n_shards, plan.rows_per_shard
-    d = x.shape[-1]
-    xs = x.reshape(n_shards, rows, d)
-    out = np.zeros((n_shards, rows, d), np.float32)
-    for i in range(n_shards):
-        for j in range(n_shards):
-            sl = plan.src_local[i, j]
-            dl = plan.dst_local[i, j]
-            mk = plan.mask[i, j]
-            vals = np.asarray(xs[j])[sl] * mk[:, None]
-            np.add.at(out[i], dl, vals)
-    return jnp.asarray(out.reshape(n_shards * rows, d))
+    return ring_reference(plan, x)

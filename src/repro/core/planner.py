@@ -28,6 +28,7 @@ Every decision is recorded in a process-wide plan log
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import os
 import time
@@ -48,15 +49,21 @@ __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "compute_stats", "estimate_cost", "plan_gspmm", "supports",
            "plan_log", "clear_plan_log", "last_plan", "pack_build_totals",
            "set_mode", "get_mode", "STRATEGIES", "FALLBACK_CHAIN",
-           "block_stats", "plan_block_gspmm", "clear_block_plans"]
+           "block_stats", "plan_block_gspmm", "clear_block_plans",
+           "use_ring", "active_ring", "RingContext"]
 
-STRATEGIES = ("push", "segment", "ell", "onehot", "pallas")
+STRATEGIES = ("push", "segment", "ell", "onehot", "pallas", "ring")
 
 # Soft-fallback order for unsupported specs: most specialized first.
 FALLBACK_CHAIN = ("pallas", "onehot", "ell", "segment")
 
-# Strategies the auto mode considers (push is the pinned baseline only).
-_AUTO_CANDIDATES = ("pallas", "onehot", "ell", "segment")
+# A pinned ring without a mesh degrades to its single-device analogue:
+# each ring stage is one K-block, so blocked pull is the natural stand-in.
+_RING_FALLBACK = ("ell", "segment")
+
+# Strategies the auto mode considers (push is the pinned baseline only;
+# ring only qualifies inside an active use_ring() context).
+_AUTO_CANDIDATES = ("ring", "pallas", "onehot", "ell", "segment")
 
 _DEFAULT_ELL_CAP = 64
 _DEFAULT_TILE_GEOM = (128, 128, 256)  # (bm, bk, eb) — build_tiles defaults
@@ -162,6 +169,7 @@ class PlanCache:
         self._tiles_by_geom: Dict[Tuple[int, int, int], TilePack] = {}
         self._uniform: Dict[int, ELLClass] = {}
         self._autotuned: Dict[Tuple, str] = {}
+        self._partitions: Dict[Tuple[int, str], Any] = {}
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
@@ -244,6 +252,34 @@ class PlanCache:
             _PACK_BUILDS["ell_uniform"] += 1
         return self._uniform[width]
 
+    def partition(self, n_shards: int, mode: str = "contiguous"):
+        """Memoized :class:`~repro.core.partition.PartitionedGraph` for
+        ``(n_shards, mode)`` — the ring strategy's pack. Host-side only
+        (a traced graph can't be partitioned); one build per process
+        per configuration, shared by direct gspmm calls, partitioned
+        model bundles and the benchmarks.
+
+        Like the keyed ``_ell_by_cap``/``_tiles_by_geom`` memos (and
+        unlike the default-geometry ell/tiles slots), partitions are
+        NOT pytree children — the dict's structure varies per build, so
+        a cache that crosses a jit boundary arrives without them and
+        ring never qualifies inside a trace. Partitioned *training*
+        does not route through gspmm's planner at all: it carries the
+        ``PartitionedGraph`` itself through jit (models/gnn/train.py).
+        """
+        key = (int(n_shards), mode)
+        if key not in self._partitions:
+            g = self._graph()
+            if g is None:
+                return None
+            from .partition import build_partition  # local: avoids cycle
+            self._partitions[key] = build_partition(g, n_shards, mode)
+            _PACK_BUILDS["partition"] += 1
+        return self._partitions[key]
+
+    def peek_partition(self, n_shards: int, mode: str = "contiguous"):
+        return self._partitions.get((int(n_shards), mode))
+
     # -- planning helpers -------------------------------------------------
     def prefers_ell(self, d: int) -> bool:
         """True when the cost model ranks blocked pull above segment."""
@@ -279,20 +315,29 @@ def get_plan_cache(g: Graph) -> PlanCache:
 # a real TPU (on CPU the Pallas kernels run in interpret mode).
 _THROUGHPUT = {
     "cpu": {"push": 6.0, "segment": 1.0, "ell": 0.35,
-            "onehot": 64.0, "pallas": 512.0},
+            "onehot": 64.0, "pallas": 512.0, "ring": 0.5},
     "tpu": {"push": 8.0, "segment": 1.5, "ell": 0.8,
-            "onehot": 0.5, "pallas": 0.25},
+            "onehot": 0.5, "pallas": 0.25, "ring": 0.6},
 }
 # Fixed per-call overhead (dispatch + padding setup), in element-ops.
 _FIXED = {"push": 0.0, "segment": 0.0, "ell": 2e4,
-          "onehot": 5e4, "pallas": 5e4}
+          "onehot": 5e4, "pallas": 5e4, "ring": 1e5}
 _ELL_CLASS_OVERHEAD = 1.5e3     # per degree class: one segment combine
 _TILE_EDGE_BUDGET = 256         # eb — edge slots per tile bucket
+_RING_COMM = 0.3   # per element moved per ring stage (ppermute traffic)
+_RING_DEFAULT_SHARDS = 8        # nominal S when no ring context is live
 
 
 def estimate_cost(strategy: str, stats: GraphStats, d: int,
-                  backend: Optional[str] = None) -> float:
-    """Estimated execution cost of one gspmm call, in element-ops."""
+                  backend: Optional[str] = None,
+                  ring_stats=None) -> float:
+    """Estimated execution cost of one gspmm call, in element-ops.
+
+    ``ring_stats`` (a :class:`~repro.core.partition.PartitionStats`)
+    refines the ``ring`` estimate with the real bucket padding; without
+    it the estimate assumes ideal balance over the active (or nominal)
+    shard count.
+    """
     backend = backend or jax.default_backend()
     tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])[strategy]
     dd = max(int(d), 1)
@@ -300,6 +345,21 @@ def estimate_cost(strategy: str, stats: GraphStats, d: int,
         work = stats.n_edges * dd
     elif strategy == "ell":
         work = stats.ell_padded_slots * dd
+    elif strategy == "ring":
+        # per-device slot work + per-stage ppermute traffic: the ring
+        # wins when the parallel split beats the communication tax —
+        # i.e. on big graphs with enough shards (graph size × S).
+        ctx = active_ring()
+        if ring_stats is not None:
+            S = ring_stats.n_shards
+            rows = ring_stats.rows_per_shard
+            work = S * ring_stats.eb * dd            # slots per device
+        else:
+            S = ctx.n_shards if ctx is not None else _RING_DEFAULT_SHARDS
+            rows = -(-max(stats.n_dst, 1) // S)
+            work = (stats.n_edges / S) * dd          # ideal balance
+        comm = _RING_COMM * (S - 1) * rows * dd
+        return tp * work + comm + _FIXED[strategy]
     else:  # onehot / pallas: padded tile-bucket slots (lower bound on T)
         n_buckets = max(1, -(-stats.n_edges // _TILE_EDGE_BUDGET))
         work = n_buckets * _TILE_EDGE_BUDGET * dd
@@ -307,6 +367,45 @@ def estimate_cost(strategy: str, stats: GraphStats, d: int,
     if strategy == "ell":
         cost += _ELL_CLASS_OVERHEAD * stats.ell_n_classes
     return cost
+
+
+# --------------------------------------------------------------------- #
+# ring (partitioned) execution context
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class RingContext:
+    """An installed device mesh makes ``ring`` a planner candidate."""
+    mesh: Any               # jax.sharding.Mesh
+    axis: str = "data"
+    mode: str = "contiguous"
+
+    @property
+    def n_shards(self) -> int:
+        return int(self.mesh.shape[self.axis])
+
+
+_RING_CTX: Optional[RingContext] = None
+
+
+def active_ring() -> Optional[RingContext]:
+    return _RING_CTX
+
+
+@contextlib.contextmanager
+def use_ring(mesh, axis: str = "data", mode: str = "contiguous"):
+    """Enable partitioned (ring) execution for ``gspmm`` while active.
+
+    Without an active context — or when the mesh is gone — ``ring``
+    never qualifies: ``strategy="auto"`` plans single-device and a
+    pinned ``"ring"`` falls back down the established chain.
+    """
+    global _RING_CTX
+    prev = _RING_CTX
+    _RING_CTX = RingContext(mesh=mesh, axis=axis, mode=mode)
+    try:
+        yield _RING_CTX
+    finally:
+        _RING_CTX = prev
 
 
 # --------------------------------------------------------------------- #
@@ -330,6 +429,17 @@ def supports(strategy: str, spec, lhs_data, rhs_data) -> bool:
         return False
     if strategy == "ell":
         return True     # any ⊗, any operand targets, all reducers
+    if strategy == "ring":
+        # sharded weighted CR: source-node lhs, sum/mean, rank-2, plain
+        # copy or a scalar edge weight (mean folds 1/deg into it)
+        if red not in ("sum", "mean") or spec.lhs != "u":
+            return False
+        if lhs_data.ndim != 2:
+            return False
+        if spec.op == "copy":
+            return True
+        return (spec.op == "mul" and spec.rhs == "e"
+                and rhs_data.ndim == 2 and rhs_data.shape[-1] == 1)
     # MXU formulations: rank-2 operands only, sum/mean only
     rank_ok = (lhs_data.ndim == 2
                and (rhs_data is None or rhs_data.ndim == 2))
@@ -427,6 +537,7 @@ class Plan:
     reason: str                     # 'pinned' | 'cost' | 'autotune' | ...
     ell: Optional[ELLPack] = None
     tiles: Optional[TilePack] = None
+    partition: Optional[Any] = None   # PartitionedGraph for 'ring'
 
 
 def plan_gspmm(g: Graph, spec, lhs_data, rhs_data, *,
@@ -451,6 +562,18 @@ def plan_gspmm(g: Graph, spec, lhs_data, rhs_data, *,
     def pack_available(strategy: str) -> bool:
         if strategy in ("push", "segment"):
             return True
+        if strategy == "ring":
+            # needs a live mesh, one shared vertex space, and a
+            # host-buildable partition (ring packs never build in-trace)
+            ctx = active_ring()
+            if ctx is None or stats is None:
+                return False
+            if stats.n_src != stats.n_dst:
+                return False
+            if cache is not None and cache.peek_partition(
+                    ctx.n_shards, ctx.mode) is not None:
+                return True
+            return concrete and cache is not None
         kind = "ell" if strategy == "ell" else "tiles"
         explicit = ell if kind == "ell" else tiles
         if explicit is not None:
@@ -474,8 +597,12 @@ def plan_gspmm(g: Graph, spec, lhs_data, rhs_data, *,
         if ok(requested):
             chosen, reason = requested, "pinned"
         else:
-            chain = (FALLBACK_CHAIN[FALLBACK_CHAIN.index(requested) + 1:]
-                     if requested in FALLBACK_CHAIN else ("segment",))
+            if requested == "ring":
+                chain = _RING_FALLBACK
+            elif requested in FALLBACK_CHAIN:
+                chain = FALLBACK_CHAIN[FALLBACK_CHAIN.index(requested) + 1:]
+            else:
+                chain = ("segment",)
             chosen = next((s for s in chain if ok(s)), "segment")
             reason = f"fallback({requested})"
             _warn_fallback(spec.name, requested, chosen)
@@ -485,6 +612,9 @@ def plan_gspmm(g: Graph, spec, lhs_data, rhs_data, *,
         plan.ell = ell if ell is not None else cache.ell()
     elif chosen in ("onehot", "pallas"):
         plan.tiles = tiles if tiles is not None else cache.tiles()
+    elif chosen == "ring":
+        ctx = active_ring()
+        plan.partition = cache.partition(ctx.n_shards, ctx.mode)
     _record(spec.name, requested, chosen)
     return plan
 
@@ -505,15 +635,30 @@ def _plan_auto(spec, lhs_data, rhs_data, stats, ok, cache, runner,
                          not _is_traced(lhs_data))
     if (_MODE == "autotune" and concrete and operands_concrete
             and runner is not None and cache is not None):
+        ring_ctx = active_ring()
+        # the ring context is part of the key: a winner measured inside
+        # use_ring() must not be replayed once the mesh is gone
         key = (spec.name, d, str(lhs_data.dtype),
-               None if rhs_data is None else rhs_data.shape[-1])
+               None if rhs_data is None else rhs_data.shape[-1],
+               None if ring_ctx is None
+               else (ring_ctx.n_shards, ring_ctx.axis, ring_ctx.mode))
         winner = cache._autotuned.get(key)
-        if winner is None:
+        if winner is None or winner not in candidates:
             winner = min(candidates,
                          key=lambda s: _measure(runner, s))
             cache._autotuned[key] = winner
         return winner, "autotune"
-    chosen = min(candidates, key=lambda s: estimate_cost(s, stats, d))
+    ctx = active_ring()
+
+    def cost(s):
+        if s == "ring" and ctx is not None and cache is not None:
+            pgp = cache.peek_partition(ctx.n_shards, ctx.mode)
+            return estimate_cost(s, stats, d,
+                                 ring_stats=None if pgp is None
+                                 else pgp.stats)
+        return estimate_cost(s, stats, d)
+
+    chosen = min(candidates, key=cost)
     return chosen, "cost"
 
 
@@ -557,13 +702,23 @@ def clear_block_plans() -> None:
 
 
 def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
-                     requested: str = "auto") -> str:
+                     requested: str = "auto",
+                     runner: Optional[Callable[[str], Any]] = None) -> str:
     """Pick the execution strategy for one block aggregation.
 
     ``signature`` is :attr:`BlockGraph.signature` — static padded shapes
     only, so this function never touches traced values. The chosen
     strategy is memoized per (signature, op, width, requested, backend)
     and recorded in the plan log under ``block:<op>``.
+
+    In autotune mode (``REPRO_PLANNER_MODE=autotune`` / ``set_mode``),
+    ``runner`` — supplied by :func:`~repro.core.blocks.block_gspmm`
+    only on *eager* calls with concrete operands — measures the
+    candidates once per signature and the winner serves every later
+    batch of that configuration, including calls inside the jitted
+    train step (same key, already memoized; a traced call with no
+    cached decision falls back to the cost model — measuring inside a
+    trace is impossible).
     """
     from .blocks import block_supports  # local: blocks imports planner
 
@@ -572,16 +727,26 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
     log_name = f"block:{spec.name}"
     chosen = _BLOCK_PLANS.get(key)
     if chosen is None:
+        memoize = True
         if requested == "auto":
-            stats = block_stats(*signature)
             candidates = [s for s in _BLOCK_AUTO_CANDIDATES
                           if block_supports(s, spec)]
             if not candidates:
                 chosen = "segment"
+            elif _MODE == "autotune" and runner is not None:
+                chosen = min(candidates,
+                             key=lambda s: _measure(runner, s))
             else:
+                stats = block_stats(*signature)
                 chosen = min(candidates,
                              key=lambda s: estimate_cost(s, stats, d,
                                                          backend=backend))
+                # in autotune mode a traced call (no runner) can't
+                # measure — don't pin its cost-model stand-in, so a
+                # later EAGER call of the same signature still gets to
+                # autotune (the cost model is deterministic, so the
+                # un-memoized answer is stable across traces)
+                memoize = _MODE != "autotune"
         elif requested not in STRATEGIES:
             raise ValueError(f"unknown strategy {requested!r}; expected "
                              f"one of {STRATEGIES + ('auto',)}")
@@ -591,6 +756,7 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
             chosen = next((s for s in _BLOCK_FALLBACK
                            if block_supports(s, spec)), "segment")
             _warn_fallback(log_name, requested, chosen)
-        _BLOCK_PLANS[key] = chosen
+        if memoize:
+            _BLOCK_PLANS[key] = chosen
     _record(log_name, requested, chosen)
     return chosen

@@ -93,7 +93,14 @@ class MiniBatch:
 
 
 class NeighborSampler:
-    """Uniform without-replacement neighbor sampler over incoming edges."""
+    """Uniform without-replacement neighbor sampler over incoming edges.
+
+    Sampling is fully vectorized: one batched random-key draw per layer
+    (argsorted per row — a uniform without-replacement sample of each
+    row's incoming edge slots) instead of a Python loop per destination.
+    The stream is deterministic per seed: the same seed replays the
+    same batches bit for bit (tests/data/test_sampler.py).
+    """
 
     def __init__(self, g: Graph, fanouts: Sequence[int], batch_size: int,
                  seed: int = 0):
@@ -104,6 +111,13 @@ class NeighborSampler:
         self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.n = g.n_dst
+        self.n_nodes = max(g.n_src, g.n_dst)
+        # persistent generation-stamped slot table: sample() maps global
+        # node ids to block-local slots in O(touched) per layer instead
+        # of allocating/clearing an O(n_nodes) array per call
+        self._slot = np.zeros(self.n_nodes, np.int64)
+        self._slot_gen = np.zeros(self.n_nodes, np.int64)
+        self._gen = 0
         # full-graph degrees for GCN-style symmetric normalization
         self.deg_in = np.maximum(np.asarray(g.in_degrees, np.float64), 1)
         self.deg_out = np.maximum(np.asarray(g.out_degrees, np.float64), 1)
@@ -120,16 +134,43 @@ class NeighborSampler:
 
     # ------------------------------------------------------------------ #
     @staticmethod
-    def _sample_row(indptr, rng, node: int, fanout: int) -> np.ndarray:
-        """Uniform sample of ≤ fanout incoming edge slots, no replacement;
-        all of them when the in-degree fits."""
-        lo, hi = indptr[node], indptr[node + 1]
-        deg = int(hi - lo)
-        if deg == 0:
-            return np.empty(0, np.int64)
-        if deg <= fanout:
-            return np.arange(lo, hi)
-        return lo + rng.choice(deg, size=fanout, replace=False)
+    def _sample_layer(indptr, rng, frontier: np.ndarray, fanout: int
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Batched uniform without-replacement draw for one layer.
+
+        One random-key matrix per layer: each row gets a key per
+        candidate edge slot (∞ past its degree); the argsort's first
+        ``min(deg, fanout)`` columns are a uniform without-replacement
+        sample of that row's incoming edge slots — all of them when the
+        degree fits the fanout. Returns ``(kmask, eslot, take)`` with
+        ``kmask``: (n_rows, fanout) valid-sample mask, ``eslot``:
+        (n_rows, fanout) global edge slots (garbage where masked).
+        """
+        n_rows = len(frontier)
+        valid = frontier >= 0
+        safe = np.where(valid, frontier, 0)
+        lo = indptr[safe]
+        deg = np.where(valid, indptr[safe + 1] - lo, 0)
+        take = np.minimum(deg, fanout)
+        # rows whose degree fits keep every in-edge in CSR order — no
+        # randomness; only over-fanout rows draw keys, grouped into
+        # power-of-two degree classes so the key matrix width tracks
+        # each class, not the global max degree (power-law graphs put a
+        # handful of huge rows next to thousands of small ones)
+        pos = np.broadcast_to(np.arange(fanout, dtype=np.int64),
+                              (n_rows, fanout)).copy()
+        big = np.nonzero(deg > fanout)[0]
+        if len(big):
+            cls = np.ceil(np.log2(deg[big])).astype(np.int64)
+            for c in np.unique(cls):
+                r = big[cls == c]
+                K = int(deg[r].max())
+                keys = rng.random((len(r), K))
+                keys[np.arange(K)[None, :] >= deg[r][:, None]] = np.inf
+                pos[r] = np.argpartition(keys, fanout - 1,
+                                         axis=1)[:, :fanout]
+        kmask = np.arange(fanout)[None, :] < take[:, None]
+        return kmask, lo[:, None] + pos, take
 
     def sample(self, seeds: np.ndarray, labels: np.ndarray,
                rng: Optional[np.random.Generator] = None) -> MiniBatch:
@@ -156,45 +197,50 @@ class NeighborSampler:
             n_dst = self.layer_sizes[li]
             n_src_pad = self.layer_sizes[li + 1]
             n_edges_pad = n_dst * fanout
-            srcs, dsts, norms = [], [], []
-            nbr = np.full((n_dst, fanout), n_src_pad - 1, np.int32)
-            nbr_eid = np.zeros((n_dst, fanout), np.int32)
-            nbr_mask = np.zeros((n_dst, fanout), bool)
+            kmask, eslot, _ = self._sample_layer(self.indptr, rng,
+                                                 frontier, fanout)
+            # real sampled edges in row-major (canonical) order
+            jj, kk = np.nonzero(kmask)
+            nbs = self.src[eslot[jj, kk]]
             # dst-first source numbering: src slot j == dst node j, so a
-            # layer can read its destinations' own features as h[:n_dst]
-            src_ids = list(frontier)
-            uniq: dict = {}
-            for j, node in enumerate(frontier):
-                if node >= 0 and node not in uniq:
-                    uniq[int(node)] = j
-            for j, node in enumerate(frontier):
-                if node < 0:
-                    continue
-                for k, t in enumerate(self._sample_row(
-                        self.indptr, rng, int(node), fanout)):
-                    nb = int(self.src[t])
-                    if nb not in uniq:
-                        uniq[nb] = len(src_ids)
-                        src_ids.append(nb)
-                    nbr[j, k] = uniq[nb]
-                    nbr_eid[j, k] = len(srcs)
-                    nbr_mask[j, k] = True
-                    srcs.append(uniq[nb])
-                    dsts.append(j)
-                    norms.append(1.0 / np.sqrt(self.deg_out[nb]
-                                               * self.deg_in[node]))
+            # layer can read its destinations' own features as h[:n_dst].
+            # First-occurrence slot table (reversed writes: first wins);
+            # a stamp != current generation means "unassigned".
+            self._gen += 1
+            slot, gen = self._slot, self._slot_gen
+            idxs = np.nonzero(frontier >= 0)[0]
+            fv = frontier[idxs][::-1]
+            slot[fv] = idxs[::-1]
+            gen[fv] = self._gen
+            # newly discovered neighbors, in first-occurrence order
+            new_vals = nbs[gen[nbs] != self._gen]
+            uvals, first = np.unique(new_vals, return_index=True)
+            new_unique = uvals[np.argsort(first, kind="stable")]
+            slot[new_unique] = n_dst + np.arange(len(new_unique))
+            gen[new_unique] = self._gen
+            n_real_src = n_dst + len(new_unique)
             # pad sources to static size; dummy source = last slot
-            n_real_src = len(src_ids)
-            src_ids = np.asarray(src_ids + [-1] * (n_src_pad - n_real_src),
-                                 np.int64)
+            src_ids = np.concatenate([
+                frontier, new_unique,
+                np.full(n_src_pad - n_real_src, -1, np.int64)])
+            srcs = slot[nbs]
+            n_real = len(jj)
+            nbr = np.full((n_dst, fanout), n_src_pad - 1, np.int32)
+            nbr[jj, kk] = srcs
+            nbr_eid = np.zeros((n_dst, fanout), np.int32)
+            nbr_eid[jj, kk] = np.arange(n_real, dtype=np.int32)
+            nbr_mask = kmask
+            norms = (1.0 / np.sqrt(self.deg_out[nbs]
+                                   * self.deg_in[frontier[jj]]))
             # pad edges into the dummy destination row n_dst (never any
             # real source slot: a pad edge exists only when some row is
             # under fanout, which leaves the dummy source slot free)
-            n_real = len(srcs)
             pad = n_edges_pad - n_real
-            srcs = np.asarray(srcs + [n_src_pad - 1] * pad, np.int64)
-            dsts = np.asarray(dsts + [n_dst] * pad, np.int64)
-            norms = np.asarray(norms + [0.0] * pad, np.float32)
+            srcs = np.concatenate([srcs,
+                                   np.full(pad, n_src_pad - 1, np.int64)])
+            dsts = np.concatenate([jj, np.full(pad, n_dst, np.int64)])
+            norms = np.concatenate([norms,
+                                    np.zeros(pad)]).astype(np.float32)
             # pad slots of the neighbor table index SOME valid edge id;
             # they are masked, so the value never reaches a reduction
             nbr_eid[~nbr_mask] = min(n_real, n_edges_pad - 1)

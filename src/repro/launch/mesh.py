@@ -21,6 +21,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     return make_mesh(shape, axes)
 
 
+def make_shard_mesh(n_shards: int, axis: str = "data") -> Mesh:
+    """1-D mesh for partitioned-graph (ring) execution.
+
+    On hardware this is the first ``n_shards`` devices; on a laptop/CI
+    host the devices are emulated — set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=<n>`` BEFORE
+    importing jax (tests and benchmarks re-exec a subprocess to do
+    this; see tests/conftest.run_multidevice). With too few devices,
+    :func:`make_mesh`'s error spells out that exact flag.
+    """
+    return make_mesh((n_shards,), (axis,))
+
+
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]) -> Mesh:
     """make_mesh that tolerates more host devices than the mesh needs
     (the dry-run forces 512; the single-pod mesh uses the first 256)."""

@@ -1,16 +1,19 @@
 """Shared GNN plumbing: graph bundles riding on the planner's PlanCache,
-plus the one code path every app's sampled-minibatch forward runs on
-(:func:`run_blocks` — see DESIGN.md §5)."""
+the one code path every app's sampled-minibatch forward runs on
+(:func:`run_blocks` — see DESIGN.md §5), and the partitioned-execution
+bundle every app's sharded forward runs on (DESIGN.md §6)."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ...core.graph import Graph
+from ...core.partition import PartitionedGraph
 from ...core.planner import PlanCache, get_plan_cache
 from ...core.tiling import ELLPack, TilePack
 from ...core.training_ops import TrainingGraph, make_training_graph
@@ -62,23 +65,31 @@ class GraphBundle:
         return cls(*children)
 
 
-def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
-                ell_width: int = 64, training: bool = True) -> GraphBundle:
-    """Assemble a bundle; packs are pulled from (and memoized in) the
-    graph's PlanCache, so they are built at most once per process even
-    across bundles and direct ``gspmm`` calls."""
-    deg_in = np.asarray(g.in_degrees, np.float64)
-    deg_out = np.asarray(g.out_degrees, np.float64)
+def edge_norms(g: Graph) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-edge (gcn, mean) normalization weights in CALLER edge order:
+    1/sqrt(deg_out(u)·deg_in(v)) and 1/deg_in(v), degrees clamped ≥ 1.
+    The one home of this computation — shared by the full-graph bundle
+    and the partitioned bundle."""
+    deg_in = np.maximum(np.asarray(g.in_degrees, np.float64), 1)
+    deg_out = np.maximum(np.asarray(g.out_degrees, np.float64), 1)
     src = np.asarray(g.src)
     dst = np.asarray(g.dst)
-    w = 1.0 / np.sqrt(np.maximum(deg_out[src], 1)
-                      * np.maximum(deg_in[dst], 1))
-    mean_w = 1.0 / np.maximum(deg_in[dst], 1)
+    w = 1.0 / np.sqrt(deg_out[src] * deg_in[dst])
+    mean_w = 1.0 / deg_in[dst]
     # canonical order -> caller order
     w_caller = np.zeros_like(w)
     w_caller[np.asarray(g.eid)] = w
     m_caller = np.zeros_like(mean_w)
     m_caller[np.asarray(g.eid)] = mean_w
+    return w_caller.astype(np.float32), m_caller.astype(np.float32)
+
+
+def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
+                ell_width: int = 64, training: bool = True) -> GraphBundle:
+    """Assemble a bundle; packs are pulled from (and memoized in) the
+    graph's PlanCache, so they are built at most once per process even
+    across bundles and direct ``gspmm`` calls."""
+    w_caller, m_caller = edge_norms(g)
     cache = get_plan_cache(g)
     cache.set_ell_cap(ell_width)
     if ell or training:
@@ -93,6 +104,74 @@ def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
         tg=tg,
         mean_norm=jnp.asarray(m_caller, jnp.float32),
     )
+
+
+# --------------------------------------------------------------------- #
+# partitioned (multi-device ring) execution bundle
+# --------------------------------------------------------------------- #
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True, eq=False)
+class PartitionedBundle:
+    """Partition plan + pre-bucketed normalization weights + the mesh.
+
+    ``pg`` is the graph's memoized :class:`PartitionedGraph` (from the
+    per-graph PlanCache, so the same partition serves direct ``gspmm``
+    calls and the trains); ``gcn_w``/``mean_w`` are ``bundle.gcn_norm``/
+    ``mean_norm`` scattered into the (S, S, eb) bucket layout. ``mesh``
+    is static aux — ``None`` runs the emulated single-device ring, which
+    is how the partitioned forwards stay testable everywhere.
+    """
+    pg: PartitionedGraph
+    gcn_w: jnp.ndarray         # (S, S, eb) 1/sqrt(d_u d_v), 0 on pads
+    mean_w: jnp.ndarray        # (S, S, eb) 1/deg_in(dst), 0 on pads
+    mesh: Optional[Mesh] = dataclasses.field(
+        default=None, metadata={"static": True})
+    axis: str = dataclasses.field(default="data",
+                                  metadata={"static": True})
+
+    def tree_flatten(self):
+        return ((self.pg, self.gcn_w, self.mean_w), (self.mesh, self.axis))
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+
+def make_partitioned_bundle(g: Graph, n_shards: int, *,
+                            mesh: Optional[Mesh] = None,
+                            axis: str = "data",
+                            mode: str = "contiguous") -> PartitionedBundle:
+    """Assemble the partitioned bundle. The partition comes from (and is
+    memoized in) the graph's PlanCache; the per-edge norms are the same
+    quantities :func:`make_bundle` computes, bucketed once host-side."""
+    pg = get_plan_cache(g).partition(n_shards, mode)
+    w_caller, m_caller = edge_norms(g)
+    return PartitionedBundle(
+        pg=pg,
+        gcn_w=pg.scatter_edges(jnp.asarray(w_caller)),
+        mean_w=pg.scatter_edges(jnp.asarray(m_caller)),
+        mesh=mesh, axis=axis)
+
+
+def shard_partitioned(pb: PartitionedBundle, *arrays):
+    """``device_put`` the bundle and padded node arrays onto the mesh:
+    bucket tensors and (n_pad, ...) node tensors shard along the first
+    axis, small index maps replicate. No-op without a mesh."""
+    if pb.mesh is None:
+        return (pb,) + arrays if arrays else pb
+    mesh, axis = pb.mesh, pb.axis
+    n_pad = pb.pg.n_pad
+
+    def put(x):
+        if hasattr(x, "ndim") and x.ndim >= 1 and (
+                x.shape[0] in (pb.pg.n_shards, n_pad)):
+            spec = P(axis, *([None] * (x.ndim - 1)))
+        else:
+            spec = P()
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    out = jax.tree_util.tree_map(put, (pb,) + arrays)
+    return out if arrays else out[0]
 
 
 # --------------------------------------------------------------------- #

@@ -18,8 +18,10 @@ from ...core.binary_reduce import gspmm
 from ...core.blocks import block_gspmm
 from ...core.edge_softmax import (edge_softmax, edge_softmax_fused,
                                   block_edge_softmax)
+from ...core.partition import (bucket_softmax, ring_edge_values,
+                               ring_gspmm)
 from ...substrate.nn import glorot, dropout, leaky_relu
-from .common import GraphBundle, run_blocks
+from .common import GraphBundle, PartitionedBundle, run_blocks
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int, n_heads: int = 4,
@@ -107,3 +109,40 @@ def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
     return run_blocks(block_layer, params["layers"], blocks, x,
                       strategy=strategy, activation=jax.nn.elu,
                       train=train, rng=rng, drop=drop)
+
+
+def forward_partitioned(params: Dict, pb: PartitionedBundle,
+                        x: jnp.ndarray, *, halo=None, refresh: bool = True,
+                        train: bool = False, rng=None, drop: float = 0.4):
+    """Partitioned full-graph GAT (always exact — attention weights are
+    parameter-dependent, so a stale remote partial has no DistGNN-style
+    formulation; delayed halos are a GCN/SAGE knob).
+
+    Per layer: one ring pass assembles the per-edge attention logits in
+    bucket layout (``ring_edge_values``), the softmax normalizes each
+    destination locally (every dst bucket is owner-resident), and a
+    second ring pass does the α-weighted aggregation with per-head
+    weights (``ring_gspmm``).
+    """
+    if halo is not None:
+        raise ValueError("GAT has no delayed-halo mode (attention "
+                         "weights are parameter-dependent)")
+    pg = pb.pg
+    h = x
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        heads, out = lyr["attn_l"].shape
+        if train and rng is not None:
+            rng, sub = jax.random.split(rng)
+            h = dropout(sub, h, drop, train)
+        z = (h @ lyr["w"]).reshape(-1, heads, out)       # (n_pad, H, F)
+        el = jnp.sum(z * lyr["attn_l"], axis=-1)         # (n_pad, H)
+        er = jnp.sum(z * lyr["attn_r"], axis=-1)
+        logits = ring_edge_values(pg, el, er, mesh=pb.mesh, axis=pb.axis)
+        logits = leaky_relu(logits)                      # (S, S, eb, H)
+        alpha = bucket_softmax(pg, logits)
+        out_feat = ring_gspmm(pg, z, alpha, mesh=pb.mesh, axis=pb.axis)
+        h = out_feat.reshape(-1, heads * out)
+        if i < n_layers - 1:
+            h = jax.nn.elu(h)
+    return h, None

@@ -16,9 +16,10 @@ import jax.numpy as jnp
 
 from ...core.binary_reduce import gspmm
 from ...core.blocks import block_gspmm
+from ...core.partition import ring_gspmm, ring_gspmm_delayed
 from ...core.training_ops import weighted_copy_reduce
 from ...substrate.nn import linear_init, linear_apply, dropout
-from .common import GraphBundle, run_blocks
+from .common import GraphBundle, PartitionedBundle, run_blocks
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int,
@@ -69,3 +70,42 @@ def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
     return run_blocks(block_layer, params["layers"], blocks, x,
                       strategy=strategy, activation=jax.nn.relu,
                       train=train, rng=rng, drop=drop)
+
+
+def init_halo(params: Dict, pg):
+    """Zero remote-partial carry for the delayed-halo mode: one
+    (n_pad, d_out) array per layer (GCN aggregates AFTER the linear)."""
+    return tuple(jnp.zeros((pg.n_pad, lyr["w"].shape[1]), jnp.float32)
+                 for lyr in params["layers"])
+
+
+def forward_partitioned(params: Dict, pb: PartitionedBundle,
+                        x: jnp.ndarray, *, halo=None, refresh: bool = True,
+                        train: bool = False, rng=None, drop: float = 0.5):
+    """Full-graph forward on a vertex-partitioned graph (DESIGN.md §6).
+
+    ``x``: (n_pad, d) padded node layout (``pg.scatter_nodes``). With
+    ``halo`` (a tuple from :func:`init_halo`) the cross-shard partial
+    aggregates are recomputed only when ``refresh`` and otherwise
+    reused stale — DistGNN-style delayed halos. Returns
+    ``(logits_pad, halo_out)``.
+    """
+    pg = pb.pg
+    h = x
+    halo_out = []
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        if train and rng is not None:
+            rng, sub = jax.random.split(rng)
+            h = dropout(sub, h, drop, train)
+        h = linear_apply(lyr, h)
+        if halo is None:
+            h = ring_gspmm(pg, h, pb.gcn_w, mesh=pb.mesh, axis=pb.axis)
+        else:
+            h, stale = ring_gspmm_delayed(pg, h, pb.gcn_w, halo[i],
+                                          refresh, mesh=pb.mesh,
+                                          axis=pb.axis)
+            halo_out.append(stale)
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h, tuple(halo_out) if halo is not None else None

@@ -12,9 +12,10 @@ import jax.numpy as jnp
 
 from ...core.binary_reduce import gspmm
 from ...core.blocks import block_gspmm
+from ...core.partition import ring_gspmm, ring_gspmm_delayed
 from ...core.training_ops import weighted_copy_reduce
 from ...substrate.nn import linear_init, linear_apply, dropout
-from .common import GraphBundle, run_blocks
+from .common import GraphBundle, PartitionedBundle, run_blocks
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int,
@@ -65,6 +66,40 @@ def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
     return run_blocks(block_layer, params["layers"], blocks, x,
                       strategy=strategy, activation=jax.nn.relu,
                       train=train, rng=rng, drop=drop)
+
+
+def init_halo(params: Dict, pg):
+    """Zero remote-partial carry per layer: SAGE aggregates the layer
+    INPUT (before the linear), so the halo width is w.shape[0] // 2."""
+    return tuple(jnp.zeros((pg.n_pad, lyr["w"].shape[0] // 2), jnp.float32)
+                 for lyr in params["layers"])
+
+
+def forward_partitioned(params: Dict, pb: PartitionedBundle,
+                        x: jnp.ndarray, *, halo=None, refresh: bool = True,
+                        train: bool = False, rng=None, drop: float = 0.5):
+    """Partitioned full-graph forward: the neighbor mean is a weighted
+    ring CR (1/deg folded into ``pb.mean_w``); the self term needs no
+    communication. Optional DistGNN-style delayed halo as in GCN."""
+    pg = pb.pg
+    h = x
+    halo_out = []
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        if train and rng is not None:
+            rng, sub = jax.random.split(rng)
+            h = dropout(sub, h, drop, train)
+        if halo is None:
+            hn = ring_gspmm(pg, h, pb.mean_w, mesh=pb.mesh, axis=pb.axis)
+        else:
+            hn, stale = ring_gspmm_delayed(pg, h, pb.mean_w, halo[i],
+                                           refresh, mesh=pb.mesh,
+                                           axis=pb.axis)
+            halo_out.append(stale)
+        h = linear_apply(lyr, jnp.concatenate([h, hn], axis=-1))
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h, tuple(halo_out) if halo is not None else None
 
 
 def forward_sampled(params: Dict, blocks, feats_fn, *,

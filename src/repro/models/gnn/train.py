@@ -1,5 +1,6 @@
-"""GNN training loops: full-graph (paper Fig. 2) and sampled minibatch
-(paper Fig. 3).
+"""GNN training loops: full-graph (paper Fig. 2), sampled minibatch
+(paper Fig. 3), and partitioned multi-device full-graph
+(:func:`train_partitioned`, DESIGN.md §6).
 
 One jitted step = forward + CE loss + AdamW update; per-epoch wall time
 is the paper's reported metric. ``strategy`` selects the aggregation
@@ -30,7 +31,8 @@ from ...data.pipeline import SignatureTracker, prefetch
 from ...data.sampler import NeighborSampler
 from ...optim import adamw, apply_updates, clip_by_global_norm
 from ...substrate.nn import cross_entropy_loss, accuracy
-from .common import block_features, pad_features
+from .common import (block_features, make_partitioned_bundle,
+                     pad_features, shard_partitioned)
 
 
 def make_train_step(forward_fn: Callable, strategy: str, lr: float = 1e-2,
@@ -82,6 +84,131 @@ def train_full_graph(forward_fn: Callable, params: Dict, bundle, x,
             logits = forward_fn(params, bundle, x, strategy=strategy)
             history["val_acc"].append(float(accuracy(
                 logits, labels, jnp.asarray(val_mask))))
+    return params, history
+
+
+# --------------------------------------------------------------------- #
+# partitioned multi-device full-graph training (DESIGN.md §6)
+# --------------------------------------------------------------------- #
+def make_partitioned_train_step(forward_part_fn: Callable,
+                                lr: float = 1e-2,
+                                weight_decay: float = 5e-4,
+                                clip: float = 5.0, drop: float = 0.0):
+    """One jitted step over padded sharded node arrays.
+
+    ``forward_part_fn(params, pb, x, halo=..., refresh=..., ...)``
+    returns ``(logits_pad, halo_out)``. Features/labels/masks stay in
+    the padded layout end-to-end (pad rows are loss-masked); parameters
+    are replicated, so with a mesh installed the partitioned loss makes
+    GSPMD emit the gradient all-reduce on its own. ``refresh`` is
+    static: exact steps and stale-halo steps are two compilations of
+    the same function.
+    """
+    opt_init, opt_update = adamw(lr, weight_decay=weight_decay)
+
+    @partial(jax.jit, static_argnames=("refresh",))
+    def step(params, opt_state, step_i, pb, xp, yp, mp, halo, rng,
+             refresh=True):
+        def loss_fn(p):
+            logits, halo_out = forward_part_fn(
+                p, pb, xp, halo=halo, refresh=refresh,
+                train=True, rng=rng, drop=drop)
+            return cross_entropy_loss(logits, yp, mp), halo_out
+
+        (loss, halo_out), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads, _ = clip_by_global_norm(grads, clip)
+        ups, opt_state = opt_update(grads, opt_state, params, step_i)
+        params = apply_updates(params, ups)
+        return params, opt_state, loss, halo_out
+
+    return opt_init, step
+
+
+def train_partitioned(forward_part_fn: Callable, params: Dict, g, x,
+                      labels, train_mask, *, n_shards: int, mesh=None,
+                      axis: str = "data", mode: str = "contiguous",
+                      halo_staleness: int = 0, epochs: int = 10,
+                      lr: float = 1e-2, weight_decay: float = 5e-4,
+                      drop: float = 0.0, seed: int = 0, val_mask=None,
+                      init_halo_fn: Optional[Callable] = None
+                      ) -> Tuple[Dict, Dict]:
+    """Full-graph training across ``n_shards`` vertex shards.
+
+    Features are scattered once into the padded sharded layout and the
+    whole run stays there (labels padded with masked rows); parameters
+    are replicated and gradients all-reduced by GSPMD. ``mesh=None``
+    trains on the emulated single-device ring (bit-for-bit the same
+    math — used by tests and anywhere without emulated devices).
+
+    ``halo_staleness=0`` is exact every step; ``k > 0`` refreshes the
+    cross-shard partial aggregates every k-th epoch and reuses them
+    stale in between (DistGNN-style; needs ``init_halo_fn``, e.g.
+    ``gcn.init_halo``). Returns (params, history) with per-epoch wall
+    times, losses, and which epochs refreshed.
+    """
+    pb = make_partitioned_bundle(g, n_shards, mesh=mesh, axis=axis,
+                                 mode=mode)
+    pg = pb.pg
+    # the subsystem's execution decision, in the shared plan log (so
+    # BENCH_partitioned.json reports it like every planner-routed op)
+    from ...core import planner as _planner
+    _planner._record(
+        "partitioned:train", "auto",
+        f"ring:s{n_shards}:{mode}" if mesh is not None
+        else f"ring-emulated:s{n_shards}:{mode}")
+    x = jnp.asarray(np.asarray(x, np.float32))
+    yp = pg.scatter_nodes(jnp.asarray(np.asarray(labels, np.int32)))
+    mp = pg.scatter_nodes(jnp.asarray(np.asarray(train_mask, bool)))
+    xp = pg.scatter_nodes(x)
+    vp = (pg.scatter_nodes(jnp.asarray(np.asarray(val_mask, bool)))
+          if val_mask is not None else None)
+
+    delayed = halo_staleness > 0
+    if delayed and init_halo_fn is None:
+        raise ValueError("halo_staleness > 0 needs init_halo_fn "
+                         "(e.g. gcn.init_halo)")
+    halo = init_halo_fn(params, pg) if delayed else None
+
+    opt_init, step = make_partitioned_train_step(
+        forward_part_fn, lr=lr, weight_decay=weight_decay, drop=drop)
+    opt_state = opt_init(params)
+    if mesh is not None:
+        pb, xp, yp, mp = shard_partitioned(pb, xp, yp, mp)
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        rep = NamedSharding(mesh, P())
+        params = jax.device_put(params, rep)
+        opt_state = jax.device_put(opt_state, rep)
+        if delayed:
+            halo = shard_partitioned(pb, *halo)[1:]
+    rng = jax.random.PRNGKey(seed)
+
+    @jax.jit
+    def eval_logits(params, pb, xp):
+        return forward_part_fn(params, pb, xp)[0]
+
+    history = {"loss": [], "epoch_time": [], "val_acc": [],
+               "refreshed": []}
+    # warmup: compile both refresh variants, discard the updates
+    step(params, opt_state, 0, pb, xp, yp, mp, halo, rng, refresh=True)
+    if delayed:
+        step(params, opt_state, 0, pb, xp, yp, mp, halo, rng,
+             refresh=False)
+
+    for e in range(epochs):
+        refresh = (not delayed) or (e % halo_staleness == 0)
+        rng, sub = jax.random.split(rng)
+        t0 = time.perf_counter()
+        params, opt_state, loss, halo = step(
+            params, opt_state, e, pb, xp, yp, mp, halo, sub,
+            refresh=refresh)
+        jax.block_until_ready(loss)
+        history["epoch_time"].append(time.perf_counter() - t0)
+        history["loss"].append(float(loss))
+        history["refreshed"].append(bool(refresh))
+        if vp is not None:
+            logits = eval_logits(params, pb, xp)
+            history["val_acc"].append(float(accuracy(logits, yp, vp)))
     return params, history
 
 

@@ -1,0 +1,190 @@
+"""Partitioned-graph subsystem: host-side plan invariants, the emulated
+ring against the single-device apps, and the delayed-halo semantics.
+
+Everything here runs on one real device (``mesh=None`` → the emulated
+ring, which shares the bucket math and the transposed-ring custom VJP
+with the multi-device path). The multi-device forms of the same checks
+live in tests/launch/test_partitioned_train.py.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.flatten_util import ravel_pytree
+
+from repro.core import from_coo, gspmm
+from repro.core.edge_softmax import edge_softmax_fused
+from repro.core.partition import (PARTITION_MODES, build_partition,
+                                  bucket_softmax, local_gspmm,
+                                  offdiag_weights, ring_edge_values,
+                                  ring_gspmm, ring_gspmm_delayed,
+                                  ring_reference)
+from repro.core.planner import get_plan_cache
+from repro.models.gnn import gat, gcn, sage
+from repro.models.gnn.common import (make_bundle, make_partitioned_bundle)
+from repro.substrate.nn import cross_entropy_loss
+from tests.graphgen import random_graph
+
+
+def _square_graph(rng, n=48, nnz=300):
+    g, src, dst = random_graph(rng, n, n, nnz)
+    return g
+
+
+@pytest.mark.parametrize("mode", PARTITION_MODES)
+@pytest.mark.parametrize("n_shards", [1, 2, 3, 5])
+def test_build_partition_invariants(mode, n_shards):
+    rng = np.random.default_rng(0)
+    g = _square_graph(rng, 41, 260)
+    pg = build_partition(g, n_shards, mode)
+    n = pg.n
+    to_pad = np.asarray(pg.to_pad)
+    from_pad = np.asarray(pg.from_pad)
+    # bijection between vertices and non-pad padded slots
+    assert len(np.unique(to_pad)) == n
+    assert (from_pad[to_pad] == np.arange(n)).all()
+    assert ((from_pad == -1).sum()) == pg.n_pad - n
+    # every edge lands in exactly one bucket slot; the bucket-local
+    # endpoints reconstruct the original edge multiset
+    mask = np.asarray(pg.mask)
+    assert mask.sum() == g.n_edges
+    sl = np.asarray(pg.src_local)
+    dl = np.asarray(pg.dst_local)
+    eid = np.asarray(pg.eid)
+    S, rows = pg.n_shards, pg.rows
+    i, j, k = np.nonzero(mask)
+    gsrc = from_pad[j * rows + sl[i, j, k]]
+    gdst = from_pad[i * rows + dl[i, j, k]]
+    assert (gsrc >= 0).all() and (gdst >= 0).all()
+    got = sorted(zip(gsrc.tolist(), gdst.tolist()))
+    src_np, dst_np, eid_np = g.numpy_coo()
+    want = sorted(zip(src_np.tolist(), dst_np.tolist()))
+    assert got == want
+    # caller-order edge ids are a permutation
+    assert sorted(eid[i, j, k].tolist()) == list(range(g.n_edges))
+    # stats
+    st = pg.stats
+    assert st.n_edges == g.n_edges
+    assert 0.0 <= st.cut_fraction <= 1.0
+    assert st.pad_ratio >= 1.0
+    assert st.balance >= 1.0 - 1e-9
+    if n_shards == 1:
+        assert st.cut_fraction == 0.0
+
+
+def test_scatter_gather_roundtrips():
+    rng = np.random.default_rng(1)
+    g = _square_graph(rng)
+    pg = build_partition(g, 3, "contiguous")
+    x = jnp.asarray(rng.normal(size=(g.n_src, 5)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(pg.gather_nodes(pg.scatter_nodes(x))), np.asarray(x))
+    e = jnp.asarray(rng.normal(size=(g.n_edges, 2)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(pg.gather_edges(pg.scatter_edges(e))), np.asarray(e))
+
+
+def test_ring_reference_is_the_bucket_oracle():
+    rng = np.random.default_rng(2)
+    g = _square_graph(rng)
+    x = jnp.asarray(rng.normal(size=(g.n_src, 4)).astype(np.float32))
+    ref = gspmm(g, "u_copy_add_v", u=x, strategy="segment")
+    for S in (1, 2, 4):
+        pg = build_partition(g, S)
+        out = pg.gather_nodes(ring_reference(pg, pg.scatter_nodes(x)))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_partition_memoized_in_plan_cache():
+    rng = np.random.default_rng(3)
+    g = _square_graph(rng)
+    cache = get_plan_cache(g)
+    a = cache.partition(3, "contiguous")
+    b = cache.partition(3, "contiguous")
+    assert a is b
+    assert cache.peek_partition(3, "contiguous") is a
+    assert cache.peek_partition(4, "contiguous") is None
+    assert cache.partition(3, "hash") is not a
+
+
+def test_delayed_halo_semantics():
+    """refresh=True is exact; refresh=False reuses the stale remote and
+    routes gradients through the local part only."""
+    rng = np.random.default_rng(4)
+    g = _square_graph(rng)
+    pg = build_partition(g, 3, "contiguous")
+    x = jnp.asarray(rng.normal(size=(g.n_src, 4)).astype(np.float32))
+    w = pg.scatter_edges(jnp.ones((g.n_edges,), jnp.float32))
+    xp = pg.scatter_nodes(x)
+    exact = ring_gspmm(pg, xp, w)
+    out, stale = ring_gspmm_delayed(pg, xp, w, jnp.zeros_like(xp), True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exact),
+                               rtol=1e-5, atol=1e-6)
+    # local + offdiag decomposition is exact
+    np.testing.assert_allclose(
+        np.asarray(local_gspmm(pg, xp, w)
+                   + ring_gspmm(pg, xp, offdiag_weights(pg, w))),
+        np.asarray(exact), rtol=1e-5, atol=1e-6)
+    # stale step: output = local(new x) + old remote, and the gradient
+    # equals the local-only gradient (remote detached)
+    x2 = xp * 2.0
+    out2, stale2 = ring_gspmm_delayed(pg, x2, w, stale, False)
+    np.testing.assert_allclose(
+        np.asarray(out2),
+        np.asarray(local_gspmm(pg, x2, w) + stale), rtol=1e-5, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(stale2), np.asarray(stale))
+    g_stale = jax.grad(lambda xx: jnp.sum(
+        ring_gspmm_delayed(pg, xx, w, stale, False)[0]))(x2)
+    g_local = jax.grad(lambda xx: jnp.sum(local_gspmm(pg, xx, w)))(x2)
+    np.testing.assert_allclose(np.asarray(g_stale), np.asarray(g_local),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_bucket_softmax_matches_edge_softmax():
+    rng = np.random.default_rng(5)
+    g = _square_graph(rng)
+    pg = build_partition(g, 3, "hash")
+    H = 3
+    el = jnp.asarray(rng.normal(size=(g.n_src, H)).astype(np.float32))
+    er = jnp.asarray(rng.normal(size=(g.n_dst, H)).astype(np.float32))
+    logits = gspmm(g, "u_add_v_copy_e", u=el, v=er)
+    lb = ring_edge_values(pg, pg.scatter_nodes(el), pg.scatter_nodes(er))
+    np.testing.assert_allclose(np.asarray(pg.gather_edges(lb)),
+                               np.asarray(logits), rtol=1e-4, atol=1e-5)
+    alpha = bucket_softmax(pg, lb)
+    np.testing.assert_allclose(np.asarray(pg.gather_edges(alpha)),
+                               np.asarray(edge_softmax_fused(g, logits)),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("mod", [gcn, sage, gat], ids=["gcn", "sage", "gat"])
+def test_partitioned_forward_and_grads_match_emulated(mod):
+    """The partitioned app forwards (emulated ring) must match the
+    standard full-graph forward — outputs and parameter gradients —
+    across shard counts. The identical check runs on real emulated
+    devices in tests/launch/test_partitioned_train.py."""
+    rng = np.random.default_rng(6)
+    n, d, nc = 52, 8, 3
+    g = _square_graph(rng, n, 320)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    labels = jnp.asarray(rng.integers(0, nc, n).astype(np.int32))
+    mask = jnp.asarray(rng.random(n) < 0.6)
+    bundle = make_bundle(g)
+    params = mod.init(jax.random.PRNGKey(0), d, 8, nc)
+    ref = mod.forward(params, bundle, x)
+    gref = ravel_pytree(jax.grad(lambda p: cross_entropy_loss(
+        mod.forward(p, bundle, x), labels, mask))(params))[0]
+    for S in (2, 3):
+        pb = make_partitioned_bundle(g, S)
+        pg = pb.pg
+        xp = pg.scatter_nodes(x)
+        out, _ = mod.forward_partitioned(params, pb, xp)
+        np.testing.assert_allclose(np.asarray(pg.gather_nodes(out)),
+                                   np.asarray(ref), rtol=2e-4, atol=2e-4)
+        yp = pg.scatter_nodes(labels)
+        mp = pg.scatter_nodes(mask)
+        gp = ravel_pytree(jax.grad(lambda p: cross_entropy_loss(
+            mod.forward_partitioned(p, pb, xp)[0], yp, mp))(params))[0]
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gref),
+                                   rtol=2e-4, atol=2e-4)

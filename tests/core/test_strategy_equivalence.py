@@ -6,7 +6,11 @@ and (b) the same VJPs w.r.t. every differentiable operand as the
 segment reference. This is the contract that lets the planner swap
 strategies freely inside differentiated train steps — including the
 pallas kernels, whose adjoint is the segment path by construction
-(``core.binary_reduce._gspmm_pallas_diff``).
+(``core.binary_reduce._gspmm_pallas_diff``), and the ring strategy,
+whose emulated single-device path (same bucket math, same
+transposed-ring custom VJP as the multi-device form) joins the harness
+here so the partitioned subsystem is held to the identical differential
+contract as the other five strategies.
 
 Graphs come from the shared generator in ``tests.graphgen`` (unique
 edges: parallel duplicate edges tie max/min subgradients, which
@@ -20,6 +24,7 @@ import jax.numpy as jnp
 import pytest
 
 from repro.core import block_gspmm, from_coo, gspmm, parse_op, planner
+from repro.core.partition import build_partition, ring_gspmm
 from tests.graphgen import random_graph
 
 try:
@@ -143,6 +148,72 @@ def check_block_pull(src, dst, n_u, n_v, rng):
                 rtol=1e-4, atol=1e-4, err_msg=f"d/d{k}: {name}")
 
 
+def check_ring_strategy(src, dst, n_u, n_v, rng):
+    """The emulated ring — same bucket math + custom VJP as the
+    multi-device path — must match segment outputs AND VJPs for every
+    ring-supported config, across shard counts and partition modes.
+    Ring shards one vertex space, so the graph is squared to
+    max(n_u, n_v)."""
+    n = max(n_u, n_v)
+    g = from_coo(src, dst, n_src=n, n_dst=n)
+    d = 4
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    e = jnp.asarray(rng.uniform(0.5, 1.5,
+                                size=(g.n_edges,)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    deg = jnp.maximum(g.in_degrees, 1).astype(jnp.float32)
+    inv_deg_caller = 1.0 / jnp.take(deg, jnp.take(g.dst, g.eid_inv))
+
+    # the weighted-CR forms the ring supports: copy/mul ⊗ sum/mean
+    configs = [("u_copy_add_v", jnp.ones_like(e)),
+               ("u_mul_e_add_v", e),
+               ("u_copy_mean_v", inv_deg_caller),
+               ("u_mul_e_mean_v", e * inv_deg_caller)]
+    for S in (2, 3):
+        for mode in ("contiguous", "hash"):
+            pg = build_partition(g, S, mode)
+            ctp = pg.scatter_nodes(ct)
+            for name, w in configs:
+                spec = parse_op(name)
+                args = {"u": x}
+                if spec.rhs == "e":
+                    args["e"] = e[:, None]
+
+                def f_ring(xx, ww):
+                    out = ring_gspmm(pg, pg.scatter_nodes(xx),
+                                     pg.scatter_edges(ww))
+                    return jnp.sum(out * ctp)
+
+                def f_seg(xx, ee):
+                    a = dict(args, u=xx)
+                    if "e" in a:
+                        a["e"] = ee[:, None]
+                    return jnp.sum(gspmm(g, name, **a,
+                                         strategy="segment") * ct)
+
+                tag = f"{name} via ring S={S} {mode}"
+                out = pg.gather_nodes(
+                    ring_gspmm(pg, pg.scatter_nodes(x),
+                               pg.scatter_edges(w)))
+                ref = gspmm(g, name, **args, strategy="segment")
+                np.testing.assert_allclose(np.asarray(out),
+                                           np.asarray(ref), rtol=1e-4,
+                                           atol=1e-4,
+                                           err_msg=f"output: {tag}")
+                gx_r, gw_r = jax.grad(f_ring, argnums=(0, 1))(x, w)
+                gx_s, ge_s = jax.grad(f_seg, argnums=(0, 1))(x, e)
+                np.testing.assert_allclose(np.asarray(gx_r),
+                                           np.asarray(gx_s), rtol=1e-4,
+                                           atol=1e-4,
+                                           err_msg=f"d/du: {tag}")
+                if spec.rhs == "e" and spec.reduce == "sum":
+                    # ring's ∂w is the per-edge <x, ct> dot — for the
+                    # plain weighted sum it IS the segment ∂e
+                    np.testing.assert_allclose(
+                        np.asarray(gw_r), np.asarray(ge_s), rtol=1e-4,
+                        atol=1e-4, err_msg=f"d/de: {tag}")
+
+
 # ---------------- seeded sweep: always runs on tier-1 ----------------- #
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_outputs_and_vjps_agree_seeded(seed):
@@ -159,6 +230,14 @@ def test_block_pull_matches_segment_seeded(seed):
     check_block_pull(src, dst, 20, 15, rng)
 
 
+@pytest.mark.parametrize("seed", [5, 6])
+def test_ring_matches_segment_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n_u, n_v, nnz = [(22, 22, 90), (14, 27, 70)][seed - 5]
+    g, src, dst = random_graph(rng, n_u, n_v, nnz, unique=True)
+    check_ring_strategy(src, dst, n_u, n_v, rng)
+
+
 # ---------------- hypothesis search: richer shapes -------------------- #
 if HAS_HYPOTHESIS:
     @settings(max_examples=6, deadline=None)
@@ -170,3 +249,8 @@ if HAS_HYPOTHESIS:
     @given(graphs(max_n=20, max_e=60, unique=True))
     def test_block_pull_matches_segment_hypothesis(data):
         check_block_pull(*data)
+
+    @settings(max_examples=4, deadline=None)
+    @given(graphs(max_n=20, max_e=60, unique=True))
+    def test_ring_matches_segment_hypothesis(data):
+        check_ring_strategy(*data)

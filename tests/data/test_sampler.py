@@ -57,6 +57,42 @@ def test_seed_determinism(tiny):
                for x, y in zip(a, c))
 
 
+def test_vectorized_draw_identical_streams_same_seed():
+    """The batched without-replacement draw must be stream-deterministic:
+    two samplers with one seed (and one sampler after reset()) emit
+    bit-identical minibatches — every array, every block, every batch."""
+    rng = np.random.default_rng(11)
+    g, src, dst = random_graph(rng, 50, 50, 400)
+    ids = np.arange(g.n_dst)
+    labels = rng.integers(0, 3, g.n_dst)
+
+    def stream(sampler):
+        return _batches(sampler, ids, labels, n=4)
+
+    a = stream(NeighborSampler(g, [3, 5], 8, seed=42))
+    b = stream(NeighborSampler(g, [3, 5], 8, seed=42))
+    s = NeighborSampler(g, [3, 5], 8, seed=42)
+    first = stream(s)
+    s.reset()
+    replay = stream(s)
+    for other in (b, first, replay):
+        for mb_a, mb_o in zip(a, other):
+            np.testing.assert_array_equal(np.asarray(mb_a.seed_ids),
+                                          np.asarray(mb_o.seed_ids))
+            np.testing.assert_array_equal(np.asarray(mb_a.labels),
+                                          np.asarray(mb_o.labels))
+            for blk_a, blk_o in zip(mb_a.blocks, mb_o.blocks):
+                for fa, fo in [(blk_a.bg.nbr, blk_o.bg.nbr),
+                               (blk_a.bg.nbr_eid, blk_o.bg.nbr_eid),
+                               (blk_a.bg.nbr_mask, blk_o.bg.nbr_mask),
+                               (blk_a.src_ids, blk_o.src_ids),
+                               (blk_a.gcn_norm, blk_o.gcn_norm),
+                               (blk_a.bg.g.src, blk_o.bg.g.src),
+                               (blk_a.bg.g.dst, blk_o.bg.g.dst)]:
+                    np.testing.assert_array_equal(np.asarray(fa),
+                                                  np.asarray(fo))
+
+
 def test_reset_replays_stream(tiny):
     g, feats, labels, tm, vm, nc = tiny
     ids = np.nonzero(tm)[0]

@@ -23,9 +23,8 @@ rng = np.random.default_rng(0)
 n, nnz, d = 64, 400, 16
 src = rng.integers(0, n, nnz); dst = rng.integers(0, n, nnz)
 g = from_coo(src, dst, n_src=n, n_dst=n)
-plan = plan_ring(g, 8)
-n_pad = plan.n_shards * plan.rows_per_shard
-x = np.zeros((n_pad, d), np.float32)
+plan = plan_ring(g, 8)    # uniform layout: padded row i == vertex i
+x = np.zeros((plan.n_pad, d), np.float32)
 x[:n] = rng.normal(size=(n, d))
 out = ring_copy_reduce(mesh, plan, jnp.asarray(x))
 ref = ring_copy_reduce_reference(plan, jnp.asarray(x))
