@@ -8,30 +8,47 @@ Reported per row: epoch wall time, the sampling-vs-aggregation split,
 and (via ``benchmarks.run``'s JSON dump) the planner's chosen block
 plan per op. ``push`` is the DGL baseline; ``segment`` the vendor
 analogue; ``auto`` lets the shape-keyed block planner pick per op.
+
+Two backward measurements ride along (DESIGN.md §7):
+
+* per sweep config, one extra epoch with ``bwd_strategy="scatter"``
+  pins the autodiff backward, so the ``auto`` row's speedup isolates
+  what the reverse-table gather VJP buys end-to-end;
+* :func:`bench_bwd_split` times the differentiated block aggregation
+  alone (one jitted grad per backward strategy) on each config's
+  minibatch shape — the bwd-time split, free of sampling/optimizer
+  noise.
 """
 from __future__ import annotations
 
 import os
 
 import jax
+import jax.numpy as jnp
 
-from repro.data import make_node_dataset
+from repro.data import NeighborSampler, make_node_dataset
 from repro.models.gnn import sage
 from repro.models.gnn.train import train_sampled
+from repro.core.blocks import block_gspmm
 
-from .common import row
+from .common import row, time_fn
 
 import numpy as np
 
 QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
 
 # (dataset, fanouts, batch_size, n_batches) sweep — EXPERIMENTS.md maps
-# each dataset preset to the paper dataset it stands in for.
+# each dataset preset to the paper dataset it stands in for. The
+# products-like rows are the ROADMAP's 2.4M-node/120M-edge shape class
+# scaled to CPU (2^17 nodes / 1.2M edges), batched like the paper's
+# OGB-Products runs (large batch, deeper fanout).
 SWEEP = [
     ("pubmed-like", (5, 5), 64, 8),
     ("pubmed-like", (10, 10), 64, 8),
     ("pubmed-like", (10, 10), 256, 4),
     ("reddit-like", (10, 10), 64, 4),
+    ("products-like", (15, 10), 512, 3),
+    ("products-like", (10, 10), 1024, 2),
 ]
 if QUICK:
     SWEEP = [("tiny", (5, 5), 32, 4), ("tiny", (10, 10), 32, 4)]
@@ -51,7 +68,12 @@ def bench_config(dataset: str, fanouts, batch_size: int, n_batches: int,
     ids = np.nonzero(tm)[0]
     tag = f"fig3_sage_{dataset}_f{'x'.join(map(str, fanouts))}_b{batch_size}"
     out = {}
-    for strategy in strategies:
+    # (fwd strategy, bwd strategy, row suffix): the scatter-bwd variant
+    # of auto isolates the reverse-block VJP's end-to-end contribution
+    variants = [(s, "auto", s) for s in strategies]
+    if "auto" in strategies:
+        variants.append(("auto", "scatter", "auto_scatterbwd"))
+    for strategy, bwd, name in variants:
         params = sage.init(jax.random.PRNGKey(0), feats.shape[1], 64, nc,
                            n_layers=len(fanouts))
         # epoch 0 pays the jit compile; epoch 1 is the measured epoch
@@ -59,17 +81,67 @@ def bench_config(dataset: str, fanouts, batch_size: int, n_batches: int,
         _, hist = train_sampled(
             sage.forward_blocks, params, g, feats, labels, ids,
             fanouts=fanouts, batch_size=batch_size, strategy=strategy,
-            epochs=2, seed=1, max_batches=n_batches)
+            bwd_strategy=bwd, epochs=2, seed=1, max_batches=n_batches)
         epoch = hist["epoch_time"][1]
         sample = hist["sample_time"][1]
         agg = hist["step_time"][1]
-        out[strategy] = epoch
+        out[name] = epoch
         split = (f"sample={sample/max(epoch, 1e-12):.0%}"
                  f" agg={agg/max(epoch, 1e-12):.0%}"
                  f" batches={hist['n_batches'][1]}")
-        if strategy != "push" and "push" in out:
+        if name != "push" and "push" in out:
             split += f" speedup={out['push']/max(epoch, 1e-12):.2f}x"
-        print(row(f"{tag}_{strategy}", epoch, split))
+        if name == "auto_scatterbwd" and "auto" in out:
+            split += (f" gather_bwd_speedup="
+                      f"{epoch/max(out['auto'], 1e-12):.2f}x")
+        print(row(f"{tag}_{name}", epoch, split))
+    return out
+
+
+def bench_bwd_split(dataset: str, fanouts, batch_size: int) -> dict:
+    """Backward-time split: the differentiated block aggregation alone.
+
+    One minibatch of the config's shape; per op (SAGE's mean CR and
+    GCN's weighted sum), a jitted ∂x+∂w computation with the backward
+    pinned to 'gather' (reverse-table VJP) vs 'scatter' (autodiff) —
+    the direct measurement of what the reverse table buys, reported as
+    ``bwd=`` rows next to the epoch rows in BENCH_fig3.json.
+    """
+    g, feats, labels, tm, vm, nc = _dataset(dataset)
+    d = 64      # hidden width — where train steps spend backward time
+    sampler = NeighborSampler(g, fanouts, batch_size, seed=3)
+    ids = np.nonzero(tm)[0]
+    mb = sampler.sample(ids[:batch_size], labels[ids[:batch_size]])
+    blk = mb.blocks[0]          # outermost hop: the big block
+    bg = blk.bg
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.normal(size=(bg.g.n_src, d)).astype(np.float32))
+    e = blk.gcn_norm[:, None]
+    ct = jnp.asarray(rng.normal(size=(bg.n_dst_real, d))
+                     .astype(np.float32))
+    tag = (f"fig3_bwdsplit_{dataset}_"
+           f"f{'x'.join(map(str, fanouts))}_b{batch_size}")
+    out = {}
+    for op, args in [("u_copy_mean_v", {"u": u}),
+                     ("u_mul_e_add_v", {"u": u, "e": e})]:
+        for bwd in ("gather", "scatter"):
+            @jax.jit
+            def grad_fn(bg, ct, *leaves, bwd=bwd, op=op, keys=tuple(args)):
+                a = dict(zip(keys, leaves))
+
+                def loss(a):
+                    return jnp.sum(block_gspmm(bg, op, **a,
+                                               bwd_strategy=bwd) * ct)
+
+                return jax.grad(loss)(a)
+
+            t = time_fn(grad_fn, bg, ct, *args.values(), iters=7)
+            out[op, bwd] = t
+            derived = ""
+            if bwd == "scatter":
+                derived = (f"gather_speedup="
+                           f"{t/max(out[op, 'gather'], 1e-12):.2f}x")
+            print(row(f"{tag}_{op}_{bwd}", t, derived))
     return out
 
 
@@ -82,6 +154,9 @@ def main(strategy: str = None):
         strategies = ("push", strategy)
     for dataset, fanouts, batch_size, n_batches in SWEEP:
         bench_config(dataset, fanouts, batch_size, n_batches, strategies)
+    # backward split once per distinct (dataset, fanouts, batch) shape
+    for dataset, fanouts, batch_size, _ in SWEEP:
+        bench_bwd_split(dataset, fanouts, batch_size)
 
 
 if __name__ == "__main__":

@@ -12,10 +12,12 @@ from .binary_reduce import (BRSpec, parse_op, gspmm, copy_reduce,
                             binary_reduce, BINARY_OPS, REDUCE_OPS)
 from .edge_softmax import (edge_softmax, edge_softmax_fused,
                            block_edge_softmax)
-from .blocks import BlockGraph, block_gspmm, block_supports
+from .blocks import (BlockGraph, block_gspmm, block_supports,
+                     build_reverse_table, attach_reverse)
 
 __all__ = [
     "BlockGraph", "block_gspmm", "block_supports", "block_edge_softmax",
+    "build_reverse_table", "attach_reverse",
     "Graph", "from_coo", "reverse", "add_self_loops",
     "ELLPack", "ELLClass", "TilePack", "build_ell",
     "build_ell_uniform", "build_tiles",

@@ -20,10 +20,24 @@ blocks. ``strategy="auto"`` routes through the planner's *shape-keyed*
 block plan cache (:func:`repro.core.planner.plan_block_gspmm`): the
 decision depends only on the static padded shapes + op + feature width,
 so it is stable across batches and valid inside a trace.
+
+Training (DESIGN.md §7): autodiff of any forward block strategy turns
+the ∂x computation into a scatter-add — the push pathology the paper
+removed from the forward. The sampler therefore also emits a *reverse
+table* (the block's edges sorted by source slot: ``rev_src``/
+``rev_dst``/``rev_eid``) and :func:`block_gspmm` wraps the linear
+reducers in a custom VJP that computes ∂x as a masked pull over that
+table (gather cotangents at consuming destinations + one sorted
+segment reduce) and ∂e as gathered per-edge products. The backward
+strategy is planned independently of the forward one
+(:func:`repro.core.planner.plan_block_vjp`, logged as
+``block_bwd:<op>``) — ``gather`` is the reverse-table pull, ``scatter``
+the autodiff baseline.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional, Tuple
 
 import jax
@@ -36,7 +50,8 @@ from .binary_reduce import (BINARY_OPS, BRSpec, _as2d, _execute, gspmm,
 from .graph import Graph
 from .strategies import REDUCE_IDENTITY
 
-__all__ = ["BlockGraph", "block_gspmm", "block_supports"]
+__all__ = ["BlockGraph", "block_gspmm", "block_supports",
+           "build_reverse_table", "attach_reverse"]
 
 
 @jax.tree_util.register_pytree_node_class
@@ -51,6 +66,14 @@ class BlockGraph:
     are masked out), ``nbr_eid[j, k]`` the matching caller-order edge id
     (edge features are indexed with it), and ``real_deg[j]`` the number
     of real sampled in-edges — the mask-corrected mean denominator.
+
+    The optional *reverse table* (``rev_src``/``rev_dst``/``rev_eid``,
+    emitted for free by the sampler) views the same edges sorted by
+    source slot: ``rev_src[t]`` is non-decreasing, ``rev_dst[t]`` the
+    destination row that consumed reverse slot ``t``, ``rev_eid[t]`` the
+    matching caller-order edge id. Pad edges sort last (their source is
+    the dummy slot) and point at the dummy destination row, so a zero
+    cotangent row masks them out of the gather backward exactly.
     """
     g: Graph
     nbr: jnp.ndarray        # (n_dst_real, fanout) int32 source slots
@@ -59,16 +82,28 @@ class BlockGraph:
     real_deg: jnp.ndarray   # (n_dst_real,) int32
     n_dst_real: int = dataclasses.field(metadata={"static": True})
     fanout: int = dataclasses.field(metadata={"static": True})
+    rev_src: Optional[jnp.ndarray] = None   # (n_edges,) int32, sorted
+    rev_dst: Optional[jnp.ndarray] = None   # (n_edges,) int32 dst rows
+    rev_eid: Optional[jnp.ndarray] = None   # (n_edges,) int32 caller ids
 
     def tree_flatten(self):
         return ((self.g, self.nbr, self.nbr_eid, self.nbr_mask,
-                 self.real_deg), (self.n_dst_real, self.fanout))
+                 self.real_deg, self.rev_src, self.rev_dst,
+                 self.rev_eid), (self.n_dst_real, self.fanout))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        g, nbr, nbr_eid, nbr_mask, real_deg = children
+        (g, nbr, nbr_eid, nbr_mask, real_deg,
+         rev_src, rev_dst, rev_eid) = children
         return cls(g=g, nbr=nbr, nbr_eid=nbr_eid, nbr_mask=nbr_mask,
-                   real_deg=real_deg, n_dst_real=aux[0], fanout=aux[1])
+                   real_deg=real_deg, n_dst_real=aux[0], fanout=aux[1],
+                   rev_src=rev_src, rev_dst=rev_dst, rev_eid=rev_eid)
+
+    @property
+    def has_reverse(self) -> bool:
+        """True when the reverse table is attached (gather backward
+        available)."""
+        return self.rev_src is not None
 
     @property
     def signature(self) -> Tuple[int, int, int, int]:
@@ -78,6 +113,43 @@ class BlockGraph:
     def __repr__(self):
         return (f"BlockGraph(n_src={self.g.n_src}, "
                 f"n_dst_real={self.n_dst_real}, fanout={self.fanout})")
+
+
+def build_reverse_table(g: Graph) -> Tuple[np.ndarray, np.ndarray,
+                                           np.ndarray]:
+    """Host-side reverse table of a (concrete) block graph.
+
+    Returns ``(rev_src, rev_dst, rev_eid)``: the edge list sorted by
+    source slot (stable, so a source's consumers stay in canonical
+    order), with ``rev_eid`` in CALLER edge order — the order edge
+    features are indexed in. The sampler builds the same arrays directly
+    from its edge lists; this is the fallback for hand-built blocks.
+    """
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    eid = np.asarray(g.eid)
+    order = np.argsort(src, kind="stable")
+    return (src[order].astype(np.int32), dst[order].astype(np.int32),
+            eid[order].astype(np.int32))
+
+
+def attach_reverse(bg: BlockGraph) -> BlockGraph:
+    """Return ``bg`` with the reverse table attached (no-op if present).
+
+    Needs a concrete (non-traced) graph — sampler-produced blocks carry
+    the table already; this serves blocks built by hand in tests or
+    benchmarks.
+    """
+    if bg.has_reverse:
+        return bg
+    if planner.graph_is_traced(bg.g):
+        raise ValueError("attach_reverse needs a concrete BlockGraph; "
+                         "build the reverse table host-side (the sampler "
+                         "emits it for free)")
+    rev_src, rev_dst, rev_eid = build_reverse_table(bg.g)
+    return dataclasses.replace(bg, rev_src=jnp.asarray(rev_src),
+                               rev_dst=jnp.asarray(rev_dst),
+                               rev_eid=jnp.asarray(rev_eid))
 
 
 def block_supports(strategy: str, spec: BRSpec) -> bool:
@@ -148,7 +220,8 @@ def block_gspmm(bg: BlockGraph, op_name: str, *,
                 u: Optional[jnp.ndarray] = None,
                 v: Optional[jnp.ndarray] = None,
                 e: Optional[jnp.ndarray] = None,
-                strategy: str = "auto") -> jnp.ndarray:
+                strategy: str = "auto",
+                bwd_strategy: str = "auto") -> jnp.ndarray:
     """Generalized sparse aggregation over one sampled block.
 
     Same operand conventions as :func:`~repro.core.binary_reduce.gspmm`
@@ -161,6 +234,13 @@ def block_gspmm(bg: BlockGraph, op_name: str, *,
     cache, so the choice is identical for every batch of the same
     sampler configuration and survives ``jit`` tracing. Pinned
     strategies unsupported on blocks fall back with a one-time warning.
+
+    ``bwd_strategy`` picks the DIFFERENTIATION path, independently of
+    the forward: ``"gather"`` wraps the call in the reverse-table
+    custom VJP (∂x as a masked pull, no scatter — needs the sampler's
+    reverse table and a linear reducer), ``"scatter"`` keeps plain
+    autodiff, ``"auto"`` (default) lets the planner decide per shape
+    signature (logged as ``block_bwd:<op>``).
     """
     spec = parse_op(op_name)
     data = {"u": u, "v": v, "e": e}
@@ -168,8 +248,15 @@ def block_gspmm(bg: BlockGraph, op_name: str, *,
         raise ValueError(f"{op_name}: operand {spec.lhs!r} missing")
     if spec.rhs is not None and data[spec.rhs] is None:
         raise ValueError(f"{op_name}: operand {spec.rhs!r} missing")
+    if bwd_strategy != "auto" and \
+            bwd_strategy not in planner.BLOCK_BWD_STRATEGIES:
+        raise ValueError(
+            f"unknown block backward strategy {bwd_strategy!r}; expected "
+            f"one of {planner.BLOCK_BWD_STRATEGIES + ('auto',)}")
 
     # edge outputs are strategy-free gathers — delegate to the COO path
+    # (their autodiff backward is already gather-shaped; bwd_strategy
+    # does not apply)
     if spec.out == "e":
         return gspmm(bg.g, op_name, u=u, v=v, e=e)
 
@@ -183,18 +270,37 @@ def block_gspmm(bg: BlockGraph, op_name: str, *,
     rhs_data = _as2d(data[spec.rhs]) if spec.rhs is not None else None
     d = int(np.prod(lhs_data.shape[1:]))
 
+    concrete = (not planner.graph_is_traced(bg.g)
+                and not planner._is_traced(lhs_data)
+                and (rhs_data is None
+                     or not planner._is_traced(rhs_data)))
     runner = None
-    if planner.get_mode() == "autotune" and strategy == "auto":
-        concrete = (not planner.graph_is_traced(bg.g)
-                    and not planner._is_traced(lhs_data)
-                    and (rhs_data is None
-                         or not planner._is_traced(rhs_data)))
-        if concrete:    # measuring candidates only works eagerly
-            def runner(s):
-                return _block_execute(bg, spec, lhs_data, rhs_data, s)
+    if (planner.get_mode() == "autotune" and strategy == "auto"
+            and concrete):      # measuring candidates only works eagerly
+        def runner(s):
+            return _block_execute(bg, spec, lhs_data, rhs_data, s)
 
     chosen = planner.plan_block_gspmm(bg.signature, spec, d,
                                       requested=strategy, runner=runner)
+
+    bwd_runner = None
+    if (planner.get_mode() == "autotune" and bwd_strategy == "auto"
+            and concrete and bg.has_reverse
+            and jnp.issubdtype(lhs_data.dtype, jnp.floating)):
+        def bwd_runner(s):      # measure the actual differentiated call
+            def f(l):
+                out = (_block_exec_rev(spec, chosen, bg, l, rhs_data)
+                       if s == "gather"
+                       else _block_execute(bg, spec, l, rhs_data, chosen))
+                return jnp.sum(out)
+            return jax.grad(f)(lhs_data)
+
+    bwd = planner.plan_block_vjp(bg.signature, spec, d,
+                                 requested=bwd_strategy,
+                                 gather_available=bg.has_reverse,
+                                 runner=bwd_runner)
+    if bwd == "gather":
+        return _block_exec_rev(spec, chosen, bg, lhs_data, rhs_data)
     return _block_execute(bg, spec, lhs_data, rhs_data, chosen)
 
 
@@ -211,3 +317,128 @@ def _block_execute(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data,
                         reason="block")
     out = _execute(bg.g, spec, lhs_data, rhs_data, plan)
     return out[: bg.n_dst_real]
+
+
+# --------------------------------------------------------------------- #
+# reverse-block VJP: gather-based backward (DESIGN.md §7)
+# --------------------------------------------------------------------- #
+def _unbroadcast(grad: jnp.ndarray, feat_shape: Tuple[int, ...]
+                 ) -> jnp.ndarray:
+    """Reduce a per-edge gradient ``(E, *G)`` to an operand's per-edge
+    shape ``(E, *feat_shape)`` (right-aligned broadcasting adjoint)."""
+    extra = (grad.ndim - 1) - len(feat_shape)
+    if extra > 0:
+        grad = grad.sum(axis=tuple(range(1, 1 + extra)))
+    axes = tuple(i + 1 for i, w in enumerate(feat_shape)
+                 if w == 1 and grad.shape[i + 1] != 1)
+    if axes:
+        grad = grad.sum(axis=axes, keepdims=True)
+    return grad
+
+
+# ⊗-adjoint factors: which operand values the partial derivative needs
+_NEEDS_OTHER = ("mul", "div", "dot")
+
+
+def _dmsg(op: str, side: str, lhs_val, rhs_val, ct_e):
+    """Per-edge cotangent of ``msg = lhs ⊗ rhs`` w.r.t. one side."""
+    if op in ("copy", "add"):
+        return ct_e
+    if op == "sub":
+        return ct_e if side == "l" else -ct_e
+    if op in ("mul", "dot"):    # dot: ct_e has a trailing 1 — broadcasts
+        return ct_e * (rhs_val if side == "l" else lhs_val)
+    if op == "div":
+        if side == "l":
+            return ct_e / rhs_val
+        return -ct_e * lhs_val / (rhs_val * rhs_val)
+    raise ValueError(f"no ⊗-adjoint for {op!r}")
+
+
+def _reverse_grads(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data, ct):
+    """Gather-based adjoints of one block aggregation.
+
+    ∂(u-operand): masked pull over the reverse table — gather the
+    (mean-scaled, zero-padded) cotangents at each source's consuming
+    destinations, one SORTED segment reduce, no scatter. ∂(e-operand):
+    per-edge products of gathered endpoint values, directly in caller
+    edge order. ∂(v-operand): same per-edge products reduced over the
+    forward CSR (canonical order is dst-sorted already). Only linear
+    reducers (sum/mean) route here — the planner keeps max/min/prod on
+    the autodiff backward.
+    """
+    g = bg.g
+    if spec.reduce == "mean":
+        d = jnp.maximum(bg.real_deg, 1).astype(ct.dtype)
+        ct = ct / d.reshape((ct.shape[0],) + (1,) * (ct.ndim - 1))
+    # dummy destination row pulls exactly zero: pad edges (and only pad
+    # edges) point at it, so no mask arithmetic is needed in the pull
+    ct_pad = jnp.concatenate(
+        [ct, jnp.zeros((1,) + ct.shape[1:], ct.dtype)], axis=0)
+
+    orders = {
+        "rev": (bg.rev_src, bg.rev_dst, bg.rev_eid),
+        "canon": (g.src, g.dst, g.eid),
+        "caller": (jnp.take(g.src, g.eid_inv), jnp.take(g.dst, g.eid_inv),
+                   None),     # eid in caller order is the identity
+    }
+
+    def fetch(target, data, order):
+        s, dd, e = orders[order]
+        if target == "u":
+            return jnp.take(data, s, axis=0)
+        if target == "v":
+            return jnp.take(data, dd, axis=0)
+        return data if e is None else jnp.take(data, e, axis=0)
+
+    def grad_for(side):
+        target = spec.lhs if side == "l" else spec.rhs
+        data = lhs_data if side == "l" else rhs_data
+        other = rhs_data if side == "l" else lhs_data
+        other_t = spec.rhs if side == "l" else spec.lhs
+        order = {"u": "rev", "v": "canon", "e": "caller"}[target]
+        lhs_val = rhs_val = None
+        if spec.op in _NEEDS_OTHER:
+            val = fetch(other_t, other, order)
+            lhs_val, rhs_val = ((None, val) if side == "l" else (val, None))
+            if spec.op == "div" and side == "r":
+                rhs_val = fetch(target, data, order)  # d/dr needs both
+        ct_e = jnp.take(ct_pad, orders[order][1], axis=0)
+        gmsg = _dmsg(spec.op, side, lhs_val, rhs_val, ct_e)
+        gmsg = _unbroadcast(gmsg, tuple(data.shape[1:]))
+        if target == "u":
+            out = jax.ops.segment_sum(gmsg, orders[order][0],
+                                      num_segments=g.n_src,
+                                      indices_are_sorted=True)
+        elif target == "v":
+            out = jax.ops.segment_sum(gmsg, orders[order][1],
+                                      num_segments=g.n_dst,
+                                      indices_are_sorted=True)
+        else:
+            out = gmsg
+        return out.astype(data.dtype)
+
+    dlhs = grad_for("l")
+    drhs = grad_for("r") if spec.rhs is not None else None
+    return dlhs, drhs
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _block_exec_rev(spec: BRSpec, fwd_strategy: str, bg: BlockGraph,
+                    lhs_data, rhs_data):
+    """``_block_execute`` with the gather (reverse-table) backward."""
+    return _block_execute(bg, spec, lhs_data, rhs_data, fwd_strategy)
+
+
+def _block_exec_rev_fwd(spec, fwd_strategy, bg, lhs_data, rhs_data):
+    out = _block_execute(bg, spec, lhs_data, rhs_data, fwd_strategy)
+    return out, (bg, lhs_data, rhs_data)
+
+
+def _block_exec_rev_bwd(spec, fwd_strategy, res, ct):
+    bg, lhs_data, rhs_data = res
+    dlhs, drhs = _reverse_grads(bg, spec, lhs_data, rhs_data, ct)
+    return None, dlhs, drhs
+
+
+_block_exec_rev.defvjp(_block_exec_rev_fwd, _block_exec_rev_bwd)

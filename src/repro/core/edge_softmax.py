@@ -44,22 +44,27 @@ def edge_softmax(g: Graph, logits: jnp.ndarray,
 
 
 def block_edge_softmax(bg: BlockGraph, logits: jnp.ndarray,
-                       strategy: str = "auto") -> jnp.ndarray:
+                       strategy: str = "auto",
+                       bwd_strategy: str = "auto") -> jnp.ndarray:
     """Edge softmax over one sampled block's real in-edges.
 
     Same five-primitive chain as :func:`edge_softmax`, with the two
-    node-output reductions routed through the shape-keyed block planner.
+    node-output reductions routed through the shape-keyed block planner
+    (``bwd_strategy`` picks their differentiation path — the max
+    reduction always stays on autodiff, see planner.block_bwd_supports).
     Pad edges live in the dummy destination row, so real rows' softmax
     sees exactly their real edges; pad edges' output values are garbage
     but masked out of every downstream block aggregation.
     """
     x = logits[:, None] if logits.ndim == 1 else logits
     pad = jnp.zeros((1,) + x.shape[1:], x.dtype)
-    maxv = block_gspmm(bg, "e_copy_max_v", e=x, strategy=strategy)
+    maxv = block_gspmm(bg, "e_copy_max_v", e=x, strategy=strategy,
+                       bwd_strategy=bwd_strategy)
     shifted = gspmm(bg.g, "e_sub_v_copy_e", e=x,
                     v=jnp.concatenate([maxv, pad], axis=0))
     ex = jnp.exp(shifted)
-    z = block_gspmm(bg, "e_copy_add_v", e=ex, strategy=strategy)
+    z = block_gspmm(bg, "e_copy_add_v", e=ex, strategy=strategy,
+                    bwd_strategy=bwd_strategy)
     # dummy row gets z=1 so pad edges divide by a finite value; every
     # real edge's destination has ≥ 1 real edge, so z > 0 on real rows
     zp = jnp.concatenate([z, jnp.ones_like(pad)], axis=0)

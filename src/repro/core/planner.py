@@ -50,6 +50,8 @@ __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "plan_log", "clear_plan_log", "last_plan", "pack_build_totals",
            "set_mode", "get_mode", "STRATEGIES", "FALLBACK_CHAIN",
            "block_stats", "plan_block_gspmm", "clear_block_plans",
+           "reverse_block_stats", "plan_block_vjp", "block_bwd_supports",
+           "BLOCK_BWD_STRATEGIES",
            "use_ring", "active_ring", "RingContext"]
 
 STRATEGIES = ("push", "segment", "ell", "onehot", "pallas", "ring")
@@ -699,6 +701,7 @@ def block_stats(n_src: int, n_dst_real: int, n_edges: int,
 
 def clear_block_plans() -> None:
     _BLOCK_PLANS.clear()
+    _BLOCK_BWD_PLANS.clear()
 
 
 def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
@@ -758,5 +761,113 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
             _warn_fallback(log_name, requested, chosen)
         if memoize:
             _BLOCK_PLANS[key] = chosen
+    _record(log_name, requested, chosen)
+    return chosen
+
+
+# --------------------------------------------------------------------- #
+# block BACKWARD planning — the reverse-table VJP vs autodiff scatter
+# --------------------------------------------------------------------- #
+# Autodiff of any forward block strategy computes ∂x with a scatter-add
+# (the push pathology, paper §4). 'gather' is the reverse-block custom
+# VJP (core/blocks.py): cotangents pulled over the sampler's src-sorted
+# reverse table + one sorted segment reduce. 'scatter' is plain
+# autodiff — the baseline, and the only option for the non-linear
+# reducers (max/min route cotangents through arg-extrema, prod has no
+# scatter transpose at all). Decisions are memoized per shape signature
+# exactly like the forward block plans and logged as ``block_bwd:<op>``,
+# so forward and backward strategies are chosen independently.
+BLOCK_BWD_STRATEGIES = ("gather", "scatter")
+
+_BLOCK_BWD_PLANS: Dict[Tuple, str] = {}
+
+
+def reverse_block_stats(n_src: int, n_dst_real: int, n_edges: int,
+                        fanout: int) -> GraphStats:
+    """Nominal :class:`GraphStats` of a block's REVERSE view.
+
+    The reverse table has ``n_src`` rows and the same ``n_edges`` edges;
+    reverse degrees are data-dependent (hub nodes are sampled by many
+    destinations), so only the edge count is meaningful — which is all
+    the sorted-segment cost term uses.
+    """
+    avg = n_edges / max(n_src, 1)
+    return GraphStats(
+        n_src=int(n_dst_real), n_dst=int(n_src), n_edges=int(n_edges),
+        avg_in_deg=float(avg), max_in_deg=int(n_edges),
+        skew=float(n_edges / max(avg, 1e-9)),
+        ell_padded_slots=int(n_edges), ell_n_classes=1, pad_ratio=1.0)
+
+
+def block_bwd_supports(strategy: str, spec) -> bool:
+    """Can ``strategy`` differentiate this block spec?
+
+    'scatter' (autodiff) always can. 'gather' needs a node output and a
+    LINEAR reducer: the reverse-table pull is the exact adjoint of
+    sum/mean; max/min adjoints depend on runtime arg-extrema and stay on
+    autodiff.
+    """
+    if strategy == "scatter":
+        return True
+    if strategy == "gather":
+        return spec.out == "v" and spec.reduce in ("sum", "mean")
+    raise ValueError(f"unknown block backward strategy {strategy!r}")
+
+
+def plan_block_vjp(signature: Tuple[int, int, int, int], spec, d: int,
+                   requested: str = "auto", gather_available: bool = True,
+                   runner: Optional[Callable[[str], Any]] = None) -> str:
+    """Pick the backward (differentiation) strategy for one block op.
+
+    Shape-keyed and memoized exactly like :func:`plan_block_gspmm`
+    (``gather_available`` — whether the block carries a reverse table —
+    is part of the key). The cost comparison pits the reverse pull (a
+    sorted segment reduce over the same edge count) against the
+    autodiff scatter-add; in autotune mode ``runner`` measures the two
+    differentiated calls once per signature.
+    """
+    backend = jax.default_backend()
+    key = (signature, spec.name, int(d), requested,
+           bool(gather_available), backend)
+    log_name = f"block_bwd:{spec.name}"
+    chosen = _BLOCK_BWD_PLANS.get(key)
+    if chosen is None:
+        memoize = True
+
+        def ok(s):
+            return (block_bwd_supports(s, spec)
+                    and (s != "gather" or gather_available))
+
+        if requested == "auto":
+            if not ok("gather"):
+                chosen = "scatter"
+            elif _MODE == "autotune" and runner is not None:
+                chosen = min(BLOCK_BWD_STRATEGIES,
+                             key=lambda s: _measure(runner, s))
+            else:
+                stats = block_stats(*signature)
+                rev = reverse_block_stats(*signature)
+                cost = {
+                    "gather": estimate_cost("segment", rev, d,
+                                            backend=backend),
+                    "scatter": estimate_cost("push", stats, d,
+                                             backend=backend),
+                }
+                chosen = min(BLOCK_BWD_STRATEGIES, key=cost.__getitem__)
+                # same rule as the forward block plans: a cost-model
+                # stand-in computed in autotune mode is not pinned, so a
+                # later eager call still gets to measure
+                memoize = _MODE != "autotune"
+        elif requested not in BLOCK_BWD_STRATEGIES:
+            raise ValueError(
+                f"unknown block backward strategy {requested!r}; expected "
+                f"one of {BLOCK_BWD_STRATEGIES + ('auto',)}")
+        elif ok(requested):
+            chosen = requested
+        else:
+            chosen = "scatter"
+            _warn_fallback(log_name, requested, chosen)
+        if memoize:
+            _BLOCK_BWD_PLANS[key] = chosen
     _record(log_name, requested, chosen)
     return chosen

@@ -17,6 +17,13 @@ consumes, plus per-edge GCN normalization weights gathered from the
 FULL graph's degrees (pad edges get weight 0, so they contribute
 exactly zero to weighted aggregation).
 
+Alongside the forward table the sampler emits the block's *reverse
+table* — the same edge list sorted (stably) by source slot — which is
+what the reverse-block VJP pulls over to compute ∂x without a scatter
+(core/blocks.py, DESIGN.md §7). Pad edges sort last (dummy source slot)
+and keep pointing at the dummy destination row, so the table is
+pad-poison safe by construction: a zero cotangent row masks them out.
+
 Sampling is uniform WITHOUT replacement; a node with in-degree ≤ fanout
 keeps all its in-edges — so with ``fanout ≥ max in-degree`` the blocks
 reproduce the full graph exactly (tests/data/test_sampler.py holds the
@@ -45,7 +52,8 @@ from ..core.graph import Graph, from_coo
 class SampledBlock:
     """One bipartite layer of a minibatch (outer hop = larger side).
 
-    ``bg`` holds the padded block graph + uniform neighbor table;
+    ``bg`` holds the padded block graph + uniform neighbor table + the
+    src-sorted reverse table (the gather backward's lookup structure);
     ``src_ids`` the global node id per source slot (-1 = pad);
     ``gcn_norm`` per-edge 1/√(deg_out(u)·deg_in(v)) from the FULL
     graph's degrees, caller edge order, 0 on pad edges.
@@ -121,6 +129,10 @@ class NeighborSampler:
         # full-graph degrees for GCN-style symmetric normalization
         self.deg_in = np.maximum(np.asarray(g.in_degrees, np.float64), 1)
         self.deg_out = np.maximum(np.asarray(g.out_degrees, np.float64), 1)
+        # label masks depend only on the real-seed count (at most two
+        # values per epoch: full batches + one short tail) — cache the
+        # device arrays instead of re-building/re-uploading per batch
+        self._mask_cache: dict = {}
         # static padded sizes per layer (innermost = batch itself)
         self.layer_sizes = [batch_size]
         for f in reversed(self.fanouts):
@@ -185,11 +197,16 @@ class NeighborSampler:
             rng = self.rng
         seeds = np.asarray(seeds, np.int64)
         labels = np.asarray(labels, np.int64)
+        n_real_seeds = len(seeds)
         if len(seeds) < self.batch_size:     # short final batch: pad seeds
             pad = self.batch_size - len(seeds)
             seeds = np.concatenate([seeds, np.full(pad, -1, np.int64)])
             labels = np.concatenate([labels, np.zeros(pad, np.int64)])
-        label_mask = seeds >= 0
+        label_mask = self._mask_cache.get(n_real_seeds)
+        if label_mask is None:
+            label_mask = jnp.asarray(
+                np.arange(self.batch_size) < n_real_seeds)
+            self._mask_cache[n_real_seeds] = label_mask
 
         blocks: List[SampledBlock] = []
         frontier = seeds
@@ -245,12 +262,22 @@ class NeighborSampler:
             # they are masked, so the value never reaches a reduction
             nbr_eid[~nbr_mask] = min(n_real, n_edges_pad - 1)
             real_deg = nbr_mask.sum(axis=1).astype(np.int32)
+            # reverse table: the same edge list stably sorted by source
+            # slot — what the gather backward pulls over. Pad edges
+            # (dummy source = last slot) sort last; their dst is the
+            # dummy row, so a zero cotangent row masks them exactly.
+            rev_eid = np.argsort(srcs, kind="stable").astype(np.int32)
+            rev_src = srcs[rev_eid].astype(np.int32)
+            rev_dst = dsts[rev_eid].astype(np.int32)
             g = from_coo(srcs, dsts, n_src=n_src_pad, n_dst=n_dst + 1)
             bg = BlockGraph(g=g, nbr=jnp.asarray(nbr),
                             nbr_eid=jnp.asarray(nbr_eid),
                             nbr_mask=jnp.asarray(nbr_mask),
                             real_deg=jnp.asarray(real_deg),
-                            n_dst_real=n_dst, fanout=fanout)
+                            n_dst_real=n_dst, fanout=fanout,
+                            rev_src=jnp.asarray(rev_src),
+                            rev_dst=jnp.asarray(rev_dst),
+                            rev_eid=jnp.asarray(rev_eid))
             blocks.append(SampledBlock(
                 bg=bg, src_ids=jnp.asarray(src_ids, jnp.int32),
                 gcn_norm=jnp.asarray(norms)))

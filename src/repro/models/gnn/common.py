@@ -194,17 +194,23 @@ def block_features(feats_padded: jnp.ndarray, ids) -> jnp.ndarray:
 
 def run_blocks(block_layer: Callable, layers: Sequence, blocks: Sequence,
                h: jnp.ndarray, *, strategy: str = "auto",
+               bwd_strategy: str = "auto",
                activation: Callable = jax.nn.relu, train: bool = False,
                rng=None, drop: float = 0.0) -> jnp.ndarray:
     """Drive a per-app layer function over a minibatch's blocks.
 
-    ``block_layer(lyr, blk, h, strategy=...)`` maps the layer-l frontier
-    features ``h`` (n_src_pad, d) to destination features
-    (n_dst_real, d'). Thanks to the sampler's dst-first source numbering
-    the next block's frontier IS this block's destination set, so the
-    loop just chains layers — exactly the full-graph forward with the
-    graph swapped per layer. The final block's destinations are the
+    ``block_layer(lyr, blk, h, strategy=..., bwd_strategy=...)`` maps
+    the layer-l frontier features ``h`` (n_src_pad, d) to destination
+    features (n_dst_real, d'). Thanks to the sampler's dst-first source
+    numbering the next block's frontier IS this block's destination set,
+    so the loop just chains layers — exactly the full-graph forward with
+    the graph swapped per layer. The final block's destinations are the
     seeds: the return value is (batch_size, d_out), no slicing needed.
+
+    ``bwd_strategy`` is the block DIFFERENTIATION strategy (gather /
+    scatter / auto — see DESIGN.md §7), threaded to every
+    ``block_gspmm`` so the planner's ``block_bwd:<op>`` decisions apply
+    inside a differentiated train step.
     """
     if len(layers) != len(blocks):
         raise ValueError(f"{len(layers)} layers but {len(blocks)} blocks: "
@@ -213,7 +219,8 @@ def run_blocks(block_layer: Callable, layers: Sequence, blocks: Sequence,
         if train and rng is not None and drop > 0.0:
             rng, sub = jax.random.split(rng)
             h = dropout(sub, h, drop, train)
-        h = block_layer(lyr, blk, h, strategy=strategy)
+        h = block_layer(lyr, blk, h, strategy=strategy,
+                        bwd_strategy=bwd_strategy)
         if i < len(layers) - 1:
             h = activation(h)
     return h

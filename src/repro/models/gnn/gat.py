@@ -80,8 +80,8 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
     return h
 
 
-def block_layer(lyr, blk, h: jnp.ndarray, *,
-                strategy: str = "auto") -> jnp.ndarray:
+def block_layer(lyr, blk, h: jnp.ndarray, *, strategy: str = "auto",
+                bwd_strategy: str = "auto") -> jnp.ndarray:
     """One GAT layer on a sampled block.
 
     Attention logits are per-edge over the block's sampled edges; the
@@ -96,18 +96,22 @@ def block_layer(lyr, blk, h: jnp.ndarray, *,
     er = jnp.concatenate([er, jnp.zeros((1, heads), er.dtype)], axis=0)
     logits = gspmm(bg.g, "u_add_v_copy_e", u=el, v=er)
     logits = leaky_relu(logits)
-    alpha = block_edge_softmax(bg, logits, strategy=strategy)  # (nnz, H)
+    alpha = block_edge_softmax(bg, logits, strategy=strategy,
+                               bwd_strategy=bwd_strategy)  # (nnz, H)
     out_feat = block_gspmm(bg, "u_mul_e_add_v", u=z, e=alpha[:, :, None],
-                           strategy=strategy)            # (nd, H, F)
+                           strategy=strategy,
+                           bwd_strategy=bwd_strategy)    # (nd, H, F)
     return out_feat.reshape(bg.n_dst_real, heads * out)
 
 
 def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
-                   strategy: str = "auto", train: bool = False, rng=None,
+                   strategy: str = "auto", bwd_strategy: str = "auto",
+                   train: bool = False, rng=None,
                    drop: float = 0.4) -> jnp.ndarray:
     """Sampled mini-batch forward on the shared block path."""
     return run_blocks(block_layer, params["layers"], blocks, x,
-                      strategy=strategy, activation=jax.nn.elu,
+                      strategy=strategy, bwd_strategy=bwd_strategy,
+                      activation=jax.nn.elu,
                       train=train, rng=rng, drop=drop)
 
 

@@ -52,23 +52,26 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
     return h
 
 
-def block_layer(lyr, blk, h: jnp.ndarray, *,
-                strategy: str = "auto") -> jnp.ndarray:
+def block_layer(lyr, blk, h: jnp.ndarray, *, strategy: str = "auto",
+                bwd_strategy: str = "auto") -> jnp.ndarray:
     """One GCN layer on a sampled block: linear, then the weighted sum
     ``u_mul_e_add_v`` with the FULL graph's symmetric normalization
     gathered per sampled edge (``blk.gcn_norm``; pad edges weigh 0).
     With fanout ≥ max in-degree this is exactly the full-graph layer."""
     h = linear_apply(lyr, h)
     return block_gspmm(blk.bg, "u_mul_e_add_v", u=h,
-                       e=blk.gcn_norm[:, None], strategy=strategy)
+                       e=blk.gcn_norm[:, None], strategy=strategy,
+                       bwd_strategy=bwd_strategy)
 
 
 def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
-                   strategy: str = "auto", train: bool = False, rng=None,
+                   strategy: str = "auto", bwd_strategy: str = "auto",
+                   train: bool = False, rng=None,
                    drop: float = 0.5) -> jnp.ndarray:
     """Sampled mini-batch forward on the shared block path."""
     return run_blocks(block_layer, params["layers"], blocks, x,
-                      strategy=strategy, activation=jax.nn.relu,
+                      strategy=strategy, bwd_strategy=bwd_strategy,
+                      activation=jax.nn.relu,
                       train=train, rng=rng, drop=drop)
 
 

@@ -48,23 +48,26 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
     return h
 
 
-def block_layer(lyr, blk, h: jnp.ndarray, *,
-                strategy: str = "auto") -> jnp.ndarray:
+def block_layer(lyr, blk, h: jnp.ndarray, *, strategy: str = "auto",
+                bwd_strategy: str = "auto") -> jnp.ndarray:
     """One SAGE layer on a sampled block: mean over sampled in-edges
     (mask-corrected, pad slots contribute zero) concat the destination's
     own features (dst-first numbering: ``h[:n_dst_real]``)."""
     bg = blk.bg
-    hn = block_gspmm(bg, "u_copy_mean_v", u=h, strategy=strategy)
+    hn = block_gspmm(bg, "u_copy_mean_v", u=h, strategy=strategy,
+                     bwd_strategy=bwd_strategy)
     return linear_apply(lyr, jnp.concatenate(
         [h[: bg.n_dst_real], hn], axis=-1))
 
 
 def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
-                   strategy: str = "auto", train: bool = False, rng=None,
+                   strategy: str = "auto", bwd_strategy: str = "auto",
+                   train: bool = False, rng=None,
                    drop: float = 0.5) -> jnp.ndarray:
     """Sampled mini-batch forward (paper Fig. 3) on the shared path."""
     return run_blocks(block_layer, params["layers"], blocks, x,
-                      strategy=strategy, activation=jax.nn.relu,
+                      strategy=strategy, bwd_strategy=bwd_strategy,
+                      activation=jax.nn.relu,
                       train=train, rng=rng, drop=drop)
 
 

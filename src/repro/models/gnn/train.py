@@ -216,6 +216,7 @@ def train_partitioned(forward_part_fn: Callable, params: Dict, g, x,
 # sampled minibatch training (paper Fig. 3)
 # --------------------------------------------------------------------- #
 def make_sampled_train_step(forward_blocks_fn: Callable, strategy: str,
+                            bwd_strategy: str = "auto",
                             lr: float = 1e-2, weight_decay: float = 5e-4,
                             clip: float = 5.0):
     """One jitted step over a :class:`~repro.data.MiniBatch` pytree.
@@ -224,6 +225,9 @@ def make_sampled_train_step(forward_blocks_fn: Callable, strategy: str,
     cache, so every batch of one sampler configuration reuses a single
     compilation; block planning inside the trace is shape-keyed and thus
     identical for all of them. Pad seed rows are masked out of the loss.
+    ``bwd_strategy`` selects the block differentiation path (DESIGN.md
+    §7): 'auto' (default) lets the planner route ∂x through the
+    reverse-table gather VJP, 'scatter' pins the autodiff baseline.
     """
     opt_init, opt_update = adamw(lr, weight_decay=weight_decay)
 
@@ -232,6 +236,7 @@ def make_sampled_train_step(forward_blocks_fn: Callable, strategy: str,
         def loss_fn(p):
             x = block_features(feats_pad, mb.input_ids)
             logits = forward_blocks_fn(p, mb.blocks, x, strategy=strategy,
+                                       bwd_strategy=bwd_strategy,
                                        train=True, rng=rng)
             return cross_entropy_loss(logits, mb.labels, mb.label_mask)
 
@@ -247,6 +252,7 @@ def make_sampled_train_step(forward_blocks_fn: Callable, strategy: str,
 def train_sampled(forward_blocks_fn: Callable, params: Dict, g, feats,
                   labels, train_ids, *, fanouts=(10, 10),
                   batch_size: int = 64, strategy: str = "auto",
+                  bwd_strategy: str = "auto",
                   epochs: int = 5, lr: float = 1e-2,
                   weight_decay: float = 5e-4, seed: int = 0,
                   prefetch_depth: int = 2, drop_last: bool = False,
@@ -264,7 +270,8 @@ def train_sampled(forward_blocks_fn: Callable, params: Dict, g, feats,
     labels = np.asarray(labels)
     train_ids = np.asarray(train_ids)
     opt_init, step = make_sampled_train_step(
-        forward_blocks_fn, strategy, lr=lr, weight_decay=weight_decay)
+        forward_blocks_fn, strategy, bwd_strategy=bwd_strategy,
+        lr=lr, weight_decay=weight_decay)
     opt_state = opt_init(params)
     feats_pad = pad_features(feats)
     if sampler is None:
@@ -288,8 +295,13 @@ def train_sampled(forward_blocks_fn: Callable, params: Dict, g, feats,
                 if mb is None:
                     break
                 t_sample += time.perf_counter() - t0
-                tracker.observe(mb.shape_signature())
-                tracker.assert_bounded()
+                # signature-change work is hoisted behind the tracker:
+                # only a NEW signature (⇒ a fresh compile) re-checks the
+                # bound — unchanged batches skip the per-step accounting
+                # (the sampler likewise reuses one cached label-mask
+                # array per real-seed count instead of re-padding)
+                if tracker.observe(mb.shape_signature()):
+                    tracker.assert_bounded()
                 rng, sub = jax.random.split(rng)
                 t0 = time.perf_counter()
                 params, opt_state, loss = step(params, opt_state, step_i,

@@ -1,0 +1,134 @@
+"""Golden-plan regression: the block planner's chosen forward
+(``block:<op>``) and backward (``block_bwd:<op>``) strategies across the
+Table-2 block shape grid, snapshotted.
+
+The cost model is deterministic, so any diff here is a REAL behavior
+change of the planner — a deliberate cost-model tweak should update the
+snapshot; an accidental one should fail loudly instead of silently
+shifting every sampled train step onto a different kernel.
+
+Regenerate after an intentional planner change with:
+
+    PYTHONPATH=src python -c \
+        "from tests.core.test_planner_golden import print_golden; \
+         print_golden()"
+
+and paste the output over ``GOLDEN``.
+"""
+import jax
+import pytest
+
+from repro.core import parse_op, planner
+
+# (batch, fanout) grid of the Fig. 3 sweep × the block-relevant Table-2
+# configs × the feature widths the apps run (hidden/input/wide).
+SHAPES = [(64, 5), (64, 10), (256, 10), (512, 15)]
+OPS = ["u_copy_add_v", "u_copy_mean_v", "u_mul_e_add_v",
+       "e_copy_add_v", "e_copy_max_v"]
+WIDTHS = [16, 64, 256]
+
+GOLDEN = {
+    "b64_f5_u_copy_add_v_d16": "segment+gather",
+    "b64_f5_u_copy_add_v_d64": "segment+gather",
+    "b64_f5_u_copy_add_v_d256": "ell+gather",
+    "b64_f5_u_copy_mean_v_d16": "segment+gather",
+    "b64_f5_u_copy_mean_v_d64": "segment+gather",
+    "b64_f5_u_copy_mean_v_d256": "ell+gather",
+    "b64_f5_u_mul_e_add_v_d16": "segment+gather",
+    "b64_f5_u_mul_e_add_v_d64": "segment+gather",
+    "b64_f5_u_mul_e_add_v_d256": "ell+gather",
+    "b64_f5_e_copy_add_v_d16": "segment+gather",
+    "b64_f5_e_copy_add_v_d64": "segment+gather",
+    "b64_f5_e_copy_add_v_d256": "ell+gather",
+    "b64_f5_e_copy_max_v_d16": "segment+scatter",
+    "b64_f5_e_copy_max_v_d64": "segment+scatter",
+    "b64_f5_e_copy_max_v_d256": "ell+scatter",
+    "b64_f10_u_copy_add_v_d16": "segment+gather",
+    "b64_f10_u_copy_add_v_d64": "ell+gather",
+    "b64_f10_u_copy_add_v_d256": "ell+gather",
+    "b64_f10_u_copy_mean_v_d16": "segment+gather",
+    "b64_f10_u_copy_mean_v_d64": "ell+gather",
+    "b64_f10_u_copy_mean_v_d256": "ell+gather",
+    "b64_f10_u_mul_e_add_v_d16": "segment+gather",
+    "b64_f10_u_mul_e_add_v_d64": "ell+gather",
+    "b64_f10_u_mul_e_add_v_d256": "ell+gather",
+    "b64_f10_e_copy_add_v_d16": "segment+gather",
+    "b64_f10_e_copy_add_v_d64": "ell+gather",
+    "b64_f10_e_copy_add_v_d256": "ell+gather",
+    "b64_f10_e_copy_max_v_d16": "segment+scatter",
+    "b64_f10_e_copy_max_v_d64": "ell+scatter",
+    "b64_f10_e_copy_max_v_d256": "ell+scatter",
+    "b256_f10_u_copy_add_v_d16": "ell+gather",
+    "b256_f10_u_copy_add_v_d64": "ell+gather",
+    "b256_f10_u_copy_add_v_d256": "ell+gather",
+    "b256_f10_u_copy_mean_v_d16": "ell+gather",
+    "b256_f10_u_copy_mean_v_d64": "ell+gather",
+    "b256_f10_u_copy_mean_v_d256": "ell+gather",
+    "b256_f10_u_mul_e_add_v_d16": "ell+gather",
+    "b256_f10_u_mul_e_add_v_d64": "ell+gather",
+    "b256_f10_u_mul_e_add_v_d256": "ell+gather",
+    "b256_f10_e_copy_add_v_d16": "ell+gather",
+    "b256_f10_e_copy_add_v_d64": "ell+gather",
+    "b256_f10_e_copy_add_v_d256": "ell+gather",
+    "b256_f10_e_copy_max_v_d16": "ell+scatter",
+    "b256_f10_e_copy_max_v_d64": "ell+scatter",
+    "b256_f10_e_copy_max_v_d256": "ell+scatter",
+    "b512_f15_u_copy_add_v_d16": "ell+gather",
+    "b512_f15_u_copy_add_v_d64": "ell+gather",
+    "b512_f15_u_copy_add_v_d256": "ell+gather",
+    "b512_f15_u_copy_mean_v_d16": "ell+gather",
+    "b512_f15_u_copy_mean_v_d64": "ell+gather",
+    "b512_f15_u_copy_mean_v_d256": "ell+gather",
+    "b512_f15_u_mul_e_add_v_d16": "ell+gather",
+    "b512_f15_u_mul_e_add_v_d64": "ell+gather",
+    "b512_f15_u_mul_e_add_v_d256": "ell+gather",
+    "b512_f15_e_copy_add_v_d16": "ell+gather",
+    "b512_f15_e_copy_add_v_d64": "ell+gather",
+    "b512_f15_e_copy_add_v_d256": "ell+gather",
+    "b512_f15_e_copy_max_v_d16": "ell+scatter",
+    "b512_f15_e_copy_max_v_d64": "ell+scatter",
+    "b512_f15_e_copy_max_v_d256": "ell+scatter",
+}
+
+
+def compute_plans() -> dict:
+    """``{grid key: "<fwd>+<bwd>"}`` under the cost-model planner."""
+    prev = planner.get_mode()
+    planner.set_mode("cost")
+    planner.clear_block_plans()
+    try:
+        out = {}
+        for batch, fanout in SHAPES:
+            sig = (batch * (fanout + 1), batch, batch * fanout, fanout)
+            for op in OPS:
+                spec = parse_op(op)
+                for d in WIDTHS:
+                    fwd = planner.plan_block_gspmm(sig, spec, d)
+                    bwd = planner.plan_block_vjp(sig, spec, d)
+                    out[f"b{batch}_f{fanout}_{op}_d{d}"] = f"{fwd}+{bwd}"
+        return out
+    finally:
+        planner.clear_block_plans()     # drop cost-mode pins
+        planner.set_mode(prev)
+
+
+def print_golden() -> None:             # the regen helper
+    print("GOLDEN = {")
+    for k, v in compute_plans().items():
+        print(f'    "{k}": "{v}",')
+    print("}")
+
+
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="golden plans snapshotted for the cpu "
+                           "throughput table")
+def test_block_plans_match_golden():
+    plans = compute_plans()
+    drift = {k: (GOLDEN.get(k), v) for k, v in plans.items()
+             if GOLDEN.get(k) != v}
+    assert plans.keys() == GOLDEN.keys() and not drift, (
+        f"block plan drift on {len(drift)} grid point(s): "
+        f"{dict(list(drift.items())[:8])} — if this cost-model change is "
+        f"intentional, regen the snapshot: PYTHONPATH=src python -c "
+        f'"from tests.core.test_planner_golden import print_golden; '
+        f'print_golden()"')

@@ -12,6 +12,12 @@ transposed-ring custom VJP as the multi-device form) joins the harness
 here so the partitioned subsystem is held to the identical differential
 contract as the other five strategies.
 
+The BLOCK harness (:func:`check_block_vjps`) holds the sampled-minibatch
+path to the same contract: every block strategy (push/segment/ell) ×
+reducer × backward path (the reverse-table gather VJP AND the autodiff
+scatter) must match the segment-path adjoint on outputs and cotangents,
+on blocks that contain pad rows and a fully-padded degree-0 destination.
+
 Graphs come from the shared generator in ``tests.graphgen`` (unique
 edges: parallel duplicate edges tie max/min subgradients, which
 strategies may legitimately break differently). The checks run twice:
@@ -110,42 +116,89 @@ def check_all_strategies(src, dst, n_u, n_v, rng):
                     atol=1e-4, err_msg=f"output: {tag}")
 
 
-def check_block_pull(src, dst, n_u, n_v, rng):
-    """Uniform block pull == segment on the SAME padded block graph —
-    outputs and VJPs — for the configs the apps run on blocks."""
+BLOCK_STRATEGIES = ("push", "segment", "ell")
+BLOCK_TEMPLATES = ("u_copy_{}_v", "u_mul_e_{}_v", "e_copy_{}_v",
+                   "u_add_v_{}_v")
+
+
+def check_block_vjps(src, dst, n_u, n_v, rng):
+    """Every block strategy × reducer × BACKWARD path must match the
+    segment-path adjoint (segment forward + autodiff scatter) on outputs
+    AND cotangents. The sampled block deliberately contains pad rows
+    (destinations under fanout) and one appended degree-0 destination
+    whose row is ALL pad slots."""
     from repro.data import NeighborSampler
 
-    g = from_coo(src, dst, n_src=n_u, n_dst=n_v)
-    fanout = max(1, int(np.asarray(g.in_degrees).max()))
-    batch = min(4, g.n_dst)
+    # extra isolated destination: no in-edges anywhere in the graph
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v + 1)
+    maxdeg = int(np.asarray(g.in_degrees).max())
+    fanout = max(2, maxdeg // 2)
+    batch = min(6, g.n_dst)
     sampler = NeighborSampler(g, fanouts=[fanout], batch_size=batch,
                               seed=0)
-    seeds = rng.permutation(g.n_dst)[:batch]
+    seeds = np.concatenate([[n_v], rng.permutation(n_v)[: batch - 1]])
     mb = sampler.sample(seeds, np.zeros(len(seeds), np.int64))
     bg = mb.blocks[0].bg
-    u = jnp.asarray(rng.normal(size=(bg.g.n_src, 4)).astype(np.float32))
-    e = jnp.asarray(rng.normal(size=(bg.g.n_edges, 1)).astype(np.float32))
-    ct = jnp.asarray(rng.normal(size=(bg.n_dst_real, 4)).astype(np.float32))
+    assert int(np.asarray(bg.real_deg)[0]) == 0   # degree-0 dst in batch
+    assert bg.has_reverse                         # sampler emits the table
 
-    for name, args in [("u_copy_mean_v", {"u": u}),
-                       ("u_mul_e_add_v", {"u": u, "e": e}),
-                       ("u_copy_max_v", {"u": u})]:
-        outs, grads = {}, {}
-        for s in ("ell", "segment"):
-            outs[s] = block_gspmm(bg, name, **args, strategy=s)
-            for k in args:
-                grads[s, k] = jax.grad(
-                    lambda x, k=k, s=s: jnp.sum(block_gspmm(
-                        bg, name, **{**args, k: x}, strategy=s) * ct)
-                )(args[k])
-        np.testing.assert_allclose(np.asarray(outs["ell"]),
-                                   np.asarray(outs["segment"]),
-                                   rtol=1e-4, atol=1e-4, err_msg=name)
-        for k in args:
-            np.testing.assert_allclose(
-                np.asarray(grads["ell", k]),
-                np.asarray(grads["segment", k]),
-                rtol=1e-4, atol=1e-4, err_msg=f"d/d{k}: {name}")
+    d = 4
+    operands = {
+        "u": jnp.asarray(rng.normal(size=(bg.g.n_src, d))
+                         .astype(np.float32)),
+        "v": jnp.asarray(rng.normal(size=(bg.g.n_dst, d))
+                         .astype(np.float32)),
+        "e": jnp.asarray(rng.uniform(0.5, 1.5, size=(bg.g.n_edges, 1))
+                         .astype(np.float32)),
+    }
+
+    def value_and_grads(name, args, ct, strategy, bwd):
+        def f(a):
+            return jnp.sum(block_gspmm(bg, name, **a, strategy=strategy,
+                                       bwd_strategy=bwd) * ct)
+
+        val = block_gspmm(bg, name, **args, strategy=strategy,
+                          bwd_strategy=bwd)
+        return val, jax.grad(f)(args)
+
+    for template in BLOCK_TEMPLATES:
+        for red in REDUCERS:
+            name = template.format(red)
+            spec = parse_op(name)
+            keys = [spec.lhs] + ([spec.rhs] if spec.rhs else [])
+            args = {k: operands[k] for k in keys}
+            out_w = 1 if spec.lhs == "e" and spec.rhs is None else d
+            ct = jnp.asarray(rng.normal(size=(bg.n_dst_real, out_w))
+                             .astype(np.float32))
+            # prod: no scatter/segment-prod transpose in jax —
+            # forward-only for every strategy (same caveat as full-graph)
+            diff = red != "mul"
+            # the gather VJP only serves linear reducers; max/min stay
+            # on autodiff by plan (block_bwd_supports)
+            bwds = (("gather", "scatter")
+                    if diff and red in ("add", "mean") else ("scatter",))
+            if diff:
+                ref, ref_g = value_and_grads(name, args, ct, "segment",
+                                             "scatter")
+            else:
+                ref = block_gspmm(bg, name, **args, strategy="segment")
+            for s in BLOCK_STRATEGIES:
+                for bwd in bwds:
+                    tag = f"{name} via {s}+{bwd}"
+                    if diff:
+                        out, out_g = value_and_grads(name, args, ct, s,
+                                                     bwd)
+                        for k in ref_g:
+                            np.testing.assert_allclose(
+                                np.asarray(out_g[k]),
+                                np.asarray(ref_g[k]),
+                                rtol=1e-4, atol=1e-4,
+                                err_msg=f"d/d{k}: {tag}")
+                    else:
+                        out = block_gspmm(bg, name, **args, strategy=s)
+                    np.testing.assert_allclose(
+                        np.asarray(out), np.asarray(ref), rtol=1e-4,
+                        atol=1e-4, err_msg=f"output: {tag}")
 
 
 def check_ring_strategy(src, dst, n_u, n_v, rng):
@@ -224,10 +277,10 @@ def test_outputs_and_vjps_agree_seeded(seed):
 
 
 @pytest.mark.parametrize("seed", [3, 4])
-def test_block_pull_matches_segment_seeded(seed):
+def test_block_vjps_match_segment_adjoint_seeded(seed):
     rng = np.random.default_rng(seed)
     g, src, dst = random_graph(rng, 20, 15, 60, unique=True)
-    check_block_pull(src, dst, 20, 15, rng)
+    check_block_vjps(src, dst, 20, 15, rng)
 
 
 @pytest.mark.parametrize("seed", [5, 6])
@@ -247,8 +300,8 @@ if HAS_HYPOTHESIS:
 
     @settings(max_examples=4, deadline=None)
     @given(graphs(max_n=20, max_e=60, unique=True))
-    def test_block_pull_matches_segment_hypothesis(data):
-        check_block_pull(*data)
+    def test_block_vjps_match_segment_adjoint_hypothesis(data):
+        check_block_vjps(*data)
 
     @settings(max_examples=4, deadline=None)
     @given(graphs(max_n=20, max_e=60, unique=True))

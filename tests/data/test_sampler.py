@@ -182,6 +182,106 @@ def test_short_final_batch_padded_and_masked(tiny):
     assert tail.shape_signature() == mbs[0].shape_signature()
 
 
+# ------------------------------------------------------------------ #
+# reverse table (the gather backward's lookup structure, DESIGN.md §7)
+# ------------------------------------------------------------------ #
+def _forward_edge_set(bg):
+    """{(src_slot, dst_row, caller_eid)} of the REAL edges, from the
+    forward neighbor table."""
+    nbr = np.asarray(bg.nbr)
+    eid = np.asarray(bg.nbr_eid)
+    mask = np.asarray(bg.nbr_mask)
+    jj, kk = np.nonzero(mask)
+    return set(zip(nbr[jj, kk].tolist(), jj.tolist(),
+                   eid[jj, kk].tolist()))
+
+
+def _reverse_edge_set(bg):
+    """Same triple set rebuilt from the reverse table (real edges are
+    the ones whose destination is a real row, not the dummy)."""
+    rs = np.asarray(bg.rev_src)
+    rd = np.asarray(bg.rev_dst)
+    re = np.asarray(bg.rev_eid)
+    real = rd < bg.n_dst_real
+    return set(zip(rs[real].tolist(), rd[real].tolist(),
+                   re[real].tolist()))
+
+
+def test_reverse_table_round_trip():
+    """forward table ↦ reverse table ↦ forward: the reverse table is a
+    src-sorted permutation of exactly the same edges, every layer."""
+    rng = np.random.default_rng(9)
+    g, src, dst = random_graph(rng, 40, 40, 200)
+    sampler = NeighborSampler(g, fanouts=[3, 4], batch_size=8, seed=2)
+    mb = sampler.sample(rng.permutation(g.n_dst)[:8],
+                        np.zeros(8, np.int64))
+    for blk in mb.blocks:
+        bg = blk.bg
+        assert bg.has_reverse
+        rev_src = np.asarray(bg.rev_src)
+        rev_eid = np.asarray(bg.rev_eid)
+        # a permutation of ALL edge slots, sorted by source slot
+        assert sorted(rev_eid.tolist()) == list(range(bg.g.n_edges))
+        assert (np.diff(rev_src) >= 0).all()
+        # real-edge triples agree exactly with the forward table
+        assert _reverse_edge_set(bg) == _forward_edge_set(bg)
+        # pad edges: dummy source slot AND dummy destination row only
+        rd = np.asarray(bg.rev_dst)
+        pad = rd >= bg.n_dst_real
+        assert (rev_src[pad] == bg.g.n_src - 1).all()
+        assert (rd[pad] == bg.n_dst_real).all()
+
+
+def test_reverse_table_deterministic_per_seed():
+    rng = np.random.default_rng(13)
+    g, src, dst = random_graph(rng, 30, 30, 180)
+    ids = np.arange(g.n_dst)
+    labels = np.zeros(g.n_dst, np.int64)
+    a = _batches(NeighborSampler(g, [4], 8, seed=21), ids, labels)
+    b = _batches(NeighborSampler(g, [4], 8, seed=21), ids, labels)
+    for mb_a, mb_b in zip(a, b):
+        for blk_a, blk_b in zip(mb_a.blocks, mb_b.blocks):
+            for fa, fb in [(blk_a.bg.rev_src, blk_b.bg.rev_src),
+                           (blk_a.bg.rev_dst, blk_b.bg.rev_dst),
+                           (blk_a.bg.rev_eid, blk_b.bg.rev_eid)]:
+                np.testing.assert_array_equal(np.asarray(fa),
+                                              np.asarray(fb))
+
+
+def test_reverse_backward_pad_poison_invariance():
+    """Poisoning every PAD source slot's features AND every pad edge's
+    weight must not change any gradient of the gather backward: pad
+    edges pull the dummy destination's zero cotangent row."""
+    rng = np.random.default_rng(3)
+    g, src, dst = random_graph(rng, 40, 40, 160)
+    sampler = NeighborSampler(g, fanouts=[3], batch_size=8, seed=1)
+    mb = sampler.sample(rng.permutation(g.n_dst)[:8], np.zeros(8, np.int64))
+    blk = mb.blocks[0]
+    bg = blk.bg
+    n_real = int(np.asarray(bg.real_deg).sum())
+    u = jnp.asarray(rng.normal(size=(bg.g.n_src, 6)).astype(np.float32))
+    e = jnp.asarray(rng.normal(size=(bg.g.n_edges, 1)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(bg.n_dst_real, 6)).astype(np.float32))
+
+    def grads(u, e):
+        def f(u, e):
+            return jnp.sum(block_gspmm(bg, "u_mul_e_add_v", u=u, e=e,
+                                       bwd_strategy="gather") * ct)
+        return jax.grad(f, argnums=(0, 1))(u, e)
+
+    pu = np.asarray(u).copy()
+    pu[np.asarray(blk.src_ids) < 0] = 1e9          # poison pad src slots
+    pe = np.asarray(e).copy()
+    pe[n_real:] = -1e9                             # poison pad edges
+    du, de = grads(u, e)
+    du_p, de_p = grads(jnp.asarray(pu), jnp.asarray(pe))
+    np.testing.assert_array_equal(np.asarray(du), np.asarray(du_p))
+    # real edges' ∂e unchanged; pad edges' ∂e is exactly zero both ways
+    np.testing.assert_array_equal(np.asarray(de)[:n_real],
+                                  np.asarray(de_p)[:n_real])
+    np.testing.assert_array_equal(np.asarray(de_p)[n_real:], 0.0)
+
+
 @pytest.mark.parametrize("mod", [sage, gcn, gat],
                          ids=["sage", "gcn", "gat"])
 def test_sampled_equals_full_when_fanout_covers_degree(tiny, mod):
