@@ -34,9 +34,10 @@ def _epoch_time(mod, params, bundle, x, labels, mask, strategy):
         iters=3, warmup=1)
 
 
-def _bench_node_app(name, mod, dataset="pubmed-like", hidden=16, **init_kw):
+def _bench_node_app(name, mod, dataset="pubmed-like", hidden=16,
+                    krel=None, **init_kw):
     g, feats, labels, tm, vm, nc = make_node_dataset(dataset)
-    bundle = make_bundle(g)
+    bundle = make_bundle(g, krel=krel)
     params = mod.init(jax.random.PRNGKey(0), feats.shape[1], hidden, nc,
                       **init_kw)
     x, y, m = jnp.asarray(feats), jnp.asarray(labels), jnp.asarray(tm)
@@ -51,7 +52,9 @@ def _bench_node_app(name, mod, dataset="pubmed-like", hidden=16, **init_kw):
 
 def bench_gcmc():
     u, i, r = bipartite_ratings(2000, 1500, 60_000, 5)
-    fwd, bwd = gcmc.build_level_graphs(u, i, r, 2000, 1500, 5)
+    fwd, bwd = gcmc.build_level_relgraphs(u, i, r, 2000, 1500, 5)
+    fwd.cache.ell()             # pinned 'ell' runs blocked pull in-trace
+    bwd.cache.ell()
     g_all = from_coo(u, i, n_src=2000, n_dst=1500)
     params = gcmc.init(jax.random.PRNGKey(0), 64, 64, 64, 32, 5)
     rng = np.random.default_rng(0)
@@ -78,7 +81,8 @@ def bench_gcmc():
 def bench_rgcn():
     n, n_rel = 5000, 8
     rels = relational_graph(n, n_rel, 25_000)
-    rgs = [from_coo(s, d, n_src=n, n_dst=n) for s, d in rels]
+    rg = rgcn.build_relgraph(rels, n)
+    rg.cache.ell()              # pinned 'ell' runs blocked pull in-trace
     params = rgcn.init(jax.random.PRNGKey(0), 32, 32, 4, n_rel=n_rel)
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=(n, 32)).astype(np.float32))
@@ -88,7 +92,7 @@ def bench_rgcn():
         @jax.jit
         def f():
             return cross_entropy_loss(
-                rgcn.forward(params, rgs, x, strategy=strategy), labels)
+                rgcn.forward(params, rg, x, strategy=strategy), labels)
         return f
 
     t_base = time_fn(loss(BASELINE), iters=3, warmup=1)
@@ -103,13 +107,16 @@ def bench_lgnn():
     src, dst, comm = sbm_graph(800, 2, 0.06, 0.003)
     g = from_coo(src, dst, n_src=800, n_dst=800)
     lg = lgnn.build_line_graph(g)
+    rg = lgnn.build_relgraph(g, lg)
+    rg.cache.ell()              # pinned 'ell' runs blocked pull in-trace
     params = lgnn.init(jax.random.PRNGKey(0), 800, 16, 16, 2)
     labels = jnp.asarray(comm)
 
     def loss(strategy):
         @jax.jit
         def f():
-            logits, _ = lgnn.forward(params, g, lg, strategy=strategy)
+            logits, _ = lgnn.forward(params, g, lg, rg=rg,
+                                     strategy=strategy)
             return cross_entropy_loss(logits, labels)
         return f
 
@@ -129,7 +136,8 @@ def main(strategy: str = None):
     speedups["gcn"] = _bench_node_app("gcn", gcn)
     speedups["graphsage"] = _bench_node_app("graphsage", sage)
     speedups["gat"] = _bench_node_app("gat", gat, n_heads=4)
-    speedups["monet"] = _bench_node_app("monet", monet, n_kernels=2)
+    speedups["monet"] = _bench_node_app("monet", monet, krel=2,
+                                        n_kernels=2)
     speedups["gcmc"] = bench_gcmc()
     speedups["rgcn"] = bench_rgcn()
     speedups["lgnn"] = bench_lgnn()

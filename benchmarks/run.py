@@ -8,6 +8,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   spmm  — CR strategy sweep
   partitioned — multi-device ring training swept over shard counts
                 (2/4/8 host-emulated shards, GCN/SAGE/GAT + delayed halo)
+  hetero — relation-fused aggregation: BGS-like 50–100-relation RGCN
+           shapes + GCMC rating-level sweep, fused vs per-relation
+           loop, forward and backward
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One section: ``PYTHONPATH=src python -m benchmarks.run --only fig2``
@@ -28,7 +31,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "br", "prims", "spmm",
-                             "partitioned"])
+                             "partitioned", "hetero"])
     ap.add_argument("--strategy", default=None,
                     choices=["auto", "push", "segment", "ell", "onehot",
                              "pallas"],
@@ -47,6 +50,7 @@ def main() -> None:
         "prims": "benchmarks.framework_prims",
         "spmm": "benchmarks.kernels_bench",
         "partitioned": "benchmarks.fig_partitioned",
+        "hetero": "benchmarks.fig_hetero",
     }
     import importlib
 

@@ -14,10 +14,14 @@ from .edge_softmax import (edge_softmax, edge_softmax_fused,
                            block_edge_softmax)
 from .blocks import (BlockGraph, block_gspmm, block_supports,
                      build_reverse_table, attach_reverse)
+from .hetero import (RelGraph, from_typed, from_rels, hetero_gspmm,
+                     hetero_block_gspmm)
 
 __all__ = [
     "BlockGraph", "block_gspmm", "block_supports", "block_edge_softmax",
     "build_reverse_table", "attach_reverse",
+    "RelGraph", "from_typed", "from_rels", "hetero_gspmm",
+    "hetero_block_gspmm",
     "Graph", "from_coo", "reverse", "add_self_loops",
     "ELLPack", "ELLClass", "TilePack", "build_ell",
     "build_ell_uniform", "build_tiles",

@@ -50,8 +50,9 @@ __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "plan_log", "clear_plan_log", "last_plan", "pack_build_totals",
            "set_mode", "get_mode", "STRATEGIES", "FALLBACK_CHAIN",
            "block_stats", "plan_block_gspmm", "clear_block_plans",
-           "reverse_block_stats", "plan_block_vjp", "block_bwd_supports",
+           "plan_block_vjp", "block_bwd_supports",
            "BLOCK_BWD_STRATEGIES",
+           "HETERO_STRATEGIES", "plan_hetero", "clear_hetero_plans",
            "use_ring", "active_ring", "RingContext"]
 
 STRATEGIES = ("push", "segment", "ell", "onehot", "pallas", "ring")
@@ -160,9 +161,11 @@ class PlanCache:
                  tiles: Optional[TilePack] = None,
                  stats: Optional[GraphStats] = None,
                  graph: Optional[Graph] = None,
-                 ell_cap: int = _DEFAULT_ELL_CAP):
+                 ell_cap: int = _DEFAULT_ELL_CAP,
+                 krel: Optional[Any] = None):
         self._ell = ell
         self._tiles = tiles
+        self._krel = krel       # K-relation RelGraph (hetero, DESIGN §8)
         self.stats = stats
         self.ell_cap = ell_cap
         self._gref = weakref.ref(graph) if graph is not None else None
@@ -175,12 +178,14 @@ class PlanCache:
 
     # -- pytree protocol ------------------------------------------------
     def tree_flatten(self):
-        return (self._ell, self._tiles), (self.stats, self.ell_cap)
+        return ((self._ell, self._tiles, self._krel),
+                (self.stats, self.ell_cap))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        ell, tiles = children
-        return cls(ell=ell, tiles=tiles, stats=aux[0], ell_cap=aux[1])
+        ell, tiles, krel = children
+        return cls(ell=ell, tiles=tiles, krel=krel, stats=aux[0],
+                   ell_cap=aux[1])
 
     # -- pack access -----------------------------------------------------
     def _graph(self) -> Optional[Graph]:
@@ -281,6 +286,26 @@ class PlanCache:
 
     def peek_partition(self, n_shards: int, mode: str = "contiguous"):
         return self._partitions.get((int(n_shards), mode))
+
+    def krel(self, n_rel: int):
+        """Memoized K-relation :class:`~repro.core.hetero.RelGraph` of
+        this graph: the edge set replicated once per relation (MoNet's
+        per-kernel aggregation — DESIGN.md §8). A pytree child, so a
+        bundle-carried cache serves the fused path inside jitted train
+        steps; host-side build only, like every other pack."""
+        if self._krel is not None and self._krel.n_rel == int(n_rel):
+            return self._krel
+        g = self._graph()
+        if g is None or not jax.core.trace_state_clean():
+            # never build under an active trace — np→jnp conversions
+            # there leak trace-bound arrays into the process-wide cache
+            return None
+        from .hetero import caller_coo, from_rels  # local: avoids cycle
+        src, dst = caller_coo(g)
+        self._krel = from_rels([(src, dst)] * int(n_rel),
+                               n_src=g.n_src, n_dst=g.n_dst)
+        _PACK_BUILDS["krel"] += 1
+        return self._krel
 
     # -- planning helpers -------------------------------------------------
     def prefers_ell(self, d: int) -> bool:
@@ -781,22 +806,18 @@ BLOCK_BWD_STRATEGIES = ("gather", "scatter")
 
 _BLOCK_BWD_PLANS: Dict[Tuple, str] = {}
 
-
-def reverse_block_stats(n_src: int, n_dst_real: int, n_edges: int,
-                        fanout: int) -> GraphStats:
-    """Nominal :class:`GraphStats` of a block's REVERSE view.
-
-    The reverse table has ``n_src`` rows and the same ``n_edges`` edges;
-    reverse degrees are data-dependent (hub nodes are sampled by many
-    destinations), so only the edge count is meaningful — which is all
-    the sorted-segment cost term uses.
-    """
-    avg = n_edges / max(n_src, 1)
-    return GraphStats(
-        n_src=int(n_dst_real), n_dst=int(n_src), n_edges=int(n_edges),
-        avg_in_deg=float(avg), max_in_deg=int(n_edges),
-        skew=float(n_edges / max(avg, 1e-9)),
-        ell_padded_slots=int(n_edges), ell_n_classes=1, pad_ratio=1.0)
+# Collision/row-density term of the backward cost rows (ROADMAP PR-4
+# follow-up). A scatter-add only serializes where updates collide; on
+# small blocks the ∂x working set sits in cache and gather/scatter
+# measure near parity (slightly pro-scatter), so the push-rate penalty
+# is scaled by the block's row density AND by how much of the
+# full-serialization edge-slot scale it reaches — below ~100k edge
+# slots the tax vanishes and scatter's lack of reorder work wins. The
+# gather path pays its reorder tax (reverse-table gather + permuted
+# cotangent reads) unconditionally. Autotune mode still measures the
+# truth per signature.
+_BWD_COLLISION_SLOTS = 1_000_000   # full-serialization edge-slot scale
+_BWD_GATHER_REORDER = 0.45         # gather's extra work vs one segment pass
 
 
 def block_bwd_supports(strategy: str, spec) -> bool:
@@ -845,13 +866,17 @@ def plan_block_vjp(signature: Tuple[int, int, int, int], spec, d: int,
                 chosen = min(BLOCK_BWD_STRATEGIES,
                              key=lambda s: _measure(runner, s))
             else:
-                stats = block_stats(*signature)
-                rev = reverse_block_stats(*signature)
+                n_src, _, slots, _ = signature
+                tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
+                rho = min(1.0, slots / max(n_src, 1))
+                size = min(1.0, slots / _BWD_COLLISION_SLOTS)
+                scatter_tp = (tp["segment"]
+                              + (tp["push"] - tp["segment"]) * rho * size)
                 cost = {
-                    "gather": estimate_cost("segment", rev, d,
-                                            backend=backend),
-                    "scatter": estimate_cost("push", stats, d,
-                                             backend=backend),
+                    "gather": (tp["segment"]
+                               * (1.0 + _BWD_GATHER_REORDER)
+                               * slots * max(int(d), 1)),
+                    "scatter": scatter_tp * slots * max(int(d), 1),
                 }
                 chosen = min(BLOCK_BWD_STRATEGIES, key=cost.__getitem__)
                 # same rule as the forward block plans: a cost-model
@@ -869,5 +894,103 @@ def plan_block_vjp(signature: Tuple[int, int, int, int], spec, d: int,
             _warn_fallback(log_name, requested, chosen)
         if memoize:
             _BLOCK_BWD_PLANS[key] = chosen
+    _record(log_name, requested, chosen)
+    return chosen
+
+
+# --------------------------------------------------------------------- #
+# heterogeneous (relation-fused) planning — DESIGN.md §8
+# --------------------------------------------------------------------- #
+# A relational aggregation Σ_r CR(g_r) can run as R sequential calls
+# ('loop' — the pre-refactor baseline, one gather + one reduce per
+# relation), as ONE fused stream over the relation-stacked graph
+# ('fused' — a single sorted segment reduce), or as the fused messages
+# pushed through the fused graph's blocked pull ('ell'). The trade is
+# per-relation dispatch overhead (loop pays R of them) against the
+# fused paths' relation-indexing traffic and, for ell, the padding tax
+# of the fused degree histogram. Decisions are memoized per static
+# RelGraph signature × op × width × backend — trace-safe, like block
+# plans — and logged as ``hetero:<op>``.
+HETERO_STRATEGIES = ("fused", "loop", "ell")
+
+_HETERO_PLANS: Dict[Tuple, str] = {}
+
+_HETERO_REL_OVERHEAD = 2e4   # per-relation dispatch + reduce setup (elops)
+_HETERO_FUSED_TAX = 0.1      # relation-id/W-indexing traffic multiplier
+_HETERO_FIXED = 2e4          # one-time fused-stream setup
+
+_HETERO_FALLBACK = ("fused", "loop")
+
+
+def clear_hetero_plans() -> None:
+    _HETERO_PLANS.clear()
+
+
+def plan_hetero(signature: Tuple[int, int, int, int], op_name: str,
+                d: int, requested: str = "auto",
+                stats: Optional[GraphStats] = None, ell_ok: bool = True,
+                runner: Optional[Callable[[str], Any]] = None) -> str:
+    """Pick the execution strategy for one relational aggregation.
+
+    ``signature`` is :attr:`RelGraph.signature` — static sizes only
+    (n_src, n_dst, n_edges, n_rel). ``stats`` are the FUSED graph's
+    :class:`GraphStats` (static aux on the RelGraph's PlanCache, so
+    they survive ``jit``); they feed the ell row's padding estimate —
+    without them (or with ``ell_ok=False``, e.g. in-trace with no
+    prebuilt pack) ell never qualifies. Plain gspmm strategy names pin
+    the per-relation loop with that inner reduce (``'push'`` is the
+    fig2 baseline). In autotune mode an eager ``runner`` measures the
+    candidates once per signature, exactly like block planning.
+    """
+    backend = jax.default_backend()
+    key = (signature, op_name, int(d), requested, backend)
+    log_name = f"hetero:{op_name}"
+    chosen = _HETERO_PLANS.get(key)
+    if chosen is None:
+        n_src, n_dst, n_edges, n_rel = signature
+        memoize = True
+
+        def candidates():
+            cand = ["fused", "loop"]
+            if ell_ok and stats is not None:
+                cand.insert(1, "ell")
+            return cand
+
+        if requested == "auto":
+            cand = candidates()
+            if _MODE == "autotune" and runner is not None:
+                chosen = min(cand, key=lambda s: _measure(runner, s))
+            else:
+                tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
+                dd = max(int(d), 1)
+                cost = {
+                    "loop": (tp["segment"] * n_edges * dd
+                             + n_rel * _HETERO_REL_OVERHEAD),
+                    "fused": (tp["segment"] * (1 + _HETERO_FUSED_TAX)
+                              * n_edges * dd + _HETERO_FIXED),
+                }
+                if "ell" in cand:
+                    cost["ell"] = ((1 + _HETERO_FUSED_TAX)
+                                   * estimate_cost("ell", stats, dd,
+                                                   backend=backend))
+                chosen = min(cand, key=cost.__getitem__)
+                memoize = _MODE != "autotune"
+        elif requested in HETERO_STRATEGIES:
+            if requested == "ell" and not ell_ok:
+                chosen = "fused"
+                _warn_fallback(log_name, requested, chosen)
+            else:
+                chosen = requested
+        elif requested in STRATEGIES:
+            # plain gspmm pin: the per-relation loop with that inner
+            # reduce — 'push' is the scatter baseline, everything else
+            # runs the loop's segment form
+            chosen = "push" if requested == "push" else "loop"
+        else:
+            raise ValueError(
+                f"unknown hetero strategy {requested!r}; expected one "
+                f"of {HETERO_STRATEGIES + STRATEGIES + ('auto',)}")
+        if memoize:
+            _HETERO_PLANS[key] = chosen
     _record(log_name, requested, chosen)
     return chosen

@@ -57,17 +57,27 @@ class SampledBlock:
     ``src_ids`` the global node id per source slot (-1 = pad);
     ``gcn_norm`` per-edge 1/√(deg_out(u)·deg_in(v)) from the FULL
     graph's degrees, caller edge order, 0 on pad edges.
+
+    Relational sampling (``NeighborSampler(..., edge_rel=...)``,
+    DESIGN.md §8.5) additionally tags every sampled edge: ``rel`` is
+    the relation id (0 on pad edges — harmless, pads point at the
+    dummy destination row) and ``rel_norm`` the per-(destination,
+    relation) sampled-mean weight 1/|sampled N_r(v)| (0 on pads), both
+    in caller edge order — what ``hetero_block_gspmm`` consumes.
     """
     bg: BlockGraph
     src_ids: jnp.ndarray        # (n_src_pad,) int32 global ids, -1 = pad
     gcn_norm: jnp.ndarray       # (n_edges_pad,) float32, 0 on pads
+    rel: Optional[jnp.ndarray] = None       # (n_edges_pad,) int32
+    rel_norm: Optional[jnp.ndarray] = None  # (n_edges_pad,) float32
 
     @property
     def graph(self) -> Graph:   # back-compat view
         return self.bg.g
 
     def tree_flatten(self):
-        return ((self.bg, self.src_ids, self.gcn_norm), ())
+        return ((self.bg, self.src_ids, self.gcn_norm, self.rel,
+                 self.rel_norm), ())
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -111,9 +121,19 @@ class NeighborSampler:
     """
 
     def __init__(self, g: Graph, fanouts: Sequence[int], batch_size: int,
-                 seed: int = 0):
+                 seed: int = 0, edge_rel=None):
         self.indptr = np.asarray(g.indptr_dst, np.int64)
         self.src = np.asarray(g.src, np.int64)
+        # relational sampling: per-edge relation ids (caller order) →
+        # canonical order, so a sampled edge slot looks its type up
+        # directly; blocks then carry rel + per-(dst, rel) mean norms
+        if edge_rel is not None:
+            edge_rel = np.asarray(edge_rel, np.int64)
+            self.rel = edge_rel[np.asarray(g.eid)]
+            self.n_rel = int(edge_rel.max()) + 1 if edge_rel.size else 0
+        else:
+            self.rel = None
+            self.n_rel = 0
         self.fanouts = list(fanouts)
         self.batch_size = batch_size
         self.seed = seed
@@ -278,9 +298,24 @@ class NeighborSampler:
                             rev_src=jnp.asarray(rev_src),
                             rev_dst=jnp.asarray(rev_dst),
                             rev_eid=jnp.asarray(rev_eid))
+            rel_blk = rel_norm = None
+            if self.rel is not None:
+                # relation id per sampled edge + the per-(dst, relation)
+                # sampled-mean weight 1/|sampled N_r(v)|; pad edges get
+                # rel 0 / weight 0 (they point at the dummy row anyway)
+                rel_e = self.rel[eslot[jj, kk]]
+                key = jj * self.n_rel + rel_e
+                cnt = np.bincount(key,
+                                  minlength=n_dst * max(self.n_rel, 1))
+                rel_blk = jnp.asarray(np.concatenate(
+                    [rel_e, np.zeros(pad, np.int64)]), jnp.int32)
+                rel_norm = jnp.asarray(np.concatenate(
+                    [1.0 / cnt[key],
+                     np.zeros(pad)]).astype(np.float32))
             blocks.append(SampledBlock(
                 bg=bg, src_ids=jnp.asarray(src_ids, jnp.int32),
-                gcn_norm=jnp.asarray(norms)))
+                gcn_norm=jnp.asarray(norms), rel=rel_blk,
+                rel_norm=rel_norm))
             frontier = src_ids
         blocks.reverse()
         return MiniBatch(blocks=tuple(blocks),

@@ -85,10 +85,13 @@ def edge_norms(g: Graph) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
-                ell_width: int = 64, training: bool = True) -> GraphBundle:
+                ell_width: int = 64, training: bool = True,
+                krel: Optional[int] = None) -> GraphBundle:
     """Assemble a bundle; packs are pulled from (and memoized in) the
     graph's PlanCache, so they are built at most once per process even
-    across bundles and direct ``gspmm`` calls."""
+    across bundles and direct ``gspmm`` calls. ``krel=K`` prebuilds the
+    K-relation RelGraph (MoNet's fused per-kernel aggregation) so it
+    crosses jit with the cache."""
     w_caller, m_caller = edge_norms(g)
     cache = get_plan_cache(g)
     cache.set_ell_cap(ell_width)
@@ -96,6 +99,8 @@ def make_bundle(g: Graph, *, ell: bool = True, tiles: bool = False,
         cache.ell()            # force-build so it crosses jit boundaries
     if tiles:
         cache.tiles()
+    if krel is not None:
+        cache.krel(krel)
     tg = make_training_graph(g, ell_width) if training else None
     return GraphBundle(
         g=g,

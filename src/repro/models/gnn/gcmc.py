@@ -1,9 +1,14 @@
 """GC-MC (graph conv matrix completion) — configs: u_copy_add_v and
 u_dot_v_add_e (paper Table 2, row 5).
 
-Bipartite user→item rating graph with R levels. Encoder: per level r a CR
-over the level subgraph (both directions); decoder: bilinear score per
-observed edge via the ``u_dot_v_add_e`` BR.
+Bipartite user→item rating graph with R levels. Encoder: the per-level
+CRs (both directions) collapse onto TWO fused
+:class:`~repro.core.hetero.RelGraph` aggregations — one user→item, one
+item→user — with the rating levels as relations and the per-level
+projections as the relation-indexed weight stack; decoder: bilinear
+score per observed edge via the ``u_dot_v_add_e`` BR.
+:func:`encode_loop` keeps the pre-refactor per-level loop as baseline
+and differential reference.
 """
 from __future__ import annotations
 
@@ -11,21 +16,40 @@ from typing import Dict, List, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core.binary_reduce import gspmm
 from ...core.graph import Graph, from_coo, reverse
+from ...core.hetero import RelGraph, from_rels, hetero_gspmm
 from ...substrate.nn import glorot, linear_init, linear_apply
 from .common import GraphBundle
 
 
+def _level_edges(u, i, r, levels: int):
+    """Per rating level ``(src, dst)`` pairs, caller edge order."""
+    u = np.asarray(u)
+    i = np.asarray(i)
+    r = np.asarray(r)
+    return [(u[r == lv], i[r == lv]) for lv in range(levels)]
+
+
+def build_level_relgraphs(u, i, r, n_users: int, n_items: int,
+                          levels: int) -> Tuple[RelGraph, RelGraph]:
+    """The encoder's two fused structures: rating levels as relations,
+    user→item and item→user directions as separate RelGraphs."""
+    edges = _level_edges(u, i, r, levels)
+    fwd = from_rels(edges, n_src=n_users, n_dst=n_items)
+    bwd = from_rels([(d, s) for s, d in edges],
+                    n_src=n_items, n_dst=n_users)
+    return fwd, bwd
+
+
 def build_level_graphs(u, i, r, n_users: int, n_items: int, levels: int):
-    """Per rating level: user→item Graph and its reverse."""
-    import numpy as np
+    """Per rating level: user→item Graph and its reverse (the
+    pre-refactor per-level structures — kept for :func:`encode_loop`)."""
     fwd, bwd = [], []
-    for lv in range(levels):
-        m = np.asarray(r) == lv
-        g = from_coo(np.asarray(u)[m], np.asarray(i)[m],
-                     n_src=n_users, n_dst=n_items)
+    for src, dst in _level_edges(u, i, r, levels):
+        g = from_coo(src, dst, n_src=n_users, n_dst=n_items)
         fwd.append(g)
         bwd.append(reverse(g))
     return fwd, bwd
@@ -45,9 +69,26 @@ def init(key, d_user: int, d_item: int, d_hidden: int, d_out: int,
     }
 
 
-def encode(params: Dict, fwd: Sequence[Graph], bwd: Sequence[Graph],
+def encode(params: Dict, fwd: RelGraph, bwd: RelGraph,
            x_user: jnp.ndarray, x_item: jnp.ndarray, *,
            strategy: str = "auto") -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused encoder: both directions are ONE ``hetero_gspmm`` each —
+    the level loop is gone; the per-level projections ride as the
+    relation-indexed weight stack."""
+    h_item = hetero_gspmm(fwd, x_user, w=jnp.stack(params["w_user"]),
+                          reduce="mean", strategy=strategy)
+    h_user = hetero_gspmm(bwd, x_item, w=jnp.stack(params["w_item"]),
+                          reduce="mean", strategy=strategy)
+    h_user = linear_apply(params["fc_user"], jax.nn.relu(h_user))
+    h_item = linear_apply(params["fc_item"], jax.nn.relu(h_item))
+    return h_user, h_item
+
+
+def encode_loop(params: Dict, fwd: Sequence[Graph], bwd: Sequence[Graph],
+                x_user: jnp.ndarray, x_item: jnp.ndarray, *,
+                strategy: str = "auto"
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pre-refactor reference: one CR per level per direction."""
     levels = len(fwd)
     h_item = 0.0
     h_user = 0.0
@@ -76,6 +117,13 @@ def decode(params: Dict, g_all: Graph, h_user: jnp.ndarray,
 
 def forward(params: Dict, graphs, x_user, x_item, *,
             strategy: str = "auto") -> jnp.ndarray:
+    """``graphs = (fwd, bwd, g_all)``: RelGraphs run the fused encoder;
+    per-level Graph lists delegate to the pre-refactor loop."""
     fwd, bwd, g_all = graphs
-    hu, hi = encode(params, fwd, bwd, x_user, x_item, strategy=strategy)
+    if isinstance(fwd, RelGraph):
+        hu, hi = encode(params, fwd, bwd, x_user, x_item,
+                        strategy=strategy)
+    else:
+        hu, hi = encode_loop(params, fwd, bwd, x_user, x_item,
+                             strategy=strategy)
     return decode(params, g_all, hu, hi)

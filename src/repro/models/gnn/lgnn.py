@@ -9,10 +9,18 @@ Layer (simplified but structurally faithful to Chen et al.):
   x' = BN(ρ( x θ1 + (deg·x) θ2 + CR_G(x) θ3 + (P y) θ4 ))
   y' = BN(ρ( y φ1 + (deg_L·y) φ2 + CR_L(y) φ3 ))
 where P maps line-graph (edge) features back to nodes: e_copy_add_v.
+
+The three aggregation streams (CR_G, P, CR_L) ride the relation-fused
+machinery: :func:`build_relgraph` stacks them as a 3-relation
+:class:`~repro.core.hetero.RelGraph` over the disjoint node∪line-node
+space, and :func:`forward` runs them as ONE fused ``hetero_gspmm`` per
+layer (θ3/θ4/φ3 ride as the relation-indexed weight stack — linearity
+makes agg(x)@θ ≡ agg(x@θ)). Without a prebuilt RelGraph the
+pre-refactor three-call path runs (also the differential reference).
 """
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -20,6 +28,7 @@ import numpy as np
 
 from ...core.binary_reduce import gspmm
 from ...core.graph import Graph, from_coo
+from ...core.hetero import RelGraph, caller_coo, from_rels, hetero_gspmm
 from ...substrate.batchnorm import batchnorm1d_init, batchnorm1d_apply
 from ...substrate.embedding import embedding_init, embedding_lookup
 from ...substrate.nn import glorot
@@ -50,6 +59,25 @@ def build_line_graph(g: Graph, max_out: int = 10_000_000) -> Graph:
                     n_src=n, n_dst=n)
 
 
+def build_relgraph(g: Graph, lg: Graph) -> RelGraph:
+    """Stack the layer's three aggregation streams as one RelGraph.
+
+    Node space = G's nodes (ids 0..n-1) ∪ line nodes (ids n..n+E-1, one
+    per edge of G, numbered by caller edge id — L's vertex ids).
+    Relations: 0 = G's edges (CR_G), 1 = line-node→dst(e) (the P
+    operator: e_copy_add_v), 2 = L's edges (CR_L).
+    """
+    n, E = g.n_dst, g.n_edges
+    g_src, g_dst = caller_coo(g)
+    l_src, l_dst = caller_coo(lg)
+    rels = [
+        (g_src, g_dst),                     # CR_G
+        (np.arange(E, dtype=np.int64) + n, g_dst),   # P: line node e→dst(e)
+        (l_src + n, l_dst + n),             # CR_L
+    ]
+    return from_rels(rels, n_src=n + E, n_dst=n + E)
+
+
 def init(key, n_nodes: int, d_emb: int, d_hidden: int, n_classes: int,
          n_layers: int = 3) -> Dict:
     key, ke = jax.random.split(key)
@@ -73,10 +101,35 @@ def init(key, n_nodes: int, d_emb: int, d_hidden: int, n_classes: int,
     return {"embed": embedding_init(ke, n_nodes, d_emb), "layers": layers}
 
 
+def _fused_aggs(rg: RelGraph, x, y, lyr, n: int, strategy: str):
+    """agg_x@t3 + ey@t4 (node rows) and agg_y@p3 (line rows) as ONE
+    relation-fused aggregation over the union space. Features and the
+    per-relation weights zero-pad to the wider of (dx, dy) — padded
+    columns multiply zero rows, so the sum is exact."""
+    dx, dy, out = (lyr["t3"].shape[0], lyr["p3"].shape[0],
+                   lyr["t3"].shape[1])
+    dmax = max(dx, dy)
+
+    def padf(a, d):
+        return a if d == dmax else jnp.pad(a, ((0, 0), (0, dmax - d)))
+
+    def padw(wm, d):
+        return wm if d == dmax else jnp.pad(wm, ((0, dmax - d), (0, 0)))
+
+    z = jnp.concatenate([padf(x, dx), padf(y, dy)], axis=0)
+    w = jnp.stack([padw(lyr["t3"], dx), padw(lyr["t4"], dy),
+                   padw(lyr["p3"], dy)])
+    fused = hetero_gspmm(rg, z, w=w, strategy=strategy)
+    return fused[:n], fused[n:]
+
+
 def forward(params: Dict, g: Graph, lg: Graph, *,
-            strategy: str = "auto", train: bool = True
-            ) -> Tuple[jnp.ndarray, Dict]:
-    """Returns (node logits, params-with-updated-BN-stats)."""
+            rg: Optional[RelGraph] = None, strategy: str = "auto",
+            train: bool = True) -> Tuple[jnp.ndarray, Dict]:
+    """Returns (node logits, params-with-updated-BN-stats). With ``rg``
+    (from :func:`build_relgraph`) each layer's three aggregation
+    streams run as one fused pass; without it, the pre-refactor
+    three-call path."""
     n = g.n_dst
     deg = g.in_degrees.astype(jnp.float32)[:, None]
     deg_l = lg.in_degrees.astype(jnp.float32)[:, None]
@@ -86,12 +139,18 @@ def forward(params: Dict, g: Graph, lg: Graph, *,
     y = deg_l / jnp.maximum(deg_l.max(), 1.0)
     new_layers = []
     for i, lyr in enumerate(params["layers"]):
-        agg_x = gspmm(g, "u_copy_add_v", u=x, strategy=strategy)
-        ey = gspmm(g, "e_copy_add_v", e=y, strategy=strategy)  # P·y
-        xn = (x @ lyr["t1"] + (deg * x) @ lyr["t2"] + agg_x @ lyr["t3"]
-              + ey @ lyr["t4"])
-        agg_y = gspmm(lg, "u_copy_add_v", u=y, strategy=strategy)
-        yn = (y @ lyr["p1"] + (deg_l * y) @ lyr["p2"] + agg_y @ lyr["p3"])
+        if rg is not None:
+            xa, ya = _fused_aggs(rg, x, y, lyr, n, strategy)
+            xn = x @ lyr["t1"] + (deg * x) @ lyr["t2"] + xa
+            yn = y @ lyr["p1"] + (deg_l * y) @ lyr["p2"] + ya
+        else:
+            agg_x = gspmm(g, "u_copy_add_v", u=x, strategy=strategy)
+            ey = gspmm(g, "e_copy_add_v", e=y, strategy=strategy)  # P·y
+            xn = (x @ lyr["t1"] + (deg * x) @ lyr["t2"]
+                  + agg_x @ lyr["t3"] + ey @ lyr["t4"])
+            agg_y = gspmm(lg, "u_copy_add_v", u=y, strategy=strategy)
+            yn = (y @ lyr["p1"] + (deg_l * y) @ lyr["p2"]
+                  + agg_y @ lyr["p3"])
         xn = jax.nn.relu(xn)
         yn = jax.nn.relu(yn)
         xn, bn_x = batchnorm1d_apply(lyr["bn_x"], xn, train=train)

@@ -1,8 +1,13 @@
 """MoNet (Gaussian mixture model conv) — config: u_mul_e_add_v (Table 2).
 
 Edge pseudo-coordinates p_e = (1/√deg(u), 1/√deg(v)); per mixture kernel k
-the edge weight is w_k(e) = exp(-½ Σ_d (p_ed - μ_kd)² / σ²_kd); aggregation
-is the paper's u_mul_e_add_v with scalar edge weights, once per kernel.
+the edge weight is w_k(e) = exp(-½ Σ_d (p_ed - μ_kd)² / σ²_kd). The K
+per-kernel aggregations execute as ONE fused pass over a K-relation
+:class:`~repro.core.hetero.RelGraph` (the edge set replicated per
+kernel, memoized in the bundle's PlanCache — ``make_bundle(g, krel=K)``
+prebuilds it so the fused path serves jitted train steps); without a
+prebuilt RelGraph the pre-refactor per-kernel loop runs, which is also
+the differential reference.
 """
 from __future__ import annotations
 
@@ -12,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ...core.binary_reduce import gspmm
+from ...core.hetero import hetero_gspmm
 from ...substrate.nn import linear_init, linear_apply
 from .common import GraphBundle
 
@@ -57,11 +63,21 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
         diff = pseudo[:, None, :] - lyr["mu"]            # (nnz, K, 2)
         logw = -0.5 * jnp.sum((diff * lyr["inv_sigma"]) ** 2, axis=-1)
         w = jnp.exp(logw)                                # (nnz, K)
-        acc = 0.0
-        for k in range(K):
-            acc = acc + gspmm(bundle.g, "u_mul_e_add_v", u=z[:, k],
-                              e=w[:, k:k + 1], strategy=strategy,
-                              cache=bundle.cache)
+        rg = bundle.cache.krel(K)
+        if rg is not None:
+            # one fused pass over the K-relation graph: per-kernel
+            # features index (src, kernel), per-kernel weights ride as
+            # the relation-concatenated e operand
+            acc = hetero_gspmm(rg, z, e=w.T.reshape(-1),
+                               strategy=strategy)
+        else:
+            # no prebuilt RelGraph (e.g. traced bundle that never saw
+            # make_bundle(krel=K)): the pre-refactor per-kernel loop
+            acc = 0.0
+            for k in range(K):
+                acc = acc + gspmm(bundle.g, "u_mul_e_add_v", u=z[:, k],
+                                  e=w[:, k:k + 1], strategy=strategy,
+                                  cache=bundle.cache)
         h = acc / K
         if i < n_layers - 1:
             h = jax.nn.relu(h)

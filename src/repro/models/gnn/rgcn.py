@@ -3,8 +3,17 @@
 h'_v = σ( W_0 h_v + Σ_r Σ_{u∈N_r(v)} (1/c_{v,r}) W_r h_u )
 
 Basis decomposition keeps the parameter count bounded for many relations
-(BGS has 103). Each relation owns a Graph; aggregation is one CR per
-relation (mean-normalized).
+(BGS has 103). All relations execute as ONE fused aggregation over a
+:class:`~repro.core.hetero.RelGraph` (``hetero_gspmm`` — the basis
+composition is a relation-indexed einsum inside the op, the normalizer
+1/c_{v,r} its per-relation mean reduce); ``strategy`` routes through
+the planner's ``hetero:<op>`` rows. :func:`forward_loop` keeps the
+pre-refactor per-relation loop of ``gspmm`` calls as the measured
+baseline and differential reference. Sampled training rides the shared
+block path: the relational sampler tags every sampled edge with its
+relation id (``SampledBlock.rel``/``rel_norm``) and
+:func:`block_layer` fuses all relations per block via
+``hetero_block_gspmm``.
 """
 from __future__ import annotations
 
@@ -12,11 +21,14 @@ from typing import Dict, List, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core.binary_reduce import gspmm
-from ...core.graph import Graph
+from ...core.graph import Graph, from_coo
+from ...core.hetero import (RelGraph, from_rels, hetero_gspmm,
+                            hetero_block_gspmm)
 from ...substrate.nn import glorot
-from .common import GraphBundle
+from .common import GraphBundle, run_blocks
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int, n_rel: int,
@@ -35,9 +47,51 @@ def init(key, d_in: int, d_hidden: int, n_classes: int, n_rel: int,
     return {"layers": layers}
 
 
-def forward(params: Dict, rel_graphs: Sequence[Graph], x: jnp.ndarray, *,
+def build_relgraph(rels: Sequence, n: int) -> RelGraph:
+    """BGS-like typed graph from per-relation ``(src, dst)`` pairs."""
+    return from_rels(list(rels), n_src=n, n_dst=n)
+
+
+def merged_graph(rels: Sequence, n: int):
+    """Flat (untyped) merged graph + caller-order relation ids — what
+    the relational :class:`~repro.data.NeighborSampler` consumes."""
+    src = np.concatenate([np.asarray(s, np.int64) for s, _ in rels])
+    dst = np.concatenate([np.asarray(d, np.int64) for _, d in rels])
+    rel = np.concatenate([np.full(len(np.asarray(s)), r, np.int64)
+                          for r, (s, _) in enumerate(rels)])
+    return from_coo(src, dst, n_src=n, n_dst=n), rel
+
+
+def forward(params: Dict, rg, x: jnp.ndarray, *,
             strategy: str = "auto", train: bool = False,
             rng=None) -> jnp.ndarray:
+    """Full-graph forward over a :class:`RelGraph` (fused path).
+
+    A sequence of per-relation ``Graph``s still works (delegates to
+    :func:`forward_loop`) so pre-refactor callers keep running.
+    """
+    if not isinstance(rg, RelGraph):
+        return forward_loop(params, rg, x, strategy=strategy,
+                            train=train, rng=rng)
+    h = x
+    n_layers = len(params["layers"])
+    for i, lyr in enumerate(params["layers"]):
+        h = (h @ lyr["self"]
+             + hetero_gspmm(rg, h, basis=lyr["basis"],
+                            coeff=lyr["coeff"], reduce="mean",
+                            strategy=strategy))
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+def forward_loop(params: Dict, rel_graphs: Sequence[Graph],
+                 x: jnp.ndarray, *, strategy: str = "auto",
+                 train: bool = False, rng=None) -> jnp.ndarray:
+    """Pre-refactor reference: one mean CR per relation, R sequential
+    ``gspmm`` calls — the per-type launch overhead the fused path
+    removes. Kept as the fig_hetero baseline and the differential
+    anchor for :func:`forward`."""
     h = x
     n_layers = len(params["layers"])
     for i, lyr in enumerate(params["layers"]):
@@ -50,3 +104,31 @@ def forward(params: Dict, rel_graphs: Sequence[Graph], x: jnp.ndarray, *,
         if i < n_layers - 1:
             h = jax.nn.relu(h)
     return h
+
+
+# --------------------------------------------------------------------- #
+# sampled minibatch path (relational blocks — DESIGN.md §8.5)
+# --------------------------------------------------------------------- #
+def block_layer(lyr, blk, h: jnp.ndarray, *, strategy: str = "auto",
+                bwd_strategy: str = "auto") -> jnp.ndarray:
+    """One R-GCN layer on a sampled relational block: the self loop on
+    the destinations' own features plus ONE fused relation-indexed
+    aggregation (``blk.rel`` carries the sampled edges' relation ids,
+    ``blk.rel_norm`` the per-(dst, relation) sampled-mean weights)."""
+    if blk.rel is None:
+        raise ValueError("R-GCN blocks need relation ids: sample with "
+                         "NeighborSampler(..., edge_rel=...)")
+    bg = blk.bg
+    w_rel = jnp.einsum("rb,bio->rio", lyr["coeff"], lyr["basis"])
+    agg = hetero_block_gspmm(bg, blk.rel, h, w_rel, norm=blk.rel_norm,
+                             strategy=strategy, bwd_strategy=bwd_strategy)
+    return h[: bg.n_dst_real] @ lyr["self"] + agg
+
+
+def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
+                   strategy: str = "auto", bwd_strategy: str = "auto",
+                   train: bool = False, rng=None) -> jnp.ndarray:
+    """Sampled mini-batch forward on the shared ``run_blocks`` path."""
+    return run_blocks(block_layer, params["layers"], blocks, x,
+                      strategy=strategy, bwd_strategy=bwd_strategy,
+                      activation=jax.nn.relu, train=train, rng=rng)

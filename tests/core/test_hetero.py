@@ -1,0 +1,294 @@
+"""Relation-fused execution (core/hetero.py, DESIGN.md §8):
+RelGraph structural invariants, hetero planning (cost rows, memoization,
+autotune, pinning), and the relational-block fused op's VJP contract.
+
+The cross-strategy differential harness proper lives in
+tests/core/test_strategy_equivalence.py (check_hetero); these tests
+cover the structure and the planner around it.
+"""
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (from_coo, from_rels, from_typed, gspmm,
+                        hetero_block_gspmm, hetero_gspmm, planner)
+from repro.core.hetero import RelGraph
+
+
+def _rels(rng, n, sizes):
+    return [(rng.integers(0, n, s), rng.integers(0, n, s))
+            for s in sizes]
+
+
+# --------------------------------------------------------------------- #
+# structure
+# --------------------------------------------------------------------- #
+def test_relgraph_invariants():
+    rng = np.random.default_rng(0)
+    sizes = [30, 0, 5, 17]          # skew + one empty relation
+    rels = _rels(rng, 40, sizes)
+    rg = from_rels(rels, n_src=40, n_dst=40)
+
+    assert rg.n_rel == 4 and rg.rel_sizes == tuple(sizes)
+    assert rg.n_edges == sum(sizes)
+    assert rg.rel_ptr == (0, 30, 30, 35, 52)
+    # canonical relation tags: slicing the rel-sorted view recovers each
+    # relation's edge multiset
+    rel = np.asarray(rg.rel)
+    perm = np.asarray(rg.perm_rel)
+    src = np.asarray(rg.g.src)
+    dst = np.asarray(rg.g.dst)
+    ptr = rg.rel_ptr
+    for r, (s, d) in enumerate(rels):
+        slots = perm[ptr[r]:ptr[r + 1]]
+        assert (rel[slots] == r).all()
+        got = sorted(zip(src[slots].tolist(), dst[slots].tolist()))
+        want = sorted(zip(np.asarray(s).tolist(), np.asarray(d).tolist()))
+        assert got == want
+    # reverse view: (src, rel) keys non-decreasing -> the backward's
+    # per-(src, rel) aggregate is a SORTED segment reduce
+    key = (np.asarray(rg.rev_src) * rg.n_rel + np.asarray(rg.rev_rel))
+    assert (np.diff(key) >= 0).all()
+    # per-relation mean norms: within one relation, each destination's
+    # incident weights sum to 1
+    for r in range(4):
+        slots = perm[ptr[r]:ptr[r + 1]]
+        if not len(slots):
+            continue
+        sums = np.zeros(40)
+        np.add.at(sums, dst[slots], np.asarray(rg.mean_norm)[slots])
+        touched = np.unique(dst[slots])
+        np.testing.assert_allclose(sums[touched], 1.0, rtol=1e-6)
+
+
+def test_relgraph_caller_edge_order():
+    """``e`` operands are indexed in relation-concatenated caller order."""
+    rng = np.random.default_rng(1)
+    rels = _rels(rng, 20, [10, 8])
+    rg = from_rels(rels, n_src=20, n_dst=20)
+    e = jnp.arange(rg.n_edges, dtype=jnp.float32)
+    u = jnp.ones((20, 1), jnp.float32)
+    out = hetero_gspmm(rg, u, e=e, strategy="fused")
+    # reference over the merged caller-order edge list
+    src = np.concatenate([s for s, _ in rels])
+    dst = np.concatenate([d for _, d in rels])
+    ref = np.zeros((20, 1), np.float32)
+    np.add.at(ref, dst, np.asarray(e)[:, None])
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=1e-5)
+
+
+def test_from_typed_matches_from_rels():
+    rng = np.random.default_rng(2)
+    rels = _rels(rng, 15, [6, 9, 3])
+    rg_a = from_rels(rels, n_src=15, n_dst=15)
+    src = np.concatenate([s for s, _ in rels])
+    dst = np.concatenate([d for _, d in rels])
+    rel = np.concatenate([np.full(len(s), r)
+                          for r, (s, _) in enumerate(rels)])
+    rg_b = from_typed(src, dst, rel, n_src=15, n_dst=15)
+    u = jnp.asarray(rng.normal(size=(15, 4)).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(3, 4, 2)).astype(np.float32))
+    np.testing.assert_allclose(
+        np.asarray(hetero_gspmm(rg_a, u, w=W, reduce="mean")),
+        np.asarray(hetero_gspmm(rg_b, u, w=W, reduce="mean")),
+        rtol=1e-5, atol=1e-6)
+
+
+# --------------------------------------------------------------------- #
+# planning
+# --------------------------------------------------------------------- #
+def test_plan_hetero_cost_rows():
+    """Many relations ⇒ fused-family (the loop's R dispatch overheads
+    dominate); few relations × big edge set ⇒ the loop is competitive."""
+    planner.clear_hetero_plans()
+    try:
+        many = planner.plan_hetero((5000, 5000, 40_000, 80),
+                                   "u_w_mean_v", 16, stats=None)
+        assert many == "fused"
+        few = planner.plan_hetero((5000, 5000, 400_000, 2),
+                                  "u_w_mean_v", 64, stats=None)
+        assert few == "loop"
+        # memoized: same signature returns the same decision
+        assert planner.plan_hetero((5000, 5000, 40_000, 80),
+                                   "u_w_mean_v", 16, stats=None) == many
+        assert planner.last_plan("hetero:u_w_mean_v") == many
+    finally:
+        planner.clear_hetero_plans()
+
+
+def test_plan_hetero_pins_and_fallback():
+    planner.clear_hetero_plans()
+    try:
+        sig = (100, 100, 500, 4)
+        for s in ("fused", "loop"):
+            assert planner.plan_hetero(sig, "u_w_sum_v", 8,
+                                       requested=s) == s
+        # plain gspmm pins map onto the loop (push keeps the scatter)
+        assert planner.plan_hetero(sig, "u_w_sum_v", 8,
+                                   requested="push") == "push"
+        assert planner.plan_hetero(sig, "u_w_sum_v", 8,
+                                   requested="segment") == "loop"
+        # pinned ell without a pack falls back with a one-time warning
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            assert planner.plan_hetero(sig, "u_w_sum_v", 8,
+                                       requested="ell",
+                                       ell_ok=False) == "fused"
+        with pytest.raises(ValueError):
+            planner.plan_hetero(sig, "u_w_sum_v", 8, requested="bogus")
+    finally:
+        planner.clear_hetero_plans()
+
+
+def test_hetero_autotune_measures_and_caches():
+    rng = np.random.default_rng(3)
+    rels = _rels(rng, 60, [50, 30, 20])
+    rg = from_rels(rels, n_src=60, n_dst=60)
+    u = jnp.asarray(rng.normal(size=(60, 8)).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(3, 8, 4)).astype(np.float32))
+    ref = hetero_gspmm(rg, u, w=W, strategy="loop")
+    planner.clear_hetero_plans()
+    planner.set_mode("autotune")
+    try:
+        out = hetero_gspmm(rg, u, w=W)          # eager: measures
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5)
+        chosen = planner.last_plan("hetero:u_w_sum_v")
+        assert chosen in planner.HETERO_STRATEGIES
+        n_keys = len(planner._HETERO_PLANS)
+        hetero_gspmm(rg, u, w=W)                # cached decision
+        assert len(planner._HETERO_PLANS) == n_keys
+        assert planner.last_plan("hetero:u_w_sum_v") == chosen
+    finally:
+        planner.set_mode("cost")
+        planner.clear_hetero_plans()
+
+
+def test_hetero_under_jit():
+    """A RelGraph is a pytree: the fused op plans and executes inside a
+    jitted function (static signature + cache-carried stats), matching
+    the eager result."""
+    rng = np.random.default_rng(4)
+    rels = _rels(rng, 50, [40, 25])
+    rg = from_rels(rels, n_src=50, n_dst=50)
+    u = jnp.asarray(rng.normal(size=(50, 6)).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(2, 6, 3)).astype(np.float32))
+    ref = hetero_gspmm(rg, u, w=W, reduce="mean")
+    out = jax.jit(lambda rg, u, W: hetero_gspmm(rg, u, w=W,
+                                                reduce="mean"))(rg, u, W)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_monet_krel_pack_memoized():
+    """The K-relation RelGraph is a PlanCache pack: built once, reused,
+    and the fused per-kernel aggregation equals the per-kernel loop."""
+    rng = np.random.default_rng(5)
+    src = rng.integers(0, 40, 150)
+    dst = rng.integers(0, 40, 150)
+    g = from_coo(src, dst, n_src=40, n_dst=40)
+    cache = planner.get_plan_cache(g)
+    before = planner.pack_build_totals().get("krel", 0)
+    rg = cache.krel(3)
+    assert rg is not None and rg.n_rel == 3
+    assert cache.krel(3) is rg
+    assert planner.pack_build_totals().get("krel", 0) == before + 1
+
+    K, d = 3, 5
+    z = jnp.asarray(rng.normal(size=(40, K, d)).astype(np.float32))
+    w = jnp.asarray(rng.uniform(0.1, 1.0, size=(g.n_edges, K))
+                    .astype(np.float32))
+    fused = hetero_gspmm(rg, z, e=w.T.reshape(-1), strategy="fused")
+    loop = sum(gspmm(g, "u_mul_e_add_v", u=z[:, k], e=w[:, k:k + 1],
+                     strategy="segment") for k in range(K))
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(loop),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# relational blocks
+# --------------------------------------------------------------------- #
+def _relational_block(rng, n=60, n_rel=4, nnz=200, fanout=4, batch=12):
+    from repro.data import NeighborSampler
+
+    src = rng.integers(0, n, nnz)
+    dst = rng.integers(0, n, nnz)
+    rel = rng.integers(0, n_rel, nnz)
+    g = from_coo(src, dst, n_src=n, n_dst=n)
+    sampler = NeighborSampler(g, fanouts=[fanout], batch_size=batch,
+                              seed=0, edge_rel=rel)
+    seeds = rng.permutation(n)[:batch]
+    mb = sampler.sample(seeds, np.zeros(batch, np.int64))
+    return mb.blocks[0], n_rel
+
+
+def test_hetero_block_matches_per_relation_reference():
+    """Fused relational block aggregation (both backward paths) vs the
+    explicit per-relation masked reference, outputs AND cotangents."""
+    rng = np.random.default_rng(6)
+    blk, n_rel = _relational_block(rng)
+    bg = blk.bg
+    d, o = 5, 3
+    u = jnp.asarray(rng.normal(size=(bg.g.n_src, d)).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(n_rel, d, o)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(bg.n_dst_real, o))
+                     .astype(np.float32))
+
+    # reference: per-edge masked messages reduced per destination row
+    src_c = np.asarray(bg.g.src)[np.asarray(bg.g.eid_inv)]
+    dst_c = np.asarray(bg.g.dst)[np.asarray(bg.g.eid_inv)]
+    rel_c = np.asarray(blk.rel)
+    norm_c = np.asarray(blk.rel_norm)
+
+    def ref(u, W):
+        msg = jnp.einsum("ed,edo->eo",
+                         jnp.take(u, jnp.asarray(src_c), axis=0),
+                         jnp.take(W, jnp.asarray(rel_c), axis=0))
+        msg = msg * jnp.asarray(norm_c)[:, None]
+        out = jax.ops.segment_sum(msg, jnp.asarray(dst_c),
+                                  num_segments=bg.g.n_dst)
+        return out[: bg.n_dst_real]
+
+    r0 = ref(u, W)
+    gr = jax.grad(lambda u, W: jnp.sum(ref(u, W) * ct),
+                  argnums=(0, 1))(u, W)
+    for strategy in ("segment", "ell", "auto"):
+        for bwd in ("gather", "scatter"):
+            out = hetero_block_gspmm(bg, blk.rel, u, W,
+                                     norm=blk.rel_norm,
+                                     strategy=strategy, bwd_strategy=bwd)
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(r0), rtol=1e-4, atol=1e-4,
+                err_msg=f"output via {strategy}+{bwd}")
+            gu, gw = jax.grad(
+                lambda u, W: jnp.sum(hetero_block_gspmm(
+                    bg, blk.rel, u, W, norm=blk.rel_norm,
+                    strategy=strategy, bwd_strategy=bwd) * ct),
+                argnums=(0, 1))(u, W)
+            np.testing.assert_allclose(np.asarray(gu), np.asarray(gr[0]),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"du via {strategy}+{bwd}")
+            np.testing.assert_allclose(np.asarray(gw), np.asarray(gr[1]),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"dw via {strategy}+{bwd}")
+
+
+def test_relational_sampler_norms():
+    """Per-(dst, relation) sampled-mean weights: each real destination's
+    incident weights sum to its number of DISTINCT sampled relations;
+    pad edges carry weight 0 and relation 0."""
+    rng = np.random.default_rng(7)
+    blk, n_rel = _relational_block(rng, fanout=3)
+    bg = blk.bg
+    rel = np.asarray(blk.rel)
+    norm = np.asarray(blk.rel_norm)
+    dst_c = np.asarray(bg.g.dst)[np.asarray(bg.g.eid_inv)]
+    real = dst_c < bg.n_dst_real
+    assert (norm[~real] == 0).all() and (rel[~real] == 0).all()
+    for j in np.unique(dst_c[real]):
+        m = real & (dst_c == j)
+        n_rel_here = len(np.unique(rel[m]))
+        np.testing.assert_allclose(norm[m].sum(), n_rel_here, rtol=1e-5)

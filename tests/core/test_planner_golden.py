@@ -21,73 +21,91 @@ import pytest
 from repro.core import parse_op, planner
 
 # (batch, fanout) grid of the Fig. 3 sweep × the block-relevant Table-2
-# configs × the feature widths the apps run (hidden/input/wide).
-SHAPES = [(64, 5), (64, 10), (256, 10), (512, 15)]
+# configs × the feature widths the apps run (hidden/input/wide). The
+# 8192×15 row is the products-like outer-block scale (~123k edge
+# slots): past the backward cost model's collision crossover, so the
+# snapshot pins BOTH sides of the gather-vs-scatter decision.
+SHAPES = [(64, 5), (64, 10), (256, 10), (512, 15), (8192, 15)]
 OPS = ["u_copy_add_v", "u_copy_mean_v", "u_mul_e_add_v",
        "e_copy_add_v", "e_copy_max_v"]
 WIDTHS = [16, 64, 256]
 
 GOLDEN = {
-    "b64_f5_u_copy_add_v_d16": "segment+gather",
-    "b64_f5_u_copy_add_v_d64": "segment+gather",
-    "b64_f5_u_copy_add_v_d256": "ell+gather",
-    "b64_f5_u_copy_mean_v_d16": "segment+gather",
-    "b64_f5_u_copy_mean_v_d64": "segment+gather",
-    "b64_f5_u_copy_mean_v_d256": "ell+gather",
-    "b64_f5_u_mul_e_add_v_d16": "segment+gather",
-    "b64_f5_u_mul_e_add_v_d64": "segment+gather",
-    "b64_f5_u_mul_e_add_v_d256": "ell+gather",
-    "b64_f5_e_copy_add_v_d16": "segment+gather",
-    "b64_f5_e_copy_add_v_d64": "segment+gather",
-    "b64_f5_e_copy_add_v_d256": "ell+gather",
+    "b64_f5_u_copy_add_v_d16": "segment+scatter",
+    "b64_f5_u_copy_add_v_d64": "segment+scatter",
+    "b64_f5_u_copy_add_v_d256": "ell+scatter",
+    "b64_f5_u_copy_mean_v_d16": "segment+scatter",
+    "b64_f5_u_copy_mean_v_d64": "segment+scatter",
+    "b64_f5_u_copy_mean_v_d256": "ell+scatter",
+    "b64_f5_u_mul_e_add_v_d16": "segment+scatter",
+    "b64_f5_u_mul_e_add_v_d64": "segment+scatter",
+    "b64_f5_u_mul_e_add_v_d256": "ell+scatter",
+    "b64_f5_e_copy_add_v_d16": "segment+scatter",
+    "b64_f5_e_copy_add_v_d64": "segment+scatter",
+    "b64_f5_e_copy_add_v_d256": "ell+scatter",
     "b64_f5_e_copy_max_v_d16": "segment+scatter",
     "b64_f5_e_copy_max_v_d64": "segment+scatter",
     "b64_f5_e_copy_max_v_d256": "ell+scatter",
-    "b64_f10_u_copy_add_v_d16": "segment+gather",
-    "b64_f10_u_copy_add_v_d64": "ell+gather",
-    "b64_f10_u_copy_add_v_d256": "ell+gather",
-    "b64_f10_u_copy_mean_v_d16": "segment+gather",
-    "b64_f10_u_copy_mean_v_d64": "ell+gather",
-    "b64_f10_u_copy_mean_v_d256": "ell+gather",
-    "b64_f10_u_mul_e_add_v_d16": "segment+gather",
-    "b64_f10_u_mul_e_add_v_d64": "ell+gather",
-    "b64_f10_u_mul_e_add_v_d256": "ell+gather",
-    "b64_f10_e_copy_add_v_d16": "segment+gather",
-    "b64_f10_e_copy_add_v_d64": "ell+gather",
-    "b64_f10_e_copy_add_v_d256": "ell+gather",
+    "b64_f10_u_copy_add_v_d16": "segment+scatter",
+    "b64_f10_u_copy_add_v_d64": "ell+scatter",
+    "b64_f10_u_copy_add_v_d256": "ell+scatter",
+    "b64_f10_u_copy_mean_v_d16": "segment+scatter",
+    "b64_f10_u_copy_mean_v_d64": "ell+scatter",
+    "b64_f10_u_copy_mean_v_d256": "ell+scatter",
+    "b64_f10_u_mul_e_add_v_d16": "segment+scatter",
+    "b64_f10_u_mul_e_add_v_d64": "ell+scatter",
+    "b64_f10_u_mul_e_add_v_d256": "ell+scatter",
+    "b64_f10_e_copy_add_v_d16": "segment+scatter",
+    "b64_f10_e_copy_add_v_d64": "ell+scatter",
+    "b64_f10_e_copy_add_v_d256": "ell+scatter",
     "b64_f10_e_copy_max_v_d16": "segment+scatter",
     "b64_f10_e_copy_max_v_d64": "ell+scatter",
     "b64_f10_e_copy_max_v_d256": "ell+scatter",
-    "b256_f10_u_copy_add_v_d16": "ell+gather",
-    "b256_f10_u_copy_add_v_d64": "ell+gather",
-    "b256_f10_u_copy_add_v_d256": "ell+gather",
-    "b256_f10_u_copy_mean_v_d16": "ell+gather",
-    "b256_f10_u_copy_mean_v_d64": "ell+gather",
-    "b256_f10_u_copy_mean_v_d256": "ell+gather",
-    "b256_f10_u_mul_e_add_v_d16": "ell+gather",
-    "b256_f10_u_mul_e_add_v_d64": "ell+gather",
-    "b256_f10_u_mul_e_add_v_d256": "ell+gather",
-    "b256_f10_e_copy_add_v_d16": "ell+gather",
-    "b256_f10_e_copy_add_v_d64": "ell+gather",
-    "b256_f10_e_copy_add_v_d256": "ell+gather",
+    "b256_f10_u_copy_add_v_d16": "ell+scatter",
+    "b256_f10_u_copy_add_v_d64": "ell+scatter",
+    "b256_f10_u_copy_add_v_d256": "ell+scatter",
+    "b256_f10_u_copy_mean_v_d16": "ell+scatter",
+    "b256_f10_u_copy_mean_v_d64": "ell+scatter",
+    "b256_f10_u_copy_mean_v_d256": "ell+scatter",
+    "b256_f10_u_mul_e_add_v_d16": "ell+scatter",
+    "b256_f10_u_mul_e_add_v_d64": "ell+scatter",
+    "b256_f10_u_mul_e_add_v_d256": "ell+scatter",
+    "b256_f10_e_copy_add_v_d16": "ell+scatter",
+    "b256_f10_e_copy_add_v_d64": "ell+scatter",
+    "b256_f10_e_copy_add_v_d256": "ell+scatter",
     "b256_f10_e_copy_max_v_d16": "ell+scatter",
     "b256_f10_e_copy_max_v_d64": "ell+scatter",
     "b256_f10_e_copy_max_v_d256": "ell+scatter",
-    "b512_f15_u_copy_add_v_d16": "ell+gather",
-    "b512_f15_u_copy_add_v_d64": "ell+gather",
-    "b512_f15_u_copy_add_v_d256": "ell+gather",
-    "b512_f15_u_copy_mean_v_d16": "ell+gather",
-    "b512_f15_u_copy_mean_v_d64": "ell+gather",
-    "b512_f15_u_copy_mean_v_d256": "ell+gather",
-    "b512_f15_u_mul_e_add_v_d16": "ell+gather",
-    "b512_f15_u_mul_e_add_v_d64": "ell+gather",
-    "b512_f15_u_mul_e_add_v_d256": "ell+gather",
-    "b512_f15_e_copy_add_v_d16": "ell+gather",
-    "b512_f15_e_copy_add_v_d64": "ell+gather",
-    "b512_f15_e_copy_add_v_d256": "ell+gather",
+    "b512_f15_u_copy_add_v_d16": "ell+scatter",
+    "b512_f15_u_copy_add_v_d64": "ell+scatter",
+    "b512_f15_u_copy_add_v_d256": "ell+scatter",
+    "b512_f15_u_copy_mean_v_d16": "ell+scatter",
+    "b512_f15_u_copy_mean_v_d64": "ell+scatter",
+    "b512_f15_u_copy_mean_v_d256": "ell+scatter",
+    "b512_f15_u_mul_e_add_v_d16": "ell+scatter",
+    "b512_f15_u_mul_e_add_v_d64": "ell+scatter",
+    "b512_f15_u_mul_e_add_v_d256": "ell+scatter",
+    "b512_f15_e_copy_add_v_d16": "ell+scatter",
+    "b512_f15_e_copy_add_v_d64": "ell+scatter",
+    "b512_f15_e_copy_add_v_d256": "ell+scatter",
     "b512_f15_e_copy_max_v_d16": "ell+scatter",
     "b512_f15_e_copy_max_v_d64": "ell+scatter",
     "b512_f15_e_copy_max_v_d256": "ell+scatter",
+    "b8192_f15_u_copy_add_v_d16": "ell+gather",
+    "b8192_f15_u_copy_add_v_d64": "ell+gather",
+    "b8192_f15_u_copy_add_v_d256": "ell+gather",
+    "b8192_f15_u_copy_mean_v_d16": "ell+gather",
+    "b8192_f15_u_copy_mean_v_d64": "ell+gather",
+    "b8192_f15_u_copy_mean_v_d256": "ell+gather",
+    "b8192_f15_u_mul_e_add_v_d16": "ell+gather",
+    "b8192_f15_u_mul_e_add_v_d64": "ell+gather",
+    "b8192_f15_u_mul_e_add_v_d256": "ell+gather",
+    "b8192_f15_e_copy_add_v_d16": "ell+gather",
+    "b8192_f15_e_copy_add_v_d64": "ell+gather",
+    "b8192_f15_e_copy_add_v_d256": "ell+gather",
+    "b8192_f15_e_copy_max_v_d16": "ell+scatter",
+    "b8192_f15_e_copy_max_v_d64": "ell+scatter",
+    "b8192_f15_e_copy_max_v_d256": "ell+scatter",
 }
 
 

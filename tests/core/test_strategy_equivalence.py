@@ -18,6 +18,14 @@ reducer × backward path (the reverse-table gather VJP AND the autodiff
 scatter) must match the segment-path adjoint on outputs and cotangents,
 on blocks that contain pad rows and a fully-padded degree-0 destination.
 
+The HETERO harness (:func:`check_hetero`) holds the relation-fused path
+(DESIGN.md §8) to the same contract: ``hetero_gspmm`` — every strategy
+(fused/loop/ell) × reducer (sum/mean/max) × operand form (relation
+weights W, basis decomposition, per-relation 3-D features + edge
+weights) — must match the per-relation ``gspmm`` loop reference on
+outputs AND VJPs, over skewed relation partitions that include an empty
+relation.
+
 Graphs come from the shared generator in ``tests.graphgen`` (unique
 edges: parallel duplicate edges tie max/min subgradients, which
 strategies may legitimately break differently). The checks run twice:
@@ -29,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import block_gspmm, from_coo, gspmm, parse_op, planner
+from repro.core import (block_gspmm, from_coo, from_rels, gspmm,
+                        hetero_gspmm, parse_op, planner)
 from repro.core.partition import build_partition, ring_gspmm
 from tests.graphgen import random_graph
 
@@ -267,6 +276,117 @@ def check_ring_strategy(src, dst, n_u, n_v, rng):
                         atol=1e-4, err_msg=f"d/de: {tag}")
 
 
+HETERO_STRATEGIES = ("fused", "loop", "ell")
+
+
+def check_hetero(src, dst, n_u, n_v, rng):
+    """``hetero_gspmm`` (every strategy) vs the per-relation ``gspmm``
+    loop reference, outputs AND VJPs, on a skewed relation partition of
+    the edge set that includes an EMPTY relation."""
+    nnz = len(src)
+    # skewed partition: one big relation, a few small, one empty
+    n_rel = 4
+    cuts = sorted(rng.integers(0, nnz + 1, size=2))
+    sizes = [cuts[0], 0, cuts[1] - cuts[0], nnz - cuts[1]]
+    order = rng.permutation(nnz)
+    rels, ptr = [], 0
+    for sz in sizes:
+        sel = order[ptr:ptr + sz]
+        rels.append((src[sel], dst[sel]))
+        ptr += sz
+    rg = from_rels(rels, n_src=n_u, n_dst=n_v)
+    gs = [from_coo(s, d, n_src=n_u, n_dst=n_v) if len(s) else None
+          for s, d in rels]
+    off = np.cumsum([0] + sizes)
+
+    d_in, d_out = 5, 3
+    u = jnp.asarray(rng.normal(size=(n_u, d_in)).astype(np.float32))
+    u3 = jnp.asarray(rng.normal(size=(n_u, n_rel, d_out))
+                     .astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(n_rel, d_in, d_out))
+                    .astype(np.float32))
+    basis = jnp.asarray(rng.normal(size=(2, d_in, d_out))
+                        .astype(np.float32))
+    coeff = jnp.asarray(rng.normal(size=(n_rel, 2)).astype(np.float32))
+    e = jnp.asarray(rng.uniform(0.5, 1.5, size=(nnz,)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(n_v, d_out)).astype(np.float32))
+
+    def ref(reduce, args):
+        """Σ_r gspmm over the surviving relations (segment pinned) —
+        the pre-refactor per-relation loop, linear reducers."""
+        red = {"sum": "add"}.get(reduce, reduce)
+        acc = jnp.zeros((n_v, d_out), jnp.float32)
+        for r, g in enumerate(gs):
+            if g is None:
+                continue
+            if "w" in args:
+                ur = args["u"] @ args["w"][r]
+            elif "basis" in args:
+                ur = args["u"] @ jnp.einsum(
+                    "b,bdo->do", args["coeff"][r], args["basis"])
+            else:
+                ur = args["u"][:, r, :]
+            kw = {"u": ur}
+            name = f"u_copy_{red}_v"
+            if "e" in args:
+                kw["e"] = args["e"][off[r]:off[r + 1], None]
+                name = f"u_mul_e_{red}_v"
+            acc = acc + gspmm(g, name, **kw, strategy="segment")
+        return acc
+
+    forms = [
+        ({"u": u, "w": W}, ("sum", "mean")),
+        ({"u": u, "basis": basis, "coeff": coeff}, ("sum", "mean")),
+        ({"u": u3, "e": e}, ("sum",)),
+    ]
+    for args, reduces in forms:
+        for reduce in reduces:
+            r0 = ref(reduce, args)
+
+            def ref_loss(vals):
+                return jnp.sum(ref(reduce, {**args, **vals}) * ct)
+
+            ref_g = jax.grad(ref_loss)({k: args[k] for k in args})
+            for st in HETERO_STRATEGIES:
+                tag = f"hetero {list(args)} {reduce} via {st}"
+                out = hetero_gspmm(rg, strategy=st, reduce=reduce,
+                                   **args)
+                np.testing.assert_allclose(
+                    np.asarray(out), np.asarray(r0), rtol=1e-4,
+                    atol=1e-4, err_msg=f"output: {tag}")
+
+                def loss(vals):
+                    return jnp.sum(hetero_gspmm(rg, strategy=st,
+                                                reduce=reduce, **vals)
+                                   * ct)
+
+                out_g = jax.grad(loss)({k: args[k] for k in args})
+                for k in ref_g:
+                    np.testing.assert_allclose(
+                        np.asarray(out_g[k]), np.asarray(ref_g[k]),
+                        rtol=1e-4, atol=1e-4, err_msg=f"d/d{k}: {tag}")
+
+    # max reducer: flat extremum over the fused edge set vs the merged
+    # graph's gspmm (forward + autodiff VJP)
+    gm = from_coo(np.concatenate([s for s, _ in rels]),
+                  np.concatenate([d for _, d in rels]),
+                  n_src=n_u, n_dst=n_v)
+    um = jnp.asarray(rng.normal(size=(n_u, d_out)).astype(np.float32))
+    ref_max = gspmm(gm, "u_copy_max_v", u=um, strategy="segment")
+    gmax_r = jax.grad(lambda x: jnp.sum(
+        gspmm(gm, "u_copy_max_v", u=x, strategy="segment") * ct))(um)
+    for st in HETERO_STRATEGIES:
+        out = hetero_gspmm(rg, um, reduce="max", strategy=st)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref_max),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"output: hetero max via {st}")
+        gmax = jax.grad(lambda x: jnp.sum(
+            hetero_gspmm(rg, x, reduce="max", strategy=st) * ct))(um)
+        np.testing.assert_allclose(np.asarray(gmax), np.asarray(gmax_r),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"d/du: hetero max via {st}")
+
+
 # ---------------- seeded sweep: always runs on tier-1 ----------------- #
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_outputs_and_vjps_agree_seeded(seed):
@@ -291,6 +411,14 @@ def test_ring_matches_segment_seeded(seed):
     check_ring_strategy(src, dst, n_u, n_v, rng)
 
 
+@pytest.mark.parametrize("seed", [7, 8])
+def test_hetero_matches_loop_reference_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n_u, n_v, nnz = [(20, 16, 70), (25, 25, 110)][seed - 7]
+    g, src, dst = random_graph(rng, n_u, n_v, nnz, unique=True)
+    check_hetero(src, dst, n_u, n_v, rng)
+
+
 # ---------------- hypothesis search: richer shapes -------------------- #
 if HAS_HYPOTHESIS:
     @settings(max_examples=6, deadline=None)
@@ -307,3 +435,8 @@ if HAS_HYPOTHESIS:
     @given(graphs(max_n=20, max_e=60, unique=True))
     def test_ring_matches_segment_hypothesis(data):
         check_ring_strategy(*data)
+
+    @settings(max_examples=4, deadline=None)
+    @given(graphs(max_n=20, max_e=60, unique=True))
+    def test_hetero_matches_loop_reference_hypothesis(data):
+        check_hetero(*data)

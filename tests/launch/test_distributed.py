@@ -14,8 +14,8 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from repro.core import from_coo
-from repro.core.distributed import (plan_ring, ring_copy_reduce,
-                                    ring_copy_reduce_reference)
+from repro.core.partition import (build_partition, ring_gspmm,
+                                  ring_reference)
 from repro.kernels.spmm.ref import spmm_ref
 
 mesh = jax.make_mesh((8,), ("data",))
@@ -23,17 +23,19 @@ rng = np.random.default_rng(0)
 n, nnz, d = 64, 400, 16
 src = rng.integers(0, n, nnz); dst = rng.integers(0, n, nnz)
 g = from_coo(src, dst, n_src=n, n_dst=n)
-plan = plan_ring(g, 8)    # uniform layout: padded row i == vertex i
+# uniform mode: the historical id // rows layout, padded row i == vertex i
+plan = build_partition(g, 8, "uniform")
+w = jnp.where(plan.mask, 1.0, 0.0).astype(jnp.float32)   # CR-sum weights
 x = np.zeros((plan.n_pad, d), np.float32)
 x[:n] = rng.normal(size=(n, d))
-out = ring_copy_reduce(mesh, plan, jnp.asarray(x))
-ref = ring_copy_reduce_reference(plan, jnp.asarray(x))
+out = ring_gspmm(plan, jnp.asarray(x), w, mesh=mesh)
+ref = ring_reference(plan, jnp.asarray(x))
 err = np.abs(np.asarray(out) - np.asarray(ref)).max()
 assert err < 1e-4, f"ring vs padded-oracle err={err}"
 oracle = spmm_ref(g.src, g.dst, jnp.asarray(x[:n]), n, "sum")
 err2 = np.abs(np.asarray(out)[:n] - np.asarray(oracle)).max()
 assert err2 < 1e-4, f"ring vs graph-oracle err={err2}"
-hlo = jax.jit(lambda x: ring_copy_reduce(mesh, plan, x)).lower(
+hlo = jax.jit(lambda x: ring_gspmm(plan, x, w, mesh=mesh)).lower(
     jnp.asarray(x)).compile().as_text()
 assert "collective-permute" in hlo, "ring must lower to collective-permute"
 print("RING_OK")
