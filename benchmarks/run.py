@@ -11,6 +11,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   hetero — relation-fused aggregation: BGS-like 50–100-relation RGCN
            shapes + GCMC rating-level sweep, fused vs per-relation
            loop, forward and backward
+  sddmm — planned gSDDMM + fused GAT attention: the multipass pipeline
+          (logits → softmax → aggregate) vs the single-pass
+          fused_attention, forward and forward+backward
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One section: ``PYTHONPATH=src python -m benchmarks.run --only fig2``
@@ -31,7 +34,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "br", "prims", "spmm",
-                             "partitioned", "hetero"])
+                             "partitioned", "hetero", "sddmm"])
     ap.add_argument("--strategy", default=None,
                     choices=["auto", "push", "segment", "ell", "onehot",
                              "pallas"],
@@ -51,6 +54,7 @@ def main() -> None:
         "spmm": "benchmarks.kernels_bench",
         "partitioned": "benchmarks.fig_partitioned",
         "hetero": "benchmarks.fig_hetero",
+        "sddmm": "benchmarks.fig_sddmm",
     }
     import importlib
 

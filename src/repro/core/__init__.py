@@ -8,10 +8,12 @@ from .planner import (GraphStats, Plan, PlanCache, get_plan_cache,
 from .partition import (PartitionStats, PartitionedGraph, build_partition,
                         ring_gspmm, ring_edge_values, bucket_softmax,
                         local_gspmm, ring_gspmm_delayed, ring_reference)
-from .binary_reduce import (BRSpec, parse_op, gspmm, copy_reduce,
+from .binary_reduce import (BRSpec, parse_op, gspmm, gsddmm, copy_reduce,
                             binary_reduce, BINARY_OPS, REDUCE_OPS)
 from .edge_softmax import (edge_softmax, edge_softmax_fused,
-                           block_edge_softmax)
+                           block_edge_softmax, fused_attention,
+                           block_fused_attention,
+                           fused_attention_partitioned)
 from .blocks import (BlockGraph, block_gspmm, block_supports,
                      build_reverse_table, attach_reverse)
 from .hetero import (RelGraph, from_typed, from_rels, hetero_gspmm,
@@ -30,7 +32,8 @@ __all__ = [
     "PartitionStats", "PartitionedGraph", "build_partition",
     "ring_gspmm", "ring_edge_values", "bucket_softmax",
     "local_gspmm", "ring_gspmm_delayed", "ring_reference",
-    "BRSpec", "parse_op", "gspmm", "copy_reduce", "binary_reduce",
-    "BINARY_OPS", "REDUCE_OPS",
-    "edge_softmax", "edge_softmax_fused",
+    "BRSpec", "parse_op", "gspmm", "gsddmm", "copy_reduce",
+    "binary_reduce", "BINARY_OPS", "REDUCE_OPS",
+    "edge_softmax", "edge_softmax_fused", "fused_attention",
+    "block_fused_attention", "fused_attention_partitioned",
 ]

@@ -22,7 +22,9 @@ that cannot execute a spec falls back gracefully instead of raising.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional
+import math
+from functools import partial
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -32,8 +34,8 @@ from . import strategies as S
 from .graph import Graph
 from .tiling import ELLPack, TilePack
 
-__all__ = ["BRSpec", "parse_op", "gspmm", "copy_reduce", "binary_reduce",
-           "BINARY_OPS", "REDUCE_OPS", "OP_TARGETS"]
+__all__ = ["BRSpec", "parse_op", "gspmm", "gsddmm", "copy_reduce",
+           "binary_reduce", "BINARY_OPS", "REDUCE_OPS", "OP_TARGETS"]
 
 OP_TARGETS = ("u", "v", "e")
 
@@ -116,6 +118,43 @@ def _as2d(x: jnp.ndarray) -> jnp.ndarray:
 
 
 # --------------------------------------------------------------------- #
+# ⊗-adjoint machinery (shared by the gsddmm VJP and blocks.py's
+# reverse-table backward)
+# --------------------------------------------------------------------- #
+def _unbroadcast(grad: jnp.ndarray, feat_shape: Tuple[int, ...]
+                 ) -> jnp.ndarray:
+    """Reduce a per-edge gradient ``(E, *G)`` to an operand's per-edge
+    shape ``(E, *feat_shape)`` (right-aligned broadcasting adjoint)."""
+    extra = (grad.ndim - 1) - len(feat_shape)
+    if extra > 0:
+        grad = grad.sum(axis=tuple(range(1, 1 + extra)))
+    axes = tuple(i + 1 for i, w in enumerate(feat_shape)
+                 if w == 1 and grad.shape[i + 1] != 1)
+    if axes:
+        grad = grad.sum(axis=axes, keepdims=True)
+    return grad
+
+
+# ⊗-adjoint factors: which operand values the partial derivative needs
+_NEEDS_OTHER = ("mul", "div", "dot")
+
+
+def _dmsg(op: str, side: str, lhs_val, rhs_val, ct_e):
+    """Per-edge cotangent of ``msg = lhs ⊗ rhs`` w.r.t. one side."""
+    if op in ("copy", "add"):
+        return ct_e
+    if op == "sub":
+        return ct_e if side == "l" else -ct_e
+    if op in ("mul", "dot"):    # dot: ct_e has a trailing 1 — broadcasts
+        return ct_e * (rhs_val if side == "l" else lhs_val)
+    if op == "div":
+        if side == "l":
+            return ct_e / rhs_val
+        return -ct_e * lhs_val / (rhs_val * rhs_val)
+    raise ValueError(f"no ⊗-adjoint for {op!r}")
+
+
+# --------------------------------------------------------------------- #
 # main entry
 # --------------------------------------------------------------------- #
 def gspmm(g: Graph, op_name: str, *,
@@ -148,13 +187,15 @@ def gspmm(g: Graph, op_name: str, *,
     lhs_data = _as2d(data[spec.lhs])
     rhs_data = _as2d(data[spec.rhs]) if spec.rhs is not None else None
 
-    # edge outputs are strategy-free: one gather per operand, ⊗, un-permute
+    # edge outputs are gSDDMMs — delegate to the planned path. Pinned
+    # gspmm strategy names map onto the sddmm lattice: pallas stays
+    # pallas, the baselines (push/segment) pin the caller-order gather,
+    # the optimized names pin the canonical stream.
     if spec.out == "e":
-        lhs_val = _edge_val(g, spec.lhs, lhs_data)
-        rhs_val = (_edge_val(g, spec.rhs, rhs_data)
-                   if spec.rhs is not None else None)
-        msg = BINARY_OPS[spec.op](lhs_val, rhs_val)
-        return jnp.take(msg, g.eid_inv, axis=0)
+        sddmm_req = {"auto": "auto", "pallas": "pallas",
+                     "push": "gather", "segment": "gather"
+                     }.get(strategy, "canonical")
+        return gsddmm(g, op_name, u=u, v=v, e=e, strategy=sddmm_req)
 
     if spec.reduce == "none":
         raise ValueError(f"{op_name}: copy-reduce to nodes needs a reducer")
@@ -169,6 +210,194 @@ def gspmm(g: Graph, op_name: str, *,
                               requested=strategy, cache=cache,
                               ell=ell, tiles=tiles, runner=runner)
     return _execute(g, spec, lhs_data, rhs_data, plan)
+
+
+# --------------------------------------------------------------------- #
+# gSDDMM: planned edge-output computation (DESIGN.md §9)
+# --------------------------------------------------------------------- #
+def gsddmm(g: Graph, op_name: str, *,
+           u: Optional[jnp.ndarray] = None,
+           v: Optional[jnp.ndarray] = None,
+           e: Optional[jnp.ndarray] = None,
+           strategy: str = "auto") -> jnp.ndarray:
+    """Generalized SDDMM: per-edge ⊗ of node/edge operands (the second
+    core primitive of the DGL architecture — attention logits, softmax
+    shift/divide, bilinear edge scores).
+
+    Operand conventions match :func:`gspmm`; the op's ``out`` target
+    must be ``e``. Returns (n_edges, d) in the caller's original edge
+    order (1-D operands widen to d=1, like the node-output path).
+
+    ``strategy``: 'auto' (planner, logged ``sddmm:<op>``), 'canonical'
+    (gather in dst-sorted order, ⊗ on the sorted stream, one un-permute
+    out), 'gather' (operands gathered straight into caller order — the
+    DGL-style baseline), or 'pallas' (tiled kernel over the canonical
+    stream, ``repro.kernels.sddmm``).
+
+    Floating operands run under a scatter-free custom VJP: ∂u rides the
+    graph's free src-sorted view (``perm_src`` + one SORTED segment
+    reduce), ∂v the canonical dst-sorted stream, ∂e stays per-edge —
+    mirroring the reverse-block backward, no scatter anywhere.
+    """
+    spec = parse_op(op_name)
+    if spec.out != "e":
+        raise ValueError(f"{op_name}: gsddmm computes edge outputs "
+                         f"(got out={spec.out!r}); use gspmm")
+    data = {"u": u, "v": v, "e": e}
+    if data[spec.lhs] is None:
+        raise ValueError(f"{op_name}: operand {spec.lhs!r} missing")
+    if spec.rhs is not None and data[spec.rhs] is None:
+        raise ValueError(f"{op_name}: operand {spec.rhs!r} missing")
+
+    lhs_data = _as2d(data[spec.lhs])
+    rhs_data = _as2d(data[spec.rhs]) if spec.rhs is not None else None
+
+    if spec.op == "dot":
+        d = 1
+    elif rhs_data is None:
+        d = int(math.prod(lhs_data.shape[1:]))
+    else:
+        d = int(max(math.prod(lhs_data.shape[1:]),
+                    math.prod(rhs_data.shape[1:])))
+
+    runner = None
+    if (planner.get_mode() == "autotune" and strategy == "auto"
+            and not planner.graph_is_traced(g)
+            and not planner._is_traced(lhs_data)
+            and (rhs_data is None
+                 or not planner._is_traced(rhs_data))):
+        def runner(s):
+            return _sddmm_execute(g, spec, lhs_data, rhs_data, s)
+
+    chosen = planner.plan_sddmm((g.n_src, g.n_dst, g.n_edges), spec, d,
+                                requested=strategy, lhs_data=lhs_data,
+                                rhs_data=rhs_data, runner=runner)
+
+    floating = (jnp.issubdtype(lhs_data.dtype, jnp.floating)
+                and (rhs_data is None
+                     or jnp.issubdtype(rhs_data.dtype, jnp.floating)))
+    if floating:
+        return _sddmm_exec_rev(spec, chosen, g, lhs_data, rhs_data)
+    return _sddmm_execute(g, spec, lhs_data, rhs_data, chosen)
+
+
+def _sddmm_execute(g: Graph, spec: BRSpec, lhs_data, rhs_data,
+                   chosen: str) -> jnp.ndarray:
+    """Run one edge-output BR with an already-resolved strategy."""
+    if chosen == "gather":
+        # caller-order view of the endpoints: one double-indirect
+        # gather per operand, no output permute
+        src_c = jnp.take(g.src, g.eid_inv)
+        dst_c = jnp.take(g.dst, g.eid_inv)
+
+        def fetch(target, data):
+            if target == "u":
+                return jnp.take(data, src_c, axis=0)
+            if target == "v":
+                return jnp.take(data, dst_c, axis=0)
+            return data                       # e: identity in caller order
+
+        lhs_val = fetch(spec.lhs, lhs_data)
+        rhs_val = (fetch(spec.rhs, rhs_data)
+                   if spec.rhs is not None else None)
+        return BINARY_OPS[spec.op](lhs_val, rhs_val)
+
+    # canonical / pallas: dst-sorted operand streams, one un-permute out
+    lhs_val = _edge_val(g, spec.lhs, lhs_data)
+    rhs_val = (_edge_val(g, spec.rhs, rhs_data)
+               if spec.rhs is not None else None)
+    if chosen == "pallas":
+        from repro.kernels.sddmm.ops import sddmm as sddmm_pallas
+
+        msg = sddmm_pallas(lhs_val, rhs_val, spec.op)
+    else:
+        msg = BINARY_OPS[spec.op](lhs_val, rhs_val)
+    return jnp.take(msg, g.eid_inv, axis=0)
+
+
+def _sddmm_grads(g: Graph, spec: BRSpec, lhs_data, rhs_data, ct):
+    """Scatter-free adjoints of one edge-output BR.
+
+    ∂(u-operand): per-edge cotangent products pulled through the graph's
+    src-sorted view (``perm_src``) + one SORTED segment reduce.
+    ∂(v-operand): same products on the canonical dst-sorted stream.
+    ∂(e-operand): per-edge, directly in caller order. Mirrors the
+    reverse-block VJP — no scatter anywhere.
+    """
+    perm = g.perm_src
+    src_sorted = jnp.take(g.src, perm)
+    orders = {
+        "srcsort": (src_sorted, jnp.take(g.dst, perm),
+                    jnp.take(g.eid, perm)),
+        "canon": (g.src, g.dst, g.eid),
+        "caller": (jnp.take(g.src, g.eid_inv), jnp.take(g.dst, g.eid_inv),
+                   None),      # eid in caller order is the identity
+    }
+
+    def fetch(target, data, order):
+        s, dd, eid = orders[order]
+        if target == "u":
+            return jnp.take(data, s, axis=0)
+        if target == "v":
+            return jnp.take(data, dd, axis=0)
+        return data if eid is None else jnp.take(data, eid, axis=0)
+
+    def ct_in(order):
+        # ct arrives in caller edge order; eid maps any other order's
+        # positions back to caller ids
+        eid = orders[order][2]
+        return ct if eid is None else jnp.take(ct, eid, axis=0)
+
+    def grad_for(side):
+        target = spec.lhs if side == "l" else spec.rhs
+        data = lhs_data if side == "l" else rhs_data
+        other = rhs_data if side == "l" else lhs_data
+        other_t = spec.rhs if side == "l" else spec.lhs
+        order = {"u": "srcsort", "v": "canon", "e": "caller"}[target]
+        lhs_val = rhs_val = None
+        if spec.op in _NEEDS_OTHER:
+            val = fetch(other_t, other, order)
+            lhs_val, rhs_val = ((None, val) if side == "l" else (val, None))
+            if spec.op == "div" and side == "r":
+                rhs_val = fetch(target, data, order)  # d/dr needs both
+        gmsg = _dmsg(spec.op, side, lhs_val, rhs_val, ct_in(order))
+        gmsg = _unbroadcast(gmsg, tuple(data.shape[1:]))
+        if target == "u":
+            out = jax.ops.segment_sum(gmsg, src_sorted,
+                                      num_segments=g.n_src,
+                                      indices_are_sorted=True)
+        elif target == "v":
+            out = jax.ops.segment_sum(gmsg, g.dst,
+                                      num_segments=g.n_dst,
+                                      indices_are_sorted=True)
+        else:
+            out = gmsg
+        return out.astype(data.dtype)
+
+    dlhs = grad_for("l")
+    drhs = grad_for("r") if spec.rhs is not None else None
+    return dlhs, drhs
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _sddmm_exec_rev(spec: BRSpec, chosen: str, g: Graph,
+                    lhs_data, rhs_data):
+    """``_sddmm_execute`` with the scatter-free backward."""
+    return _sddmm_execute(g, spec, lhs_data, rhs_data, chosen)
+
+
+def _sddmm_exec_rev_fwd(spec, chosen, g, lhs_data, rhs_data):
+    out = _sddmm_execute(g, spec, lhs_data, rhs_data, chosen)
+    return out, (g, lhs_data, rhs_data)
+
+
+def _sddmm_exec_rev_bwd(spec, chosen, res, ct):
+    g, lhs_data, rhs_data = res
+    dlhs, drhs = _sddmm_grads(g, spec, lhs_data, rhs_data, ct)
+    return None, dlhs, drhs
+
+
+_sddmm_exec_rev.defvjp(_sddmm_exec_rev_fwd, _sddmm_exec_rev_bwd)
 
 
 def _execute(g: Graph, spec: BRSpec, lhs_data, rhs_data,

@@ -25,10 +25,12 @@ Training (DESIGN.md §7): autodiff of any forward block strategy turns
 the ∂x computation into a scatter-add — the push pathology the paper
 removed from the forward. The sampler therefore also emits a *reverse
 table* (the block's edges sorted by source slot: ``rev_src``/
-``rev_dst``/``rev_eid``) and :func:`block_gspmm` wraps the linear
+``rev_dst``/``rev_eid``) and :func:`block_gspmm` wraps sum/mean/max/min
 reducers in a custom VJP that computes ∂x as a masked pull over that
 table (gather cotangents at consuming destinations + one sorted
-segment reduce) and ∂e as gathered per-edge products. The backward
+segment reduce) and ∂e as gathered per-edge products; for max/min the
+forward records the winning slot per output element and the pull zeroes
+every other slot's cotangent. The backward
 strategy is planned independently of the forward one
 (:func:`repro.core.planner.plan_block_vjp`, logged as
 ``block_bwd:<op>``) — ``gather`` is the reverse-table pull, ``scatter``
@@ -45,7 +47,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import planner
-from .binary_reduce import (BINARY_OPS, BRSpec, _as2d, _execute, gspmm,
+from .binary_reduce import (BINARY_OPS, BRSpec, _NEEDS_OTHER, _as2d,
+                            _dmsg, _execute, _unbroadcast, gspmm,
                             parse_op)
 from .graph import Graph
 from .strategies import REDUCE_IDENTITY
@@ -322,40 +325,42 @@ def _block_execute(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data,
 # --------------------------------------------------------------------- #
 # reverse-block VJP: gather-based backward (DESIGN.md §7)
 # --------------------------------------------------------------------- #
-def _unbroadcast(grad: jnp.ndarray, feat_shape: Tuple[int, ...]
-                 ) -> jnp.ndarray:
-    """Reduce a per-edge gradient ``(E, *G)`` to an operand's per-edge
-    shape ``(E, *feat_shape)`` (right-aligned broadcasting adjoint)."""
-    extra = (grad.ndim - 1) - len(feat_shape)
-    if extra > 0:
-        grad = grad.sum(axis=tuple(range(1, 1 + extra)))
-    axes = tuple(i + 1 for i, w in enumerate(feat_shape)
-                 if w == 1 and grad.shape[i + 1] != 1)
-    if axes:
-        grad = grad.sum(axis=axes, keepdims=True)
-    return grad
+# (the ⊗-adjoint helpers — _unbroadcast / _NEEDS_OTHER / _dmsg — live in
+# binary_reduce.py, shared with the gsddmm custom VJP)
 
 
-# ⊗-adjoint factors: which operand values the partial derivative needs
-_NEEDS_OTHER = ("mul", "div", "dot")
+def _slot_of_edge(bg: BlockGraph) -> jnp.ndarray:
+    """(n_edges,) int32: each caller edge's slot ``k`` on the neighbor
+    grid (``nbr[dst, k]``), -1 for pad edges — index prep for masking
+    extrema cotangents to the winning slot."""
+    flat_eid = bg.nbr_eid.reshape(-1)
+    flat_mask = bg.nbr_mask.reshape(-1)
+    slots = jax.lax.broadcasted_iota(
+        jnp.int32, bg.nbr.shape, 1).reshape(-1)
+    safe = jnp.where(flat_mask, flat_eid, bg.g.n_edges)
+    k_of = jnp.full((bg.g.n_edges,), -1, jnp.int32)
+    return k_of.at[safe].set(jnp.where(flat_mask, slots, -1), mode="drop")
 
 
-def _dmsg(op: str, side: str, lhs_val, rhs_val, ct_e):
-    """Per-edge cotangent of ``msg = lhs ⊗ rhs`` w.r.t. one side."""
-    if op in ("copy", "add"):
-        return ct_e
-    if op == "sub":
-        return ct_e if side == "l" else -ct_e
-    if op in ("mul", "dot"):    # dot: ct_e has a trailing 1 — broadcasts
-        return ct_e * (rhs_val if side == "l" else lhs_val)
-    if op == "div":
-        if side == "l":
-            return ct_e / rhs_val
-        return -ct_e * lhs_val / (rhs_val * rhs_val)
-    raise ValueError(f"no ⊗-adjoint for {op!r}")
+def _block_arg_extrema(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data
+                       ) -> jnp.ndarray:
+    """Winning slot per (destination row, feature element) of a max/min
+    reduce on the neighbor grid; -1 for rows with no real in-edge."""
+    lhs_val = _nbr_fetch(bg, spec.lhs, lhs_data)
+    rhs_val = (_nbr_fetch(bg, spec.rhs, rhs_data)
+               if spec.rhs is not None else None)
+    msg = BINARY_OPS[spec.op](lhs_val, rhs_val)          # (nd, F, *feat)
+    ident = jnp.asarray(REDUCE_IDENTITY[spec.reduce], msg.dtype)
+    mask = bg.nbr_mask.reshape(bg.nbr_mask.shape + (1,) * (msg.ndim - 2))
+    msg = jnp.where(mask, msg, ident)
+    arg = (jnp.argmax if spec.reduce == "max" else jnp.argmin)(msg, axis=1)
+    has = (bg.real_deg > 0).reshape((arg.shape[0],)
+                                    + (1,) * (arg.ndim - 1))
+    return jnp.where(has, arg, -1).astype(jnp.int32)
 
 
-def _reverse_grads(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data, ct):
+def _reverse_grads(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data, ct,
+                   arg=None):
     """Gather-based adjoints of one block aggregation.
 
     ∂(u-operand): masked pull over the reverse table — gather the
@@ -363,9 +368,10 @@ def _reverse_grads(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data, ct):
     destinations, one SORTED segment reduce, no scatter. ∂(e-operand):
     per-edge products of gathered endpoint values, directly in caller
     edge order. ∂(v-operand): same per-edge products reduced over the
-    forward CSR (canonical order is dst-sorted already). Only linear
-    reducers (sum/mean) route here — the planner keeps max/min/prod on
-    the autodiff backward.
+    forward CSR (canonical order is dst-sorted already). For max/min,
+    ``arg`` is the recorded arg-extrema table: cotangents are zeroed on
+    every slot except the winner before the pull, which is exactly the
+    extrema adjoint. prod stays on the autodiff backward.
     """
     g = bg.g
     if spec.reduce == "mean":
@@ -382,6 +388,14 @@ def _reverse_grads(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data, ct):
         "caller": (jnp.take(g.src, g.eid_inv), jnp.take(g.dst, g.eid_inv),
                    None),     # eid in caller order is the identity
     }
+
+    if arg is not None:
+        # extrema backward: only the winning slot's edge receives the
+        # cotangent. arg_pad's dummy row is -1 and pad edges carry slot
+        # -1, so they select each other — harmless, their ct is zero.
+        k_of = _slot_of_edge(bg)
+        arg_pad = jnp.concatenate(
+            [arg, jnp.full((1,) + arg.shape[1:], -1, arg.dtype)], axis=0)
 
     def fetch(target, data, order):
         s, dd, e = orders[order]
@@ -404,6 +418,13 @@ def _reverse_grads(bg: BlockGraph, spec: BRSpec, lhs_data, rhs_data, ct):
             if spec.op == "div" and side == "r":
                 rhs_val = fetch(target, data, order)  # d/dr needs both
         ct_e = jnp.take(ct_pad, orders[order][1], axis=0)
+        if arg is not None:
+            e_ids = orders[order][2]
+            k_e = k_of if e_ids is None else jnp.take(k_of, e_ids)
+            sel = (jnp.take(arg_pad, orders[order][1], axis=0)
+                   == k_e.reshape((k_e.shape[0],)
+                                  + (1,) * (arg_pad.ndim - 1)))
+            ct_e = jnp.where(sel, ct_e, jnp.zeros((), ct_e.dtype))
         gmsg = _dmsg(spec.op, side, lhs_val, rhs_val, ct_e)
         gmsg = _unbroadcast(gmsg, tuple(data.shape[1:]))
         if target == "u":
@@ -432,12 +453,14 @@ def _block_exec_rev(spec: BRSpec, fwd_strategy: str, bg: BlockGraph,
 
 def _block_exec_rev_fwd(spec, fwd_strategy, bg, lhs_data, rhs_data):
     out = _block_execute(bg, spec, lhs_data, rhs_data, fwd_strategy)
-    return out, (bg, lhs_data, rhs_data)
+    arg = (_block_arg_extrema(bg, spec, lhs_data, rhs_data)
+           if spec.reduce in ("max", "min") else None)
+    return out, (bg, lhs_data, rhs_data, arg)
 
 
 def _block_exec_rev_bwd(spec, fwd_strategy, res, ct):
-    bg, lhs_data, rhs_data = res
-    dlhs, drhs = _reverse_grads(bg, spec, lhs_data, rhs_data, ct)
+    bg, lhs_data, rhs_data, arg = res
+    dlhs, drhs = _reverse_grads(bg, spec, lhs_data, rhs_data, ct, arg=arg)
     return None, dlhs, drhs
 
 

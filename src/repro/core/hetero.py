@@ -32,11 +32,15 @@ einsums. ``strategy="auto"`` routes through the planner
 ``fused`` vs the per-relation ``loop`` baseline vs ``ell`` (fused
 messages reduced by the fused graph's blocked pull) from
 relation-count/size-skew statistics, memoized per signature and
-measurable under autotune mode.
+measurable under autotune mode. When relation sizes are materially
+skewed, the ``ell`` route splits into per-size-class packs
+(ell-per-relation-class, :func:`_build_skew_classes`) so one giant
+relation doesn't set the ELL pad width for every tiny one.
 """
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from functools import partial
 from typing import Optional, Sequence, Tuple
 
@@ -285,6 +289,27 @@ def _reduce_fused(rg: RelGraph, msg, reduce: str,
     base = "sum" if reduce in ("sum", "mean") else reduce
     if strategy == "ell":
         spec = parse_op(f"e_copy_{'add' if base == 'sum' else base}_v")
+        if base == "sum":
+            classes = _skew_classes(rg)
+            if classes is not None:
+                # size-skew-aware per-relation-class pull: each size
+                # class reduces over its OWN sub-graph's ELL pack, so
+                # one giant relation's degrees no longer set the pad
+                # width for everyone; the class partials sum exactly
+                out = None
+                for cg, slots in classes:
+                    pack = planner.get_plan_cache(cg).peek("ell")
+                    plan = planner.Plan(strategy="ell", requested="ell",
+                                        reason="hetero-skew", ell=pack)
+                    if pack is None:    # never happens: built eagerly
+                        plan = planner.Plan(strategy="segment",
+                                            requested="ell",
+                                            reason="hetero-skew")
+                    part = _execute(cg, spec,
+                                    jnp.take(msg, slots, axis=0), None,
+                                    plan)
+                    out = part if out is None else out + part
+                return out
         # peek only: hetero_gspmm guarantees the pack was built (on an
         # eager call) before routing here — building now could run
         # inside a trace and leak
@@ -297,6 +322,78 @@ def _reduce_fused(rg: RelGraph, msg, reduce: str,
         return _execute(g, spec, jnp.take(msg, g.eid_inv, axis=0), None,
                         plan)
     return S.pull_segment(msg, g.dst, g.n_dst, base, deg=g.in_degrees)
+
+
+# --------------------------------------------------------------------- #
+# size-skew-aware relation classes (ell-per-relation-class)
+# --------------------------------------------------------------------- #
+# One uniform ELL pack over the fused graph pads every destination row
+# to the GLOBAL max degree — and relation sizes in real heterographs are
+# wildly skewed (BGS: one relation holds half the edges), so the giant
+# relation's hubs set the pad width paid by every tiny relation's rows.
+# When the skew is material we bucket relations into log2 size classes,
+# split the fused edge set per class, and give each class its own
+# sub-graph + ELL pack: same Σ math (the class partials sum), narrow
+# pads per class. Class structures build eagerly (host-side) and are
+# memoized per fused graph; inside a trace a never-built entry simply
+# falls back to the global pack.
+_SKEW_RATIO = 8.0       # max relation size / median — below this, skip
+_SKEW_MIN_RELS = 3      # fewer relations: bucketing can't help
+_MISSING = object()
+_SKEW_CLASSES: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _build_skew_classes(rg: RelGraph):
+    """Host-side build: relations bucketed by ⌊log2(edge count)⌋.
+
+    Returns ``((class_graph, canonical_slots), ...)`` — slots index the
+    fused graph's CANONICAL edge order and double as the class graph's
+    caller edge order — or None when the size distribution doesn't
+    warrant splitting (skew below ratio, too few relations, or all
+    relations land in one size class)."""
+    sizes = np.asarray(rg.rel_sizes, np.int64)
+    nz = sizes[sizes > 0]
+    if nz.size < _SKEW_MIN_RELS:
+        return None
+    med = max(float(np.median(nz)), 1.0)
+    if float(nz.max()) / med < _SKEW_RATIO:
+        return None
+    band = np.where(sizes > 0,
+                    np.floor(np.log2(np.maximum(sizes, 1))), -1.0)
+    band = band.astype(np.int64)
+    distinct = sorted({int(b) for b in band if b >= 0})
+    if len(distinct) < 2:
+        return None
+    g = rg.g
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    perm = np.asarray(rg.perm_rel)
+    ptr = rg.rel_ptr
+    classes = []
+    for b in distinct:
+        slots = np.concatenate([perm[ptr[r]:ptr[r + 1]]
+                                for r in range(rg.n_rel)
+                                if band[r] == b])
+        cg = from_coo(src[slots], dst[slots],
+                      n_src=g.n_src, n_dst=g.n_dst)
+        planner.get_plan_cache(cg).ell()    # the class's own pad width
+        classes.append((cg, jnp.asarray(slots, jnp.int32)))
+    return tuple(classes)
+
+
+def _skew_classes(rg: RelGraph):
+    """Memoized class structures for ``rg.g`` (None = use global pack).
+
+    Builds only when no trace is active — in-trace the memo is read-only
+    and a miss means the caller stays on the fused graph's single pack."""
+    got = _SKEW_CLASSES.get(rg.g, _MISSING)
+    if got is not _MISSING:
+        return got
+    if not jax.core.trace_state_clean() or planner.graph_is_traced(rg.g):
+        return None                 # don't build (or memoize) in-trace
+    classes = _build_skew_classes(rg)
+    _SKEW_CLASSES[rg.g] = classes   # memoize None too: not-skewed is final
+    return classes
 
 
 def _exec_hetero(rg: RelGraph, u, w, basis, coeff, s, reduce: str,
@@ -487,7 +584,9 @@ def hetero_gspmm(rg: RelGraph, u: jnp.ndarray, *,
 
     ``strategy``: 'auto' (planner, logged ``hetero:<op>``), 'fused',
     'loop' (per-relation baseline), 'ell' (fused messages + the fused
-    graph's blocked pull), or any plain gspmm strategy name — which
+    graph's blocked pull; under material relation-size skew the sum
+    form splits into per-size-class packs), or any plain gspmm
+    strategy name — which
     pins the per-relation loop with that inner reduce ('push' is the
     fig2 baseline; the rest run the loop's segment form).
     """

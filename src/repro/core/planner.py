@@ -53,6 +53,8 @@ __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "plan_block_vjp", "block_bwd_supports",
            "BLOCK_BWD_STRATEGIES",
            "HETERO_STRATEGIES", "plan_hetero", "clear_hetero_plans",
+           "SDDMM_STRATEGIES", "sddmm_supports", "plan_sddmm",
+           "clear_sddmm_plans", "ATTN_STRATEGIES", "plan_attention",
            "use_ring", "active_ring", "RingContext"]
 
 STRATEGIES = ("push", "segment", "ell", "onehot", "pallas", "ring")
@@ -446,8 +448,8 @@ def supports(strategy: str, spec, lhs_data, rhs_data) -> bool:
     """Can ``strategy`` execute this node-output spec at all?
 
     ``spec`` is a parsed ``BRSpec`` (duck-typed to avoid a circular
-    import); edge-output specs never reach the planner (they are
-    strategy-free gathers).
+    import). Edge-output specs are planned separately — gspmm delegates
+    them to ``gsddmm``, whose strategies live in :func:`plan_sddmm`.
     """
     red = spec.reduce
     if strategy in ("push", "segment"):
@@ -796,10 +798,12 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
 # Autodiff of any forward block strategy computes ∂x with a scatter-add
 # (the push pathology, paper §4). 'gather' is the reverse-block custom
 # VJP (core/blocks.py): cotangents pulled over the sampler's src-sorted
-# reverse table + one sorted segment reduce. 'scatter' is plain
-# autodiff — the baseline, and the only option for the non-linear
-# reducers (max/min route cotangents through arg-extrema, prod has no
-# scatter transpose at all). Decisions are memoized per shape signature
+# reverse table + one sorted segment reduce. For max/min the forward
+# records an arg-extrema table on the neighbor grid and the pull masks
+# cotangents to the winning slot — same reverse table, one extra
+# comparison. 'scatter' is plain autodiff — the baseline, and the only
+# option for prod (no scatter transpose at all). Decisions are memoized
+# per shape signature
 # exactly like the forward block plans and logged as ``block_bwd:<op>``,
 # so forward and backward strategies are chosen independently.
 BLOCK_BWD_STRATEGIES = ("gather", "scatter")
@@ -824,14 +828,16 @@ def block_bwd_supports(strategy: str, spec) -> bool:
     """Can ``strategy`` differentiate this block spec?
 
     'scatter' (autodiff) always can. 'gather' needs a node output and a
-    LINEAR reducer: the reverse-table pull is the exact adjoint of
-    sum/mean; max/min adjoints depend on runtime arg-extrema and stay on
-    autodiff.
+    sum/mean/max/min reducer: the reverse-table pull is the exact
+    adjoint of the linear reducers, and the extrema reducers ride the
+    same pull with cotangents masked to the recorded arg-extremum slot.
+    Only prod stays on autodiff.
     """
     if strategy == "scatter":
         return True
     if strategy == "gather":
-        return spec.out == "v" and spec.reduce in ("sum", "mean")
+        return spec.out == "v" and spec.reduce in ("sum", "mean",
+                                                   "max", "min")
     raise ValueError(f"unknown block backward strategy {strategy!r}")
 
 
@@ -993,4 +999,195 @@ def plan_hetero(signature: Tuple[int, int, int, int], op_name: str,
         if memoize:
             _HETERO_PLANS[key] = chosen
     _record(log_name, requested, chosen)
+    return chosen
+
+
+# --------------------------------------------------------------------- #
+# gSDDMM (edge-output) planning — DESIGN.md §9
+# --------------------------------------------------------------------- #
+# Edge-output BRs (attention logits, the softmax chain's shift/divide,
+# GCMC's bilinear decode) used to be strategy-free gathers. They are now
+# planned like every other hot path, logged as ``sddmm:<op>``:
+#
+#   'gather'    — operands gathered straight into CALLER edge order
+#                 (one eid_inv-indirected gather PER operand; the
+#                 DGL-style baseline),
+#   'canonical' — operands gathered in canonical (dst-sorted) order, ⊗
+#                 on the sorted stream, ONE un-permute of the result —
+#                 the dst-side reads stream instead of hopping,
+#   'pallas'    — the canonical stream's ⊗ computed by the tiled Pallas
+#                 kernel (kernels/sddmm) — the TPU form.
+#
+# Decisions are memoized per static (sizes, op, width, requested,
+# backend, pallas-support) key — trace-safe like block plans — and
+# autotune mode measures the candidates once per key on eager calls.
+SDDMM_STRATEGIES = ("canonical", "gather", "pallas")
+
+_SDDMM_PLANS: Dict[Tuple, str] = {}
+
+# Relative per-element tax between the two universal forms. On
+# accelerators the canonical stream wins (dst-side reads stream; the
+# single output permute is cheap next to per-operand random gathers),
+# so gather pays the tax. On CPU the measured ordering flips — XLA's
+# random operand gathers are cheap and the full-width output un-permute
+# dominates (benchmarks/fig_sddmm.py: canonical 1.5–4× slower) — so
+# canonical pays it there. Autotune mode re-measures either way.
+_SDDMM_GATHER_TAX = 1.25
+
+_SDDMM_FALLBACK = ("canonical", "gather")
+
+
+def clear_sddmm_plans() -> None:
+    _SDDMM_PLANS.clear()
+    _ATTN_PLANS.clear()
+
+
+def sddmm_supports(strategy: str, spec, lhs_data, rhs_data) -> bool:
+    """Can ``strategy`` execute this EDGE-output spec?
+
+    canonical/gather are universal. The tiled Pallas kernel handles
+    rank-2 floating operand streams whose widths match (or broadcast
+    from 1) — the shapes the attention/decode ops actually produce.
+    """
+    if spec.out != "e":
+        return False
+    if strategy in ("canonical", "gather"):
+        return True
+    if strategy == "pallas":
+        if not jnp.issubdtype(lhs_data.dtype, jnp.floating):
+            return False
+        if lhs_data.ndim != 2:
+            return False
+        if rhs_data is not None:
+            if rhs_data.ndim != 2:
+                return False
+            if not jnp.issubdtype(rhs_data.dtype, jnp.floating):
+                return False
+            dl, dr = lhs_data.shape[-1], rhs_data.shape[-1]
+            if dl != dr and 1 not in (dl, dr):
+                return False
+        return True
+    raise ValueError(f"unknown sddmm strategy {strategy!r}")
+
+
+def _sddmm_cost(strategy: str, n_edges: int, d: int, backend: str) -> float:
+    tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
+    work = n_edges * max(int(d), 1)
+    if strategy == "canonical":
+        tax = _SDDMM_GATHER_TAX if backend == "cpu" else 1.0
+        return tp["segment"] * tax * work
+    if strategy == "gather":
+        tax = 1.0 if backend == "cpu" else _SDDMM_GATHER_TAX
+        return tp["segment"] * tax * work
+    return tp["pallas"] * work + _FIXED["pallas"]
+
+
+def plan_sddmm(signature: Tuple[int, int, int], spec, d: int,
+               requested: str = "auto",
+               lhs_data=None, rhs_data=None,
+               runner: Optional[Callable[[str], Any]] = None) -> str:
+    """Pick the execution strategy for one edge-output BR (gSDDMM).
+
+    ``signature`` is ``(n_src, n_dst, n_edges)`` — static sizes only,
+    so planning is trace-safe. Operand arrays (optional: their absence
+    just disqualifies pallas) feed the support predicate; ``runner``
+    measures candidates in autotune mode, exactly like block planning.
+    Logged as ``sddmm:<op>``.
+    """
+    backend = jax.default_backend()
+    pallas_ok = (lhs_data is not None
+                 and sddmm_supports("pallas", spec, lhs_data, rhs_data))
+    key = (tuple(signature), spec.name, int(d), requested, backend,
+           pallas_ok)
+    log_name = f"sddmm:{spec.name}"
+    chosen = _SDDMM_PLANS.get(key)
+    if chosen is None:
+        n_edges = signature[2]
+        memoize = True
+        if requested == "auto":
+            cand = [s for s in SDDMM_STRATEGIES
+                    if s != "pallas" or pallas_ok]
+            if _MODE == "autotune" and runner is not None:
+                chosen = min(cand, key=lambda s: _measure(runner, s))
+            else:
+                chosen = min(cand, key=lambda s: _sddmm_cost(
+                    s, n_edges, d, backend))
+                # cost stand-ins computed in autotune mode are not
+                # pinned — a later eager call still gets to measure
+                memoize = _MODE != "autotune"
+        elif requested not in SDDMM_STRATEGIES:
+            raise ValueError(
+                f"unknown sddmm strategy {requested!r}; expected one of "
+                f"{SDDMM_STRATEGIES + ('auto',)}")
+        elif requested != "pallas" or pallas_ok:
+            chosen = requested
+        else:
+            chosen = next(s for s in _SDDMM_FALLBACK
+                          if s != "pallas" or pallas_ok)
+            _warn_fallback(log_name, requested, chosen)
+        if memoize:
+            _SDDMM_PLANS[key] = chosen
+    _record(log_name, requested, chosen)
+    return chosen
+
+
+# --------------------------------------------------------------------- #
+# fused-attention planning — logits+softmax+aggregate as ONE pass
+# --------------------------------------------------------------------- #
+# 'fused'  — the canonical single-pass jnp form (segment max/sum over
+#            the dst-sorted stream, α never leaves registers→HBM as a
+#            separate caller-order tensor);
+# 'pallas' — the row-complete ELL megakernel (kernels/edge_softmax):
+#            whole destination rows resident in VMEM, softmax AND the
+#            weighted reduce in one kernel launch;
+# 'ring'   — the partitioned composition (ring_edge_values →
+#            bucket_softmax → ring_gspmm), pinned by the partitioned
+#            model path.
+# Logged under ONE name, ``attn:fused``, so plan logs show the
+# attention pipeline as a single planned op rather than its pieces.
+ATTN_STRATEGIES = ("fused", "pallas", "ring")
+
+_ATTN_PLANS: Dict[Tuple, str] = {}
+
+# The megakernel runs over the uniform row-complete pack: every
+# destination row padded to the max in-degree.
+_ATTN_PALLAS_FIXED = 5e4
+
+
+def plan_attention(signature: Tuple[int, int, int], heads: int, feat: int,
+                   requested: str = "auto", pallas_ok: bool = False,
+                   padded_slots: Optional[int] = None) -> str:
+    """Pick the fused-attention execution form; logged ``attn:fused``.
+
+    ``signature`` = (n_src, n_dst, n_edges); ``pallas_ok`` — whether
+    the row-complete uniform pack is available (host-side build, or
+    prebuilt in the graph's cache); ``padded_slots`` refines the
+    megakernel's padded work estimate (n_dst_nonzero * max_deg slots).
+    """
+    backend = jax.default_backend()
+    key = (tuple(signature), int(heads), int(feat), requested, backend,
+           bool(pallas_ok), padded_slots)
+    chosen = _ATTN_PLANS.get(key)
+    if chosen is None:
+        n_edges = signature[2]
+        hf = max(int(heads), 1) * max(int(feat), 1)
+        if requested == "auto":
+            tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
+            slots = n_edges if padded_slots is None else padded_slots
+            cost = {"fused": tp["segment"] * n_edges * hf}
+            if pallas_ok:
+                cost["pallas"] = (tp["pallas"] * slots * hf
+                                  + _ATTN_PALLAS_FIXED)
+            chosen = min(cost, key=cost.__getitem__)
+        elif requested not in ATTN_STRATEGIES:
+            raise ValueError(
+                f"unknown attention strategy {requested!r}; expected one "
+                f"of {ATTN_STRATEGIES + ('auto',)}")
+        elif requested == "pallas" and not pallas_ok:
+            chosen = "fused"
+            _warn_fallback("attn:fused", requested, chosen)
+        else:
+            chosen = requested
+        _ATTN_PLANS[key] = chosen
+    _record("attn:fused", requested, chosen)
     return chosen

@@ -7,6 +7,8 @@ On non-TPU backends the kernels run in interpret mode (see
 """
 from .spmm.ops import spmm
 from .binary_reduce.ops import binary_reduce
-from .edge_softmax.ops import edge_softmax
+from .edge_softmax.ops import edge_softmax, fused_attention
+from .sddmm.ops import sddmm
 
-__all__ = ["spmm", "binary_reduce", "edge_softmax"]
+__all__ = ["spmm", "binary_reduce", "edge_softmax", "fused_attention",
+           "sddmm"]

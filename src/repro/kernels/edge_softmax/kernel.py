@@ -46,3 +46,43 @@ def edge_softmax_pallas_call(n_rows_pad: int, W: int, H: int, br: int,
         out_specs=pl.BlockSpec((br, W, H), lambda r: (r, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((n_rows_pad, W, H), dtype),
         interpret=interpret)
+
+
+def _attention_kernel(slope, el_ref, er_ref, z_ref, mask_ref, out_ref):
+    """Whole GAT attention rows in VMEM: logits = el[src]+er[dst] through
+    leaky-relu, masked softmax over W, α-weighted feature reduce — one
+    read of the stripes, one (br, H, F) write, α never leaves VMEM."""
+    el = el_ref[...].astype(jnp.float32)          # (br, W, H)
+    er = er_ref[...].astype(jnp.float32)          # (br, H)
+    zv = z_ref[...].astype(jnp.float32)           # (br, W, H, F)
+    mask = (mask_ref[...] != 0)[:, :, None]       # (br, W, 1)
+    s = el + er[:, None, :]
+    s = jnp.where(s >= 0, s, slope * s)           # leaky BEFORE the mask
+    s = jnp.where(mask, s, _NEG)
+    mx = jnp.max(s, axis=1, keepdims=True)        # (br, 1, H)
+    ex = jnp.exp(s - mx)
+    ex = jnp.where(mask, ex, 0.0)
+    z = jnp.sum(ex, axis=1, keepdims=True)
+    alpha = ex / jnp.maximum(z, 1e-38)            # (br, W, H)
+    out = jnp.einsum("bwh,bwhf->bhf", alpha, zv)
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def fused_attention_pallas_call(n_rows_pad: int, W: int, H: int, F: int,
+                                br: int, dtype, *, slope: float,
+                                interpret: bool):
+    """el: (n_rows_pad, W, H) src terms; er: (n_rows_pad, H) dst terms;
+    z: (n_rows_pad, W, H, F) source features; mask: (n_rows_pad, W)."""
+    grid = (n_rows_pad // br,)
+    return pl.pallas_call(
+        functools.partial(_attention_kernel, slope),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((br, W, H), lambda r: (r, 0, 0)),
+            pl.BlockSpec((br, H), lambda r: (r, 0)),
+            pl.BlockSpec((br, W, H, F), lambda r: (r, 0, 0, 0)),
+            pl.BlockSpec((br, W), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, H, F), lambda r: (r, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_rows_pad, H, F), dtype),
+        interpret=interpret)

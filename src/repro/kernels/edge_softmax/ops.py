@@ -11,7 +11,7 @@ from ...core.graph import Graph
 from ...core.planner import get_plan_cache
 from ...core.tiling import ELLClass
 from ..common import should_interpret
-from .kernel import edge_softmax_pallas_call
+from .kernel import edge_softmax_pallas_call, fused_attention_pallas_call
 
 
 def _round_up(x: int, m: int) -> int:
@@ -71,3 +71,57 @@ def edge_softmax(g: Graph, logits: jnp.ndarray,
     out = _edge_softmax_packed(ell, x, g.eid_inv, g.n_edges, br=br,
                                interpret=interpret)
     return out[:, 0] if squeeze else out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_dst", "slope", "br", "interpret"))
+def _fused_attention_packed(pack: ELLClass, el: jnp.ndarray,
+                            er: jnp.ndarray, z: jnp.ndarray, n_dst: int,
+                            slope: float, br: int,
+                            interpret: bool) -> jnp.ndarray:
+    """Attention megakernel over row-complete stripes → (n_dst, H, F)."""
+    C, W = pack.chunk_cols.shape
+    H = el.shape[-1]
+    F = z.shape[-1]
+    C_pad = _round_up(max(C, 1), br)
+
+    el_t = jnp.take(el, pack.chunk_cols, axis=0)           # (C, W, H)
+    er_t = jnp.take(er, pack.chunk_row, axis=0)            # (C, H)
+    z_t = jnp.take(z, pack.chunk_cols, axis=0)             # (C, W, H, F)
+    el_t = jnp.pad(el_t, ((0, C_pad - C), (0, 0), (0, 0)))
+    er_t = jnp.pad(er_t, ((0, C_pad - C), (0, 0)))
+    z_t = jnp.pad(z_t, ((0, C_pad - C), (0, 0), (0, 0), (0, 0)))
+    mask = jnp.pad(pack.chunk_mask.astype(jnp.int32),
+                   ((0, C_pad - C), (0, 0)))
+
+    call = fused_attention_pallas_call(C_pad, W, H, F, br, z.dtype,
+                                       slope=slope, interpret=interpret)
+    out = call(el_t, er_t, z_t, mask)                      # (C_pad, H, F)
+
+    # row-complete pack: each chunk is one whole destination row, so the
+    # scatter-back is a pure permutation; zero-degree rows stay 0 (DGL)
+    res = jnp.zeros((n_dst, H, F), out.dtype)
+    return res.at[pack.chunk_row].set(out[:C])
+
+
+def fused_attention(g: Graph, el: jnp.ndarray, er: jnp.ndarray,
+                    z: jnp.ndarray, slope: float = 0.2,
+                    ell: Optional[ELLClass] = None, br: int = 8,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    """GAT attention pipeline as ONE kernel pass.
+
+    ``el``: (n_src, H) source logit terms; ``er``: (n_dst, H)
+    destination terms; ``z``: (n_src, H, F) source features. Computes
+    leaky-relu(el[src]+er[dst]) → per-destination softmax → α-weighted
+    feature sum without materializing per-edge α in HBM. Needs a
+    row-complete pack, like :func:`edge_softmax`.
+    """
+    if ell is None:
+        max_deg = int(jnp.max(g.in_degrees)) if g.n_dst else 1
+        ell = get_plan_cache(g).ell_uniform(max(max_deg, 1))
+    elif int(jnp.max(g.in_degrees)) > ell.width:
+        raise ValueError("pack splits rows; fused_attention needs "
+                         "width >= max in-degree")
+    return _fused_attention_packed(
+        ell, el, er, z, g.n_dst, float(slope), br,
+        should_interpret() if interpret is None else interpret)

@@ -16,3 +16,15 @@ def edge_softmax_ref(dst: jnp.ndarray, logits: jnp.ndarray,
     ex = jnp.exp(logits - jnp.take(mx, dst, axis=0))
     z = jax.ops.segment_sum(ex, dst, num_segments=n_dst)
     return ex / jnp.take(z, dst, axis=0)
+
+
+def fused_attention_ref(src: jnp.ndarray, dst: jnp.ndarray,
+                        el: jnp.ndarray, er: jnp.ndarray, z: jnp.ndarray,
+                        n_dst: int, slope: float = 0.2) -> jnp.ndarray:
+    """Attention-pipeline oracle: leaky(el[src]+er[dst]) → edge softmax
+    → α-weighted source-feature sum; (n_dst, H, F)."""
+    m = jnp.take(el, src, axis=0) + jnp.take(er, dst, axis=0)
+    m = jnp.where(m >= 0, m, slope * m)
+    alpha = edge_softmax_ref(dst, m, n_dst)
+    msg = alpha[..., None] * jnp.take(z, src, axis=0)
+    return jax.ops.segment_sum(msg, dst, num_segments=n_dst)

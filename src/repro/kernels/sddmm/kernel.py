@@ -1,0 +1,62 @@
+"""Tiled gSDDMM Pallas kernel: per-edge ⊗ over canonical operand streams.
+
+The operands arrive already gathered into canonical (dst-sorted) edge
+order as dense ``(E, d)`` streams, so the kernel is a pure tiled map:
+grid over edge blocks of ``be`` rows, each block computing the
+element-wise ⊗ (or the feature-dot) entirely in VMEM. The host wrapper
+(``ops.py``) pays the one gather in and the one un-permute out.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _binary_kernel(op: str, lhs_ref, rhs_ref, out_ref):
+    a = lhs_ref[...].astype(jnp.float32)      # (be, d)
+    b = rhs_ref[...].astype(jnp.float32)      # (be, d)
+    if op == "add":
+        out = a + b
+    elif op == "sub":
+        out = a - b
+    elif op == "mul":
+        out = a * b
+    elif op == "div":
+        out = a / b
+    elif op == "dot":
+        out = jnp.sum(a * b, axis=-1, keepdims=True)   # (be, 1)
+    else:
+        raise ValueError(f"unsupported sddmm kernel op {op!r}")
+    out_ref[...] = out.astype(out_ref.dtype)
+
+
+def _copy_kernel(lhs_ref, out_ref):
+    out_ref[...] = lhs_ref[...]
+
+
+def sddmm_pallas_call(op: str, n_edges_pad: int, d: int, be: int,
+                      dtype, *, interpret: bool):
+    """⊗ over padded canonical streams; lhs/rhs: (n_edges_pad, d)."""
+    grid = (n_edges_pad // be,)
+    d_out = 1 if op == "dot" else d
+    if op == "copy":
+        return pl.pallas_call(
+            _copy_kernel,
+            grid=grid,
+            in_specs=[pl.BlockSpec((be, d), lambda r: (r, 0))],
+            out_specs=pl.BlockSpec((be, d_out), lambda r: (r, 0)),
+            out_shape=jax.ShapeDtypeStruct((n_edges_pad, d_out), dtype),
+            interpret=interpret)
+    return pl.pallas_call(
+        functools.partial(_binary_kernel, op),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((be, d), lambda r: (r, 0)),
+            pl.BlockSpec((be, d), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((be, d_out), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_edges_pad, d_out), dtype),
+        interpret=interpret)

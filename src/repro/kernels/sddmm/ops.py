@@ -1,0 +1,50 @@
+"""Jitted public wrapper for the tiled gSDDMM Pallas kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..common import should_interpret
+from .kernel import sddmm_pallas_call
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+@functools.partial(jax.jit, static_argnames=("op", "be", "interpret"))
+def _sddmm_padded(lhs_val: jnp.ndarray, rhs_val, op: str,
+                  be: int, interpret: bool) -> jnp.ndarray:
+    E, d = lhs_val.shape
+    E_pad = _round_up(max(E, 1), be)
+    # width-1 operands broadcast up so the kernel sees equal widths
+    if rhs_val is not None:
+        d = max(d, rhs_val.shape[-1])
+        lhs_val = jnp.broadcast_to(lhs_val, (E, d))
+        rhs_val = jnp.broadcast_to(rhs_val, (E, d))
+        # pad rhs with ones: keeps div's pad rows finite (sliced off)
+        rhs_val = jnp.pad(rhs_val, ((0, E_pad - E), (0, 0)),
+                          constant_values=1)
+    lhs_val = jnp.pad(lhs_val, ((0, E_pad - E), (0, 0)))
+
+    call = sddmm_pallas_call(op, E_pad, d, be, lhs_val.dtype,
+                             interpret=interpret)
+    out = call(lhs_val) if rhs_val is None else call(lhs_val, rhs_val)
+    return out[:E]
+
+
+def sddmm(lhs_val: jnp.ndarray, rhs_val, op: str, be: int = 128,
+          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Per-edge ⊗ of canonical operand streams.
+
+    ``lhs_val``/``rhs_val``: (n_edges, d) streams already gathered into
+    canonical edge order (``rhs_val`` None for copy). Returns the
+    per-edge result in the same order; ``dot`` reduces the feature
+    axis to width 1.
+    """
+    return _sddmm_padded(
+        lhs_val, rhs_val, op, be,
+        should_interpret() if interpret is None else interpret)

@@ -1,0 +1,11 @@
+"""Reference oracle for the gSDDMM kernel: plain jnp over the streams."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ...core.binary_reduce import BINARY_OPS
+
+
+def sddmm_ref(lhs_val: jnp.ndarray, rhs_val, op: str) -> jnp.ndarray:
+    """⊗ applied to pre-gathered per-edge operand streams."""
+    return BINARY_OPS[op](lhs_val, rhs_val)

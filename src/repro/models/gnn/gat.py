@@ -3,25 +3,34 @@
     e_copy_add_v, e_copy_max_v, u_add_v_copy_e, e_sub_v_copy_e,
     e_div_v_copy_e, u_mul_e_add_v, v_mul_e_copy_e
 
-Attention logits per edge via ``u_add_v_copy_e``; normalization via
-edge-softmax (composed from the max/sub/div chain, or the fused kernel);
-aggregation via ``u_mul_e_add_v`` with per-head scalars.
+Attention logits per edge via the planned gSDDMM (``u_add_v_copy_e``);
+normalization via edge-softmax; aggregation via ``u_mul_e_add_v`` with
+per-head scalars. ``attn`` selects how much of that pipeline fuses:
+
+    'multipass'     — gsddmm logits + composed 5-primitive softmax +
+                      separate weighted aggregate (the paper's layering),
+    'softmax-fused' — single-pass softmax, separate logits/aggregate,
+    'fused'/'pallas'/'auto'
+                    — the whole pipeline as ONE planned pass
+                      (:func:`repro.core.fused_attention`, DESIGN.md §9).
 """
 from __future__ import annotations
 
-from typing import Dict
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
-from ...core.binary_reduce import gspmm
+from ...core.binary_reduce import gsddmm, gspmm
 from ...core.blocks import block_gspmm
-from ...core.edge_softmax import (edge_softmax, edge_softmax_fused,
-                                  block_edge_softmax)
-from ...core.partition import (bucket_softmax, ring_edge_values,
-                               ring_gspmm)
+from ...core.edge_softmax import (block_edge_softmax,
+                                  block_fused_attention, edge_softmax,
+                                  edge_softmax_fused, fused_attention,
+                                  fused_attention_partitioned)
 from ...substrate.nn import glorot, dropout, leaky_relu
 from .common import GraphBundle, PartitionedBundle, run_blocks
+
+_ATTN_MODES = ("multipass", "softmax-fused", "fused", "pallas", "auto")
 
 
 def init(key, d_in: int, d_hidden: int, n_classes: int, n_heads: int = 4,
@@ -41,16 +50,34 @@ def init(key, d_in: int, d_hidden: int, n_classes: int, n_heads: int = 4,
     return {"layers": layers}
 
 
+def _resolve_attn(attn: Optional[str], fused_softmax: bool) -> str:
+    """Back-compat: ``fused_softmax`` predates ``attn`` and keeps its
+    meaning when ``attn`` is not given."""
+    if attn is None:
+        return "softmax-fused" if fused_softmax else "multipass"
+    if attn not in _ATTN_MODES:
+        raise ValueError(f"unknown attn mode {attn!r}; expected one of "
+                         f"{_ATTN_MODES}")
+    return attn
+
+
 def _gat_layer(lyr, bundle: GraphBundle, h, heads: int, out: int, *,
-               strategy: str, fused_softmax: bool):
+               strategy: str, attn: str):
     g = bundle.g
     z = (h @ lyr["w"]).reshape(-1, heads, out)           # (n, H, F)
     el = jnp.sum(z * lyr["attn_l"], axis=-1)             # (n, H)
     er = jnp.sum(z * lyr["attn_r"], axis=-1)
-    # u_add_v_copy_e: per-edge logits (strategy-free edge output)
-    logits = gspmm(g, "u_add_v_copy_e", u=el, v=er)
+    if attn in ("fused", "pallas", "auto"):
+        out_feat = fused_attention(g, el, er, z, strategy=attn)
+        return out_feat.reshape(-1, heads * out)
+    # u_add_v_copy_e: per-edge logits on the planned gSDDMM path; a
+    # pinned gspmm strategy maps onto the sddmm lattice like gspmm's own
+    # edge-output delegation (baselines pin the caller-order gather)
+    sddmm_req = {"auto": "auto", "pallas": "pallas", "push": "gather",
+                 "segment": "gather"}.get(strategy, "canonical")
+    logits = gsddmm(g, "u_add_v_copy_e", u=el, v=er, strategy=sddmm_req)
     logits = leaky_relu(logits)
-    if fused_softmax:
+    if attn == "softmax-fused":
         alpha = edge_softmax_fused(g, logits)            # (nnz, H)
     else:
         alpha = edge_softmax(g, logits, strategy=strategy,
@@ -64,7 +91,9 @@ def _gat_layer(lyr, bundle: GraphBundle, h, heads: int, out: int, *,
 
 def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
             strategy: str = "auto", train: bool = False, rng=None,
-            drop: float = 0.4, fused_softmax: bool = False) -> jnp.ndarray:
+            drop: float = 0.4, fused_softmax: bool = False,
+            attn: Optional[str] = None) -> jnp.ndarray:
+    attn = _resolve_attn(attn, fused_softmax)
     h = x
     n_layers = len(params["layers"])
     for i, lyr in enumerate(params["layers"]):
@@ -74,14 +103,15 @@ def forward(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
             rng, sub = jax.random.split(rng)
             h = dropout(sub, h, drop, train)
         h = _gat_layer(lyr, bundle, h, hd, out, strategy=strategy,
-                       fused_softmax=fused_softmax)
+                       attn=attn)
         if i < n_layers - 1:
             h = jax.nn.elu(h)
     return h
 
 
 def block_layer(lyr, blk, h: jnp.ndarray, *, strategy: str = "auto",
-                bwd_strategy: str = "auto") -> jnp.ndarray:
+                bwd_strategy: str = "auto",
+                attn: str = "multipass") -> jnp.ndarray:
     """One GAT layer on a sampled block.
 
     Attention logits are per-edge over the block's sampled edges; the
@@ -94,7 +124,10 @@ def block_layer(lyr, blk, h: jnp.ndarray, *, strategy: str = "auto",
     el = jnp.sum(z * lyr["attn_l"], axis=-1)             # (n_src_pad, H)
     er = jnp.sum(z[: bg.n_dst_real] * lyr["attn_r"], axis=-1)
     er = jnp.concatenate([er, jnp.zeros((1, heads), er.dtype)], axis=0)
-    logits = gspmm(bg.g, "u_add_v_copy_e", u=el, v=er)
+    if attn in ("fused", "pallas", "auto"):
+        out_feat = block_fused_attention(bg, el, er, z, strategy=attn)
+        return out_feat.reshape(bg.n_dst_real, heads * out)
+    logits = gsddmm(bg.g, "u_add_v_copy_e", u=el, v=er)
     logits = leaky_relu(logits)
     alpha = block_edge_softmax(bg, logits, strategy=strategy,
                                bwd_strategy=bwd_strategy)  # (nnz, H)
@@ -106,10 +139,15 @@ def block_layer(lyr, blk, h: jnp.ndarray, *, strategy: str = "auto",
 
 def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
                    strategy: str = "auto", bwd_strategy: str = "auto",
-                   train: bool = False, rng=None,
-                   drop: float = 0.4) -> jnp.ndarray:
+                   train: bool = False, rng=None, drop: float = 0.4,
+                   attn: Optional[str] = None) -> jnp.ndarray:
     """Sampled mini-batch forward on the shared block path."""
-    return run_blocks(block_layer, params["layers"], blocks, x,
+    attn = _resolve_attn(attn, False) if attn is not None else "multipass"
+
+    def layer(lyr, blk, h, **kw):
+        return block_layer(lyr, blk, h, attn=attn, **kw)
+
+    return run_blocks(layer, params["layers"], blocks, x,
                       strategy=strategy, bwd_strategy=bwd_strategy,
                       activation=jax.nn.elu,
                       train=train, rng=rng, drop=drop)
@@ -122,11 +160,11 @@ def forward_partitioned(params: Dict, pb: PartitionedBundle,
     parameter-dependent, so a stale remote partial has no DistGNN-style
     formulation; delayed halos are a GCN/SAGE knob).
 
-    Per layer: one ring pass assembles the per-edge attention logits in
-    bucket layout (``ring_edge_values``), the softmax normalizes each
+    Each layer is one :func:`fused_attention_partitioned` call: a ring
+    pass assembles bucketed logits, the softmax normalizes each
     destination locally (every dst bucket is owner-resident), and a
     second ring pass does the α-weighted aggregation with per-head
-    weights (``ring_gspmm``).
+    weights.
     """
     if halo is not None:
         raise ValueError("GAT has no delayed-halo mode (attention "
@@ -142,10 +180,8 @@ def forward_partitioned(params: Dict, pb: PartitionedBundle,
         z = (h @ lyr["w"]).reshape(-1, heads, out)       # (n_pad, H, F)
         el = jnp.sum(z * lyr["attn_l"], axis=-1)         # (n_pad, H)
         er = jnp.sum(z * lyr["attn_r"], axis=-1)
-        logits = ring_edge_values(pg, el, er, mesh=pb.mesh, axis=pb.axis)
-        logits = leaky_relu(logits)                      # (S, S, eb, H)
-        alpha = bucket_softmax(pg, logits)
-        out_feat = ring_gspmm(pg, z, alpha, mesh=pb.mesh, axis=pb.axis)
+        out_feat = fused_attention_partitioned(pg, el, er, z,
+                                               mesh=pb.mesh, axis=pb.axis)
         h = out_feat.reshape(-1, heads * out)
         if i < n_layers - 1:
             h = jax.nn.elu(h)

@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.binary_reduce import gspmm
+from ...core.binary_reduce import gsddmm, gspmm
 from ...core.graph import Graph, from_coo, reverse
 from ...core.hetero import RelGraph, from_rels, hetero_gspmm
 from ...substrate.nn import glorot, linear_init, linear_apply
@@ -106,12 +106,13 @@ def encode_loop(params: Dict, fwd: Sequence[Graph], bwd: Sequence[Graph],
 
 def decode(params: Dict, g_all: Graph, h_user: jnp.ndarray,
            h_item: jnp.ndarray) -> jnp.ndarray:
-    """Per observed edge, logits over rating levels via u_dot_v_add_e."""
+    """Per observed edge, logits over rating levels via u_dot_v_add_e —
+    a planned gSDDMM (one ``sddmm:u_dot_v_copy_e`` row per level)."""
     levels = params["q"].shape[0]
     logits = []
     for lv in range(levels):
-        logits.append(gspmm(g_all, "u_dot_v_add_e",
-                            u=h_user @ params["q"][lv], v=h_item)[:, 0])
+        logits.append(gsddmm(g_all, "u_dot_v_add_e",
+                             u=h_user @ params["q"][lv], v=h_item)[:, 0])
     return jnp.stack(logits, axis=-1)          # (n_edges, levels)
 
 

@@ -7,8 +7,11 @@ graph L), which is why the paper calls it "particularly suitable".
 
 Layer (simplified but structurally faithful to Chen et al.):
   x' = BN(ρ( x θ1 + (deg·x) θ2 + CR_G(x) θ3 + (P y) θ4 ))
-  y' = BN(ρ( y φ1 + (deg_L·y) φ2 + CR_L(y) φ3 ))
-where P maps line-graph (edge) features back to nodes: e_copy_add_v.
+  y' = BN(ρ( y φ1 + (deg_L·y) φ2 + CR_L(y) φ3 + (Pᵀ x) φ4 ))
+where P maps line-graph (edge) features back to nodes (e_copy_add_v)
+and Pᵀ projects node features onto line nodes: per edge e=(u→v) the
+endpoint sum x_u + x_v — the ``u_add_v_copy_e`` gSDDMM (planned,
+``sddmm:u_add_v_copy_e`` in the plan log).
 
 The three aggregation streams (CR_G, P, CR_L) ride the relation-fused
 machinery: :func:`build_relgraph` stacks them as a 3-relation
@@ -26,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...core.binary_reduce import gspmm
+from ...core.binary_reduce import gsddmm, gspmm
 from ...core.graph import Graph, from_coo
 from ...core.hetero import RelGraph, caller_coo, from_rels, hetero_gspmm
 from ...substrate.batchnorm import batchnorm1d_init, batchnorm1d_apply
@@ -85,7 +88,7 @@ def init(key, n_nodes: int, d_emb: int, d_hidden: int, n_classes: int,
     dx, dy = d_emb + 1, 1          # node emb + degree; line-graph starts with degree
     for i in range(n_layers):
         out = n_classes if i == n_layers - 1 else d_hidden
-        key, *ks = jax.random.split(key, 8)
+        key, *ks = jax.random.split(key, 9)
         layers.append({
             "t1": glorot(ks[0], (dx, out)),
             "t2": glorot(ks[1], (dx, out)),
@@ -94,6 +97,7 @@ def init(key, n_nodes: int, d_emb: int, d_hidden: int, n_classes: int,
             "p1": glorot(ks[4], (dy, out)),
             "p2": glorot(ks[5], (dy, out)),
             "p3": glorot(ks[6], (dy, out)),
+            "p4": glorot(ks[7], (dx, out)),    # Pᵀ skip (node → line)
             "bn_x": batchnorm1d_init(out),
             "bn_y": batchnorm1d_init(out),
         })
@@ -139,10 +143,15 @@ def forward(params: Dict, g: Graph, lg: Graph, *,
     y = deg_l / jnp.maximum(deg_l.max(), 1.0)
     new_layers = []
     for i, lyr in enumerate(params["layers"]):
+        # Pᵀ x: endpoint sums per edge of G = line-node features, in
+        # caller edge order (= L's vertex numbering). A planned gSDDMM,
+        # shared by both branches.
+        px = gsddmm(g, "u_add_v_copy_e", u=x, v=x)
         if rg is not None:
             xa, ya = _fused_aggs(rg, x, y, lyr, n, strategy)
             xn = x @ lyr["t1"] + (deg * x) @ lyr["t2"] + xa
-            yn = y @ lyr["p1"] + (deg_l * y) @ lyr["p2"] + ya
+            yn = (y @ lyr["p1"] + (deg_l * y) @ lyr["p2"] + ya
+                  + px @ lyr["p4"])
         else:
             agg_x = gspmm(g, "u_copy_add_v", u=x, strategy=strategy)
             ey = gspmm(g, "e_copy_add_v", e=y, strategy=strategy)  # P·y
@@ -150,7 +159,7 @@ def forward(params: Dict, g: Graph, lg: Graph, *,
                   + agg_x @ lyr["t3"] + ey @ lyr["t4"])
             agg_y = gspmm(lg, "u_copy_add_v", u=y, strategy=strategy)
             yn = (y @ lyr["p1"] + (deg_l * y) @ lyr["p2"]
-                  + agg_y @ lyr["p3"])
+                  + agg_y @ lyr["p3"] + px @ lyr["p4"])
         xn = jax.nn.relu(xn)
         yn = jax.nn.relu(yn)
         xn, bn_x = batchnorm1d_apply(lyr["bn_x"], xn, train=train)

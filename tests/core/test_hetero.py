@@ -292,3 +292,66 @@ def test_relational_sampler_norms():
         m = real & (dst_c == j)
         n_rel_here = len(np.unique(rel[m]))
         np.testing.assert_allclose(norm[m].sum(), n_rel_here, rtol=1e-5)
+
+
+def test_skew_classes_split_and_match():
+    """Size-skew-aware ell-per-relation-class: under a materially skewed
+    relation-size distribution the ell route must split the fused edge
+    set into per-size-class packs (so one giant relation doesn't set
+    everyone's pad width) — partitioning the edges exactly, matching
+    the loop reference on outputs AND gradients, and surviving jit with
+    prebuilt classes."""
+    from repro.core import hetero as H
+
+    rng = np.random.default_rng(21)
+    n = 50
+    sizes = [900, 16, 11, 7, 4]
+    src = np.concatenate([rng.integers(0, n, s) for s in sizes])
+    dst = np.concatenate([rng.integers(0, n, s) for s in sizes])
+    rel = np.concatenate([np.full(s, r) for r, s in enumerate(sizes)])
+    rg = from_typed(src, dst, rel, n_src=n, n_dst=n, n_rel=5)
+
+    classes = H._skew_classes(rg)
+    assert classes is not None and len(classes) >= 2
+    # the class slot sets partition the fused edge set exactly
+    all_slots = np.concatenate([np.asarray(s) for _, s in classes])
+    assert sorted(all_slots.tolist()) == list(range(rg.n_edges))
+    # per-class packs are narrower than the fused graph's global one:
+    # each class's max degree bounds its pad width
+    degs = [int(np.asarray(cg.in_degrees).max()) for cg, _ in classes]
+    assert min(degs) < max(degs)
+
+    u = jnp.asarray(rng.normal(size=(n, 6)).astype(np.float32))
+    W = jnp.asarray(rng.normal(size=(5, 6, 3)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    for red in ("sum", "mean"):
+        ref = hetero_gspmm(rg, u, w=W, reduce=red, strategy="loop")
+        out = hetero_gspmm(rg, u, w=W, reduce=red, strategy="ell")
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"skew ell output ({red})")
+    gu_e, gw_e = jax.grad(
+        lambda a, b: jnp.sum(hetero_gspmm(rg, a, w=b, strategy="ell")
+                             * ct), argnums=(0, 1))(u, W)
+    gu_l, gw_l = jax.grad(
+        lambda a, b: jnp.sum(hetero_gspmm(rg, a, w=b, strategy="loop")
+                             * ct), argnums=(0, 1))(u, W)
+    np.testing.assert_allclose(np.asarray(gu_e), np.asarray(gu_l),
+                               rtol=1e-3, atol=1e-3, err_msg="skew du")
+    np.testing.assert_allclose(np.asarray(gw_e), np.asarray(gw_l),
+                               rtol=1e-3, atol=1e-3, err_msg="skew dw")
+
+    # prebuilt classes are plain constants under jit
+    f = jax.jit(lambda a, b: hetero_gspmm(rg, a, w=b, strategy="ell"))
+    np.testing.assert_allclose(
+        np.asarray(f(u, W)),
+        np.asarray(hetero_gspmm(rg, u, w=W, strategy="loop")),
+        rtol=1e-4, atol=1e-4, err_msg="skew ell under jit")
+
+    # near-uniform sizes must NOT split
+    sizes2 = [40, 37, 41, 39]
+    src2 = np.concatenate([rng.integers(0, n, s) for s in sizes2])
+    dst2 = np.concatenate([rng.integers(0, n, s) for s in sizes2])
+    rel2 = np.concatenate([np.full(s, r) for r, s in enumerate(sizes2)])
+    rg2 = from_typed(src2, dst2, rel2, n_src=n, n_dst=n, n_rel=4)
+    assert H._skew_classes(rg2) is None

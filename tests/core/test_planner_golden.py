@@ -1,6 +1,8 @@
 """Golden-plan regression: the block planner's chosen forward
 (``block:<op>``) and backward (``block_bwd:<op>``) strategies across the
-Table-2 block shape grid, snapshotted.
+Table-2 block shape grid, snapshotted — plus the edge-output planner's
+``sddmm:<op>`` rows and the fused-attention ``attn:fused`` rows over
+the shapes the GAT/GCMC/LGNN apps actually plan.
 
 The cost model is deterministic, so any diff here is a REAL behavior
 change of the planner — a deliberate cost-model tweak should update the
@@ -103,9 +105,9 @@ GOLDEN = {
     "b8192_f15_e_copy_add_v_d16": "ell+gather",
     "b8192_f15_e_copy_add_v_d64": "ell+gather",
     "b8192_f15_e_copy_add_v_d256": "ell+gather",
-    "b8192_f15_e_copy_max_v_d16": "ell+scatter",
-    "b8192_f15_e_copy_max_v_d64": "ell+scatter",
-    "b8192_f15_e_copy_max_v_d256": "ell+scatter",
+    "b8192_f15_e_copy_max_v_d16": "ell+gather",
+    "b8192_f15_e_copy_max_v_d64": "ell+gather",
+    "b8192_f15_e_copy_max_v_d256": "ell+gather",
 }
 
 
@@ -150,3 +152,111 @@ def test_block_plans_match_golden():
         f"intentional, regen the snapshot: PYTHONPATH=src python -c "
         f'"from tests.core.test_planner_golden import print_golden; '
         f'print_golden()"')
+
+
+# --------------------------------------------------------------------- #
+# edge-output (sddmm:<op>) + fused-attention (attn:fused) golden rows
+# --------------------------------------------------------------------- #
+# Size grid: cora-scale and the products-like outer-block edge count.
+# Each op is planned with pallas-qualifying operands (rank-2 float) and
+# with a pallas-disqualifying 3-D operand stream, pinning BOTH sides of
+# the support predicate; widths cover the scalar-logit and hidden cases.
+SDDMM_SHAPES = [(2708, 2708, 10556), (131072, 8192, 122880)]
+SDDMM_OPS = ["u_add_v_copy_e", "u_dot_v_copy_e", "u_mul_e_copy_e"]
+ATTN_SHAPES = [(2708, 2708, 10556, 4, 16), (19717, 19717, 88651, 8, 8)]
+
+SDDMM_GOLDEN = {
+    "E10556_u_add_v_copy_e_d1": "gather",
+    "E10556_u_add_v_copy_e_d1_nopallas": "gather",
+    "E10556_u_add_v_copy_e_d16": "gather",
+    "E10556_u_add_v_copy_e_d16_nopallas": "gather",
+    "E10556_u_dot_v_copy_e_d1": "gather",
+    "E10556_u_dot_v_copy_e_d1_nopallas": "gather",
+    "E10556_u_dot_v_copy_e_d16": "gather",
+    "E10556_u_dot_v_copy_e_d16_nopallas": "gather",
+    "E10556_u_mul_e_copy_e_d1": "gather",
+    "E10556_u_mul_e_copy_e_d1_nopallas": "gather",
+    "E10556_u_mul_e_copy_e_d16": "gather",
+    "E10556_u_mul_e_copy_e_d16_nopallas": "gather",
+    "E122880_u_add_v_copy_e_d1": "gather",
+    "E122880_u_add_v_copy_e_d1_nopallas": "gather",
+    "E122880_u_add_v_copy_e_d16": "gather",
+    "E122880_u_add_v_copy_e_d16_nopallas": "gather",
+    "E122880_u_dot_v_copy_e_d1": "gather",
+    "E122880_u_dot_v_copy_e_d1_nopallas": "gather",
+    "E122880_u_dot_v_copy_e_d16": "gather",
+    "E122880_u_dot_v_copy_e_d16_nopallas": "gather",
+    "E122880_u_mul_e_copy_e_d1": "gather",
+    "E122880_u_mul_e_copy_e_d1_nopallas": "gather",
+    "E122880_u_mul_e_copy_e_d16": "gather",
+    "E122880_u_mul_e_copy_e_d16_nopallas": "gather",
+}
+
+ATTN_GOLDEN = {
+    "E10556_h4_f16": "fused",
+    "E10556_h4_f16_pack": "fused",
+    "E88651_h8_f8": "fused",
+    "E88651_h8_f8_pack": "fused",
+}
+
+
+def compute_sddmm_plans() -> dict:
+    import jax.numpy as jnp
+
+    prev = planner.get_mode()
+    planner.set_mode("cost")
+    planner.clear_sddmm_plans()
+    try:
+        out = {}
+        for sig in SDDMM_SHAPES:
+            for op in SDDMM_OPS:
+                spec = parse_op(op)
+                for d in (1, 16):
+                    lhs = jnp.zeros((1, d), jnp.float32)
+                    rhs = (None if spec.rhs is None
+                           else jnp.zeros((1, d), jnp.float32))
+                    out[f"E{sig[2]}_{op}_d{d}"] = planner.plan_sddmm(
+                        sig, spec, d, lhs_data=lhs, rhs_data=rhs)
+                    # 3-D streams disqualify the tiled kernel
+                    lhs3 = jnp.zeros((1, 2, d), jnp.float32)
+                    out[f"E{sig[2]}_{op}_d{d}_nopallas"] = \
+                        planner.plan_sddmm(sig, spec, d, lhs_data=lhs3,
+                                           rhs_data=rhs)
+        for n_src, n_dst, n_edges, h, f in ATTN_SHAPES:
+            sig = (n_src, n_dst, n_edges)
+            out[f"E{n_edges}_h{h}_f{f}"] = planner.plan_attention(
+                sig, h, f, pallas_ok=False)
+            out[f"E{n_edges}_h{h}_f{f}_pack"] = planner.plan_attention(
+                sig, h, f, pallas_ok=True, padded_slots=n_edges * 4)
+        return out
+    finally:
+        planner.clear_sddmm_plans()
+        planner.set_mode(prev)
+
+
+def print_sddmm_golden() -> None:       # the regen helper
+    plans = compute_sddmm_plans()
+    print("SDDMM_GOLDEN = {")
+    for k, v in plans.items():
+        if "_h" not in k:
+            print(f'    "{k}": "{v}",')
+    print("}")
+    print("ATTN_GOLDEN = {")
+    for k, v in plans.items():
+        if "_h" in k:
+            print(f'    "{k}": "{v}",')
+    print("}")
+
+
+@pytest.mark.skipif(jax.default_backend() != "cpu",
+                    reason="golden plans snapshotted for the cpu "
+                           "throughput table")
+def test_sddmm_and_attention_plans_match_golden():
+    plans = compute_sddmm_plans()
+    golden = {**SDDMM_GOLDEN, **ATTN_GOLDEN}
+    drift = {k: (golden.get(k), v) for k, v in plans.items()
+             if golden.get(k) != v}
+    assert plans.keys() == golden.keys() and not drift, (
+        f"sddmm/attn plan drift on {len(drift)} grid point(s): "
+        f"{dict(list(drift.items())[:8])} — regen with "
+        f'print_sddmm_golden() if intentional')

@@ -18,6 +18,13 @@ reducer × backward path (the reverse-table gather VJP AND the autodiff
 scatter) must match the segment-path adjoint on outputs and cotangents,
 on blocks that contain pad rows and a fully-padded degree-0 destination.
 
+The SDDMM harness (:func:`check_gsddmm`) holds the edge-output lattice
+to the same contract: every ``gsddmm`` strategy (canonical/gather/
+pallas) × edge-output op must match a caller-order composition oracle
+on outputs AND VJPs, including 1-D operand widening, isolated
+(zero-degree) nodes, and the pad edges block graphs carry
+(:func:`test_gsddmm_block_pad_edges`).
+
 The HETERO harness (:func:`check_hetero`) holds the relation-fused path
 (DESIGN.md §8) to the same contract: ``hetero_gspmm`` — every strategy
 (fused/loop/ell) × reducer (sum/mean/max) × operand form (relation
@@ -37,8 +44,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.core import (block_gspmm, from_coo, from_rels, gspmm,
-                        hetero_gspmm, parse_op, planner)
+from repro.core import (BINARY_OPS, block_gspmm, from_coo, from_rels,
+                        gsddmm, gspmm, hetero_gspmm, parse_op, planner)
 from repro.core.partition import build_partition, ring_gspmm
 from tests.graphgen import random_graph
 
@@ -125,6 +132,90 @@ def check_all_strategies(src, dst, n_u, n_v, rng):
                     atol=1e-4, err_msg=f"output: {tag}")
 
 
+SDDMM_STRATEGIES = ("canonical", "gather", "pallas")
+# edge-output configs: the attention logits (u_add_v), the softmax
+# chain's shift/divide shapes (e_sub_v, e_div_v), GCMC's bilinear
+# decode (u_dot_v, both reduce spellings), weighting (u_mul_e) and the
+# degenerate copies
+SDDMM_OPS = ("u_add_v_copy_e", "u_sub_v_copy_e", "u_mul_v_copy_e",
+             "u_div_v_copy_e", "u_dot_v_copy_e", "u_dot_v_add_e",
+             "e_sub_v_copy_e", "e_div_v_copy_e", "u_mul_e_copy_e",
+             "u_copy_copy_e", "e_copy_copy_e")
+
+
+def _sddmm_reference(g, spec, args):
+    """Caller-order composition oracle: plain gathers + the ⊗ table."""
+    src_c = jnp.take(g.src, g.eid_inv)
+    dst_c = jnp.take(g.dst, g.eid_inv)
+
+    def fetch(t):
+        d = args[t]
+        d = d if d.ndim >= 2 else d[:, None]
+        if t == "u":
+            return jnp.take(d, src_c, axis=0)
+        if t == "v":
+            return jnp.take(d, dst_c, axis=0)
+        return d
+
+    lhs = fetch(spec.lhs)
+    if spec.rhs is None:
+        return lhs
+    return BINARY_OPS[spec.op](lhs, fetch(spec.rhs))
+
+
+def check_gsddmm(src, dst, n_u, n_v, rng):
+    """Every SDDMM strategy × edge-output op must match the caller-order
+    composition oracle on outputs AND VJPs w.r.t. every operand. The
+    graph gets one extra isolated node on each side (zero-degree rows
+    ride through the canonical permutes), and the 1-D operand form must
+    widen to the oracle's (nnz, 1)."""
+    g = from_coo(src, dst, n_src=n_u + 1, n_dst=n_v + 1)
+    operands = _operands(rng, g)
+
+    for name in SDDMM_OPS:
+        spec = parse_op(name)
+        keys = [spec.lhs] + ([spec.rhs] if spec.rhs else [])
+        args = {k: operands[k] for k in keys}
+        ref = _sddmm_reference(g, spec, args)
+        ct = jnp.asarray(rng.normal(size=ref.shape).astype(np.float32))
+
+        def ref_loss(a):
+            return jnp.sum(_sddmm_reference(g, spec, a) * ct)
+
+        ref_g = jax.grad(ref_loss)(args)
+        for s in SDDMM_STRATEGIES:
+            if not planner.sddmm_supports(s, spec, args[spec.lhs],
+                                          args.get(spec.rhs)):
+                continue
+            tag = f"{name} via {s}"
+            kw = {k: args[k] for k in keys}
+            out = gsddmm(g, name, **kw, strategy=s)
+            np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"output: {tag}")
+
+            def loss(a):
+                return jnp.sum(gsddmm(g, name, **a, strategy=s) * ct)
+
+            out_g = jax.grad(loss)(args)
+            for k in ref_g:
+                np.testing.assert_allclose(
+                    np.asarray(out_g[k]), np.asarray(ref_g[k]),
+                    rtol=1e-4, atol=1e-4, err_msg=f"d/d{k}: {tag}")
+
+    # 1-D logits (the GAT single-head form): widened to (nnz, 1)
+    u1 = operands["u"][:, 0]
+    v1 = operands["v"][:, 0]
+    ref1 = _sddmm_reference(g, parse_op("u_add_v_copy_e"),
+                            {"u": u1, "v": v1})
+    for s in SDDMM_STRATEGIES:
+        out = gsddmm(g, "u_add_v_copy_e", u=u1, v=v1, strategy=s)
+        assert out.shape == (g.n_edges, 1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref1),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"1-D logits via {s}")
+
+
 BLOCK_STRATEGIES = ("push", "segment", "ell")
 BLOCK_TEMPLATES = ("u_copy_{}_v", "u_mul_e_{}_v", "e_copy_{}_v",
                    "u_add_v_{}_v")
@@ -182,10 +273,12 @@ def check_block_vjps(src, dst, n_u, n_v, rng):
             # prod: no scatter/segment-prod transpose in jax —
             # forward-only for every strategy (same caveat as full-graph)
             diff = red != "mul"
-            # the gather VJP only serves linear reducers; max/min stay
-            # on autodiff by plan (block_bwd_supports)
+            # the gather VJP serves the linear reducers AND — via the
+            # recorded arg-extrema table — max/min; prod stays on the
+            # autodiff scatter (block_bwd_supports)
             bwds = (("gather", "scatter")
-                    if diff and red in ("add", "mean") else ("scatter",))
+                    if diff and red in ("add", "mean", "max", "min")
+                    else ("scatter",))
             if diff:
                 ref, ref_g = value_and_grads(name, args, ct, "segment",
                                              "scatter")
@@ -411,6 +504,42 @@ def test_ring_matches_segment_seeded(seed):
     check_ring_strategy(src, dst, n_u, n_v, rng)
 
 
+@pytest.mark.parametrize("seed", [9, 10])
+def test_gsddmm_matches_oracle_seeded(seed):
+    rng = np.random.default_rng(seed)
+    n_u, n_v, nnz = [(20, 14, 70), (26, 26, 100)][seed - 9]
+    g, src, dst = random_graph(rng, n_u, n_v, nnz, unique=True)
+    check_gsddmm(src, dst, n_u, n_v, rng)
+
+
+def test_gsddmm_block_pad_edges():
+    """Block graphs carry PAD edges (dummy dst row, repeated src): every
+    sddmm strategy must emit identical caller-order edge values across
+    real and pad slots — the downstream block softmax depends on pads
+    landing in the dummy row with finite values."""
+    from repro.data import NeighborSampler
+
+    rng = np.random.default_rng(11)
+    g0, src, dst = random_graph(rng, 20, 16, 60, unique=True)
+    g = from_coo(src, dst, n_src=20, n_dst=16)
+    sampler = NeighborSampler(g, fanouts=[3], batch_size=6, seed=0)
+    seeds = rng.permutation(16)[:6]
+    mb = sampler.sample(seeds, np.zeros(len(seeds), np.int64))
+    bg = mb.blocks[0].bg
+    assert bg.g.n_edges > int(np.asarray(bg.real_deg).sum())  # has pads
+
+    el = jnp.asarray(rng.normal(size=(bg.g.n_src, 3)).astype(np.float32))
+    er = jnp.asarray(rng.normal(size=(bg.g.n_dst, 3)).astype(np.float32))
+    spec = parse_op("u_add_v_copy_e")
+    ref = _sddmm_reference(bg.g, spec, {"u": el, "v": er})
+    assert bool(jnp.all(jnp.isfinite(ref)))
+    for s in SDDMM_STRATEGIES:
+        out = gsddmm(bg.g, "u_add_v_copy_e", u=el, v=er, strategy=s)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5,
+                                   err_msg=f"block pad edges via {s}")
+
+
 @pytest.mark.parametrize("seed", [7, 8])
 def test_hetero_matches_loop_reference_seeded(seed):
     rng = np.random.default_rng(seed)
@@ -440,3 +569,8 @@ if HAS_HYPOTHESIS:
     @given(graphs(max_n=20, max_e=60, unique=True))
     def test_hetero_matches_loop_reference_hypothesis(data):
         check_hetero(*data)
+
+    @settings(max_examples=4, deadline=None)
+    @given(graphs(max_n=20, max_e=60, unique=True))
+    def test_gsddmm_matches_oracle_hypothesis(data):
+        check_gsddmm(*data)

@@ -1,11 +1,19 @@
-"""Fused edge-softmax Pallas kernel vs oracle + composition property."""
+"""Fused edge-softmax Pallas kernel vs oracle + composition property,
+plus the fused-attention megakernel (logits+softmax+aggregate as one
+pass, DESIGN.md §9) against its oracle and the multipass composition."""
 import numpy as np
+import jax
 import jax.numpy as jnp
 import pytest
 
 from repro.core import edge_softmax as edge_softmax_composed
+from repro.core import from_coo
+from repro.core.edge_softmax import edge_softmax_fused, fused_attention
 from repro.kernels.edge_softmax.ops import edge_softmax
-from repro.kernels.edge_softmax.ref import edge_softmax_ref
+from repro.kernels.edge_softmax.ops import \
+    fused_attention as fused_attention_kernel
+from repro.kernels.edge_softmax.ref import (edge_softmax_ref,
+                                            fused_attention_ref)
 
 from ..conftest import make_graph
 
@@ -53,3 +61,88 @@ def test_1d_logits():
     out = edge_softmax(g, logits)
     assert out.shape == (150,)
     assert np.isfinite(np.asarray(out)).all()
+
+
+def test_zero_degree_rows_differential():
+    """Composed chain vs single-pass form on a graph with zero-degree
+    destinations: both must stay NaN-free through forward AND backward
+    and agree everywhere — the composed max-shift carries the same
+    ``where(isfinite)`` guard as the fused path, so empty rows never
+    inject -inf into the subtract."""
+    rng = np.random.default_rng(4)
+    live = np.asarray([i for i in range(12) if i not in (5, 11)])
+    src = rng.integers(0, 12, 80)
+    dst = rng.choice(live, 80)
+    g = from_coo(src, dst, n_src=12, n_dst=12)     # dst 5, 11 empty
+    logits = jnp.asarray(rng.normal(size=(80, 3)).astype(np.float32))
+
+    a = edge_softmax_composed(g, logits)
+    b = edge_softmax_fused(g, logits)
+    assert np.isfinite(np.asarray(a)).all()
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-5, atol=1e-6)
+
+    ga = jax.grad(lambda l: jnp.sum(edge_softmax_composed(g, l) ** 2))(
+        logits)
+    gb = jax.grad(lambda l: jnp.sum(edge_softmax_fused(g, l) ** 2))(
+        logits)
+    assert np.isfinite(np.asarray(ga)).all()
+    assert np.isfinite(np.asarray(gb)).all()
+    np.testing.assert_allclose(np.asarray(ga), np.asarray(gb),
+                               rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------------------- #
+# fused attention (logits + leaky-relu + softmax + aggregate, one pass)
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("n,nnz,H,F", [(40, 200, 2, 8), (25, 90, 1, 4)])
+def test_fused_attention_megakernel_matches_ref(n, nnz, H, F):
+    rng = np.random.default_rng(nnz)
+    g, _, _ = make_graph(rng, n, n, nnz)
+    el = jnp.asarray(rng.normal(size=(n, H)).astype(np.float32))
+    er = jnp.asarray(rng.normal(size=(n, H)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(n, H, F)).astype(np.float32))
+    out = fused_attention_kernel(g, el, er, z)
+    src_c = np.asarray(g.src)[np.asarray(g.eid_inv)]
+    dst_c = np.asarray(g.dst)[np.asarray(g.eid_inv)]
+    ref = fused_attention_ref(src_c, dst_c, el, er, z, n)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fused_attention_strategies_match_multipass():
+    """core.fused_attention (fused AND pallas) == the multipass
+    composition (gsddmm logits → leaky → softmax → weighted gspmm),
+    forward and backward, including zero-degree destinations."""
+    from repro.core import gsddmm, gspmm
+    from repro.substrate.nn import leaky_relu
+
+    rng = np.random.default_rng(7)
+    n, nnz, H, F = 30, 140, 2, 4
+    live = np.asarray([i for i in range(n) if i != 13])
+    src = rng.integers(0, n, nnz)
+    dst = rng.choice(live, nnz)
+    g = from_coo(src, dst, n_src=n, n_dst=n)       # dst 13 empty
+    el = jnp.asarray(rng.normal(size=(n, H)).astype(np.float32))
+    er = jnp.asarray(rng.normal(size=(n, H)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(n, H, F)).astype(np.float32))
+
+    def multipass(el, er, z):
+        logits = gsddmm(g, "u_add_v_copy_e", u=el, v=er)
+        alpha = edge_softmax_composed(g, leaky_relu(logits))
+        return gspmm(g, "u_mul_e_add_v", u=z, e=alpha[:, :, None])
+
+    ref = multipass(el, er, z)
+    ref_g = jax.grad(lambda a: jnp.sum(multipass(*a) ** 2))((el, er, z))
+    for st in ("fused", "pallas"):
+        out = fused_attention(g, el, er, z, strategy=st)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-5,
+                                   err_msg=f"output via {st}")
+        out_g = jax.grad(lambda a: jnp.sum(
+            fused_attention(g, *a, strategy=st) ** 2))((el, er, z))
+        for got, want, nm in zip(out_g, ref_g, ("el", "er", "z")):
+            assert np.isfinite(np.asarray(got)).all()
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-4, atol=1e-4,
+                                       err_msg=f"d/d{nm} via {st}")

@@ -210,6 +210,40 @@ def test_lgnn_forward_and_grad():
     assert float(jnp.abs(grads["embed"]).sum()) > 0
 
 
+def test_edge_output_ops_planned(tiny):
+    """Acceptance: every edge-output op in GAT/GCMC/LGNN rides the
+    planned gSDDMM layer (``sddmm:<op>`` rows, requested='auto') and
+    the fused GAT pipeline logs its single ``attn:fused`` row — and the
+    fused pipeline matches the multipass layering."""
+    from repro.core import planner
+    from repro.data import bipartite_ratings, sbm_graph
+
+    g, feats, labels, tm, vm, nc, bundle = tiny
+    params = gat.init(jax.random.PRNGKey(2), feats.shape[1], 16, nc)
+    a = gat.forward(params, bundle, jnp.asarray(feats), attn="multipass")
+    b = gat.forward(params, bundle, jnp.asarray(feats), attn="fused")
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-4, atol=1e-5)
+
+    u, i, r = bipartite_ratings(40, 30, 150, 3, seed=4)
+    rg_fwd, rg_bwd = gcmc.build_level_relgraphs(u, i, r, 40, 30, 3)
+    g_all = from_coo(u, i, n_src=40, n_dst=30)
+    gp = gcmc.init(jax.random.PRNGKey(0), 40, 30, 8, 6, 3)
+    gcmc.forward(gp, (rg_fwd, rg_bwd, g_all), jnp.eye(40), jnp.eye(30))
+
+    src, dst, comm = sbm_graph(40, 2, 0.3, 0.05, seed=5)
+    gl = from_coo(src, dst, n_src=40, n_dst=40)
+    lgr = lgnn.build_line_graph(gl)
+    lp = lgnn.init(jax.random.PRNGKey(0), 40, 4, 8, 2)
+    lgnn.forward(lp, gl, lgr)
+
+    log = planner.plan_log()
+    # GAT logits + LGNN's Pᵀ endpoint sums; GCMC's bilinear decode
+    assert ("sddmm:u_add_v_copy_e", "auto") in log
+    assert ("sddmm:u_dot_v_add_e", "auto") in log
+    assert any(k[0] == "attn:fused" for k in log)
+
+
 @pytest.mark.parametrize("mod", [sage, gcn, gat],
                          ids=["sage", "gcn", "gat"])
 def test_sampled_training_end_to_end(tiny, mod):
