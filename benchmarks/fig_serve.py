@@ -1,0 +1,103 @@
+"""Serving-tier SLO benchmark (DESIGN.md §10) → BENCH_serve.json.
+
+Three measurements:
+
+* **SLO sweep** — p50/p99 request latency and throughput at N
+  concurrent closed-loop requesters (N = 1/4/8) driving a layer-wise
+  GCN server through the RequestQueue + prefetcher path, steady-state
+  recompile count logged per row (must be 0).
+* **layer-wise vs fan-out** — per-batch serve latency of the two
+  planned modes on the products-like config (the ROADMAP's scaled
+  OGB-Products shape class): row lookups through the hot-node cache
+  vs per-request L-hop re-expansion through the block path. The
+  layer-wise plan must win ≥ 2× (2210.03900's re-expansion tax).
+* **app coverage** — one serve latency row per app (GCN/SAGE/GAT/RGCN)
+  so every serve path stays on the perf record.
+
+``REPRO_BENCH_QUICK=1`` shrinks datasets/iterations for CI smoke.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.launch.serve_gnn import build_server, run_session
+
+from .common import row, time_fn
+
+QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+
+SLO_DATASET = "tiny" if QUICK else "reddit-like"
+CMP_DATASET = "tiny" if QUICK else "products-like"
+APP_DATASET = "tiny" if QUICK else "pubmed-like"
+CONCURRENCY = (1, 2, 4) if QUICK else (1, 4, 8)
+REQS_PER_CLIENT = 15 if QUICK else 50
+# production-shaped sampling fan-out for the re-expansion baseline
+# (full-neighbor would only widen the gap on power-law graphs)
+CMP_FANOUT = 5 if QUICK else 10
+
+
+def bench_slo() -> None:
+    srv = build_server("gcn", SLO_DATASET, mode="layerwise",
+                       classes=(8, 32, 128))
+    n_nodes = srv.g.n_src
+
+    def ids_fn(rng):
+        return rng.integers(0, n_nodes, 4)
+
+    for n_clients in CONCURRENCY:
+        res = run_session(srv, n_clients=n_clients,
+                          requests_per_client=REQS_PER_CLIENT,
+                          ids_fn=ids_fn, max_wait=0.0005)
+        cs = res["stats"]["out_cache"]
+        print(row(f"serve_slo_{SLO_DATASET}_gcn_c{n_clients}",
+                  res["p50_ms"] / 1e3,
+                  f"p50_ms={res['p50_ms']:.3f};p99_ms={res['p99_ms']:.3f};"
+                  f"rps={res['throughput_rps']:.0f};"
+                  f"recompiles={res['recompiles_steady']};"
+                  f"hit_ratio={cs.hit_ratio:.3f}"))
+        assert res["recompiles_steady"] == 0, \
+            f"steady-state recompiles at c={n_clients}"
+
+
+def bench_modes() -> None:
+    rng = np.random.default_rng(0)
+    times = {}
+    for mode in ("layerwise", "fanout"):
+        srv = build_server("gcn", CMP_DATASET, mode=mode, classes=(8,),
+                           fanout=CMP_FANOUT)
+        srv.warmup()
+        compiles = srv.compiles
+        ids = rng.integers(0, srv.g.n_src, 8)
+        t = time_fn(lambda: srv.serve([(0, ids)]),
+                    iters=5 if QUICK else 10)
+        times[mode] = t
+        print(row(f"serve_mode_{CMP_DATASET}_{mode}", t,
+                  f"recompiles={srv.compiles - compiles}"))
+        assert srv.compiles == compiles, f"{mode} recompiled while timed"
+    speedup = times["fanout"] / max(times["layerwise"], 1e-12)
+    print(row(f"serve_mode_{CMP_DATASET}_speedup", times["layerwise"],
+              f"layerwise_over_fanout={speedup:.1f}x"))
+
+
+def bench_apps() -> None:
+    rng = np.random.default_rng(1)
+    for app in ("gcn", "sage", "gat", "rgcn"):
+        srv = build_server(app, APP_DATASET, mode="auto", classes=(8,))
+        srv.warmup()
+        ids = rng.integers(0, srv.g.n_src, 8)
+        t = time_fn(lambda: srv.serve([(0, ids)]),
+                    iters=5 if QUICK else 10)
+        mode = srv.mode_for_class(8)
+        print(row(f"serve_app_{APP_DATASET}_{app}", t, f"mode={mode}"))
+
+
+def main() -> None:
+    bench_slo()
+    bench_modes()
+    bench_apps()
+
+
+if __name__ == "__main__":
+    main()

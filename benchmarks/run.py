@@ -14,6 +14,9 @@ Prints ``name,us_per_call,derived`` CSV rows. Sections:
   sddmm — planned gSDDMM + fused GAT attention: the multipass pipeline
           (logits → softmax → aggregate) vs the single-pass
           fused_attention, forward and forward+backward
+  serve — inference serving SLO: p50/p99 latency + throughput at N
+          concurrent requesters, layer-wise vs fan-out re-expansion,
+          per-app serve latency (steady state must log 0 recompiles)
 
 Run all: ``PYTHONPATH=src python -m benchmarks.run``
 One section: ``PYTHONPATH=src python -m benchmarks.run --only fig2``
@@ -34,7 +37,7 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     choices=["fig2", "fig3", "br", "prims", "spmm",
-                             "partitioned", "hetero", "sddmm"])
+                             "partitioned", "hetero", "sddmm", "serve"])
     ap.add_argument("--strategy", default=None,
                     choices=["auto", "push", "segment", "ell", "onehot",
                              "pallas"],
@@ -55,6 +58,7 @@ def main() -> None:
         "partitioned": "benchmarks.fig_partitioned",
         "hetero": "benchmarks.fig_hetero",
         "sddmm": "benchmarks.fig_sddmm",
+        "serve": "benchmarks.fig_serve",
     }
     import importlib
 

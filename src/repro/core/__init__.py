@@ -15,13 +15,18 @@ from .edge_softmax import (edge_softmax, edge_softmax_fused,
                            block_fused_attention,
                            fused_attention_partitioned)
 from .blocks import (BlockGraph, block_gspmm, block_supports,
-                     build_reverse_table, attach_reverse)
+                     build_reverse_table, attach_reverse,
+                     serve_block_signature)
 from .hetero import (RelGraph, from_typed, from_rels, hetero_gspmm,
                      hetero_block_gspmm)
+from .serving import (CacheStats, FeatureCache, MicroBatch, MicroBatcher,
+                      GNNServer, hot_node_ids, SERVE_APPS)
 
 __all__ = [
     "BlockGraph", "block_gspmm", "block_supports", "block_edge_softmax",
-    "build_reverse_table", "attach_reverse",
+    "build_reverse_table", "attach_reverse", "serve_block_signature",
+    "CacheStats", "FeatureCache", "MicroBatch", "MicroBatcher",
+    "GNNServer", "hot_node_ids", "SERVE_APPS",
     "RelGraph", "from_typed", "from_rels", "hetero_gspmm",
     "hetero_block_gspmm",
     "Graph", "from_coo", "reverse", "add_self_loops",

@@ -54,7 +54,31 @@ from .graph import Graph
 from .strategies import REDUCE_IDENTITY
 
 __all__ = ["BlockGraph", "block_gspmm", "block_supports",
-           "build_reverse_table", "attach_reverse"]
+           "build_reverse_table", "attach_reverse",
+           "serve_block_signature"]
+
+
+def serve_block_signature(batch_size: int, fanouts, n_layers=None):
+    """Predict ``MiniBatch.shape_signature()`` for a sampler config.
+
+    Mirrors ``NeighborSampler``'s static layer-size math — every batch
+    of ``batch_size`` seeds under ``fanouts`` (an int with ``n_layers``,
+    or a per-layer sequence) produces blocks with EXACTLY these
+    ``(n_src_pad, n_dst, n_edges_pad, fanout)`` signatures, outermost
+    hop first. The serving tier plans and pre-registers compile-cache
+    signatures from this without sampling anything.
+    """
+    if isinstance(fanouts, int):
+        if n_layers is None:
+            raise ValueError("int fanout needs n_layers")
+        fanouts = [fanouts] * int(n_layers)
+    fanouts = list(fanouts)
+    sizes = [int(batch_size)]
+    for f in reversed(fanouts):
+        sizes.append(sizes[-1] * (int(f) + 1))
+    sigs = [(sizes[li + 1], sizes[li], sizes[li] * int(f), int(f))
+            for li, f in enumerate(reversed(fanouts))]
+    return tuple(reversed(sigs))
 
 
 @jax.tree_util.register_pytree_node_class

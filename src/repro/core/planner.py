@@ -55,6 +55,7 @@ __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "HETERO_STRATEGIES", "plan_hetero", "clear_hetero_plans",
            "SDDMM_STRATEGIES", "sddmm_supports", "plan_sddmm",
            "clear_sddmm_plans", "ATTN_STRATEGIES", "plan_attention",
+           "SERVE_MODES", "plan_serve", "clear_serve_plans",
            "use_ring", "active_ring", "RingContext"]
 
 STRATEGIES = ("push", "segment", "ell", "onehot", "pallas", "ring")
@@ -1191,3 +1192,66 @@ def plan_attention(signature: Tuple[int, int, int], heads: int, feat: int,
         _ATTN_PLANS[key] = chosen
     _record("attn:fused", requested, chosen)
     return chosen
+
+
+# --------------------------------------------------------------------- #
+# serving planning — how a micro-batched inference request executes
+# --------------------------------------------------------------------- #
+# 'layerwise' — each layer computed once for ALL nodes per refresh
+#              (the full-graph training forward), requests answered by
+#              cached row lookups: per-batch cost is the refresh edge
+#              work amortized over the refresh period plus a gather;
+# 'fanout'   — per-request full-neighbor L-hop block expansion through
+#              forward_blocks: per-batch cost is the (shared-neighbor-
+#              re-expanding) padded block edge work, but results are
+#              never stale.
+# Logged per op as ``serve:<op>`` so plan logs show serving decisions
+# alongside kernel-strategy rows.
+SERVE_MODES = ("layerwise", "fanout")
+
+_SERVE_PLANS: Dict[Tuple, str] = {}
+
+# Host-side gather + cache bookkeeping per served row, in the same
+# edge-work currency as _THROUGHPUT (relative units, CPU-calibrated).
+_SERVE_LOOKUP_COST = 8.0
+
+
+def plan_serve(signature: Tuple[int, int, int, int], op_name: str = "infer",
+               requested: str = "auto", *, expansion_edges: int,
+               refresh_batches: int = 1024) -> str:
+    """Pick the serve-time execution mode; logged ``serve:<op_name>``.
+
+    ``signature`` = (n_nodes, n_edges, batch_class, n_layers);
+    ``expansion_edges`` is the static padded edge-slot count of ONE
+    fan-out batch of this class (sum over its block signatures);
+    ``refresh_batches`` amortizes the layer-wise full-graph recompute
+    over the expected batches between refreshes.
+    """
+    backend = jax.default_backend()
+    key = (tuple(signature), op_name, requested, backend,
+           int(expansion_edges), int(refresh_batches))
+    log_name = f"serve:{op_name}"
+    chosen = _SERVE_PLANS.get(key)
+    if chosen is None:
+        if requested == "auto":
+            n_edges, cls, layers = signature[1], signature[2], signature[3]
+            per = max(int(refresh_batches), 1)
+            cost = {
+                "layerwise": (n_edges * max(layers, 1)) / per
+                             + _SERVE_LOOKUP_COST * cls,
+                "fanout": float(expansion_edges),
+            }
+            chosen = min(cost, key=cost.__getitem__)
+        elif requested not in SERVE_MODES:
+            raise ValueError(
+                f"unknown serve mode {requested!r}; expected one of "
+                f"{SERVE_MODES + ('auto',)}")
+        else:
+            chosen = requested
+        _SERVE_PLANS[key] = chosen
+    _record(log_name, requested, chosen)
+    return chosen
+
+
+def clear_serve_plans() -> None:
+    _SERVE_PLANS.clear()

@@ -3,11 +3,12 @@ from .synthetic import (rmat_graph, sbm_graph, bipartite_ratings,
                         planted_node_labels, make_node_dataset, DATASETS,
                         relational_graph)
 from .sampler import NeighborSampler, SampledBlock, MiniBatch
-from .pipeline import Prefetcher, prefetch, SignatureTracker
+from .pipeline import (Prefetcher, prefetch, SignatureTracker,
+                       ServeRequest, RequestQueue)
 
 __all__ = [
     "rmat_graph", "sbm_graph", "bipartite_ratings", "planted_node_labels",
     "make_node_dataset", "DATASETS", "relational_graph", "NeighborSampler",
     "SampledBlock", "MiniBatch", "Prefetcher", "prefetch",
-    "SignatureTracker",
+    "SignatureTracker", "ServeRequest", "RequestQueue",
 ]

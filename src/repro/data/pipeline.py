@@ -15,11 +15,16 @@ run silently crawling.
 """
 from __future__ import annotations
 
+import itertools
 import queue
 import threading
-from typing import Iterable, Iterator, Set, Tuple
+import time
+from typing import Iterable, Iterator, List, Optional, Sequence, Set, Tuple
 
-__all__ = ["Prefetcher", "prefetch", "SignatureTracker"]
+import numpy as np
+
+__all__ = ["Prefetcher", "prefetch", "SignatureTracker",
+           "ServeRequest", "RequestQueue"]
 
 _DONE = object()
 
@@ -125,3 +130,104 @@ class SignatureTracker:
                 f"{len(self.seen)} distinct minibatch shape signatures "
                 f"(> {self.limit}): static padding is broken, every batch "
                 f"recompiles the train step")
+
+
+class ServeRequest:
+    """One in-flight inference request: node ids in, a future out.
+
+    Requesters block in :meth:`result`; the serving loop fulfils via
+    :meth:`set_result` / :meth:`set_error`. ``t_submit`` lets the
+    latency benchmark split queueing delay from compute.
+    """
+
+    __slots__ = ("rid", "ids", "t_submit", "_event", "_result", "_error")
+
+    def __init__(self, rid: int, ids: np.ndarray):
+        self.rid = rid
+        self.ids = ids
+        self.t_submit = time.perf_counter()
+        self._event = threading.Event()
+        self._result = None
+        self._error: Optional[BaseException] = None
+
+    def set_result(self, value) -> None:
+        self._result = value
+        self._event.set()
+
+    def set_error(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not served within "
+                               f"{timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+
+class RequestQueue:
+    """Concurrent request intake, iterable as coalescing windows.
+
+    Requester threads :meth:`submit` node-id lists and block on the
+    returned :class:`ServeRequest`. Iteration yields *lists* of
+    requests: each ``next()`` blocks for the first request, then keeps
+    draining until ``max_nodes`` total node ids are queued or
+    ``max_wait`` seconds pass — the batching window. The iterator is
+    exactly the shape :class:`Prefetcher` wraps, so window assembly
+    overlaps the device step the same way sampling overlaps training
+    (``prefetch(request_queue)`` in ``GNNServer.run``).
+    """
+
+    def __init__(self, max_nodes: Optional[int] = None,
+                 max_wait: float = 0.002):
+        self.max_nodes = max_nodes
+        self.max_wait = float(max_wait)
+        self._q: "queue.Queue" = queue.Queue()
+        self._rid = itertools.count()
+        self._closed = threading.Event()
+
+    def submit(self, node_ids: Sequence[int]) -> ServeRequest:
+        if self._closed.is_set():
+            raise RuntimeError("request queue is closed")
+        ids = np.asarray(node_ids, np.int64).reshape(-1)
+        req = ServeRequest(next(self._rid), ids)
+        self._q.put(req)
+        return req
+
+    def close(self) -> None:
+        """No more submissions; pending requests still drain, then the
+        serving loop's iteration ends."""
+        self._closed.set()
+        self._q.put(_DONE)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> List[ServeRequest]:
+        # block for the window's first request (or shutdown)
+        first = self._q.get()
+        if first is _DONE:
+            self._q.put(_DONE)      # keep later next() terminating too
+            raise StopIteration
+        window = [first]
+        n = len(first.ids)
+        deadline = time.perf_counter() + self.max_wait
+        while self.max_nodes is None or n < self.max_nodes:
+            wait = deadline - time.perf_counter()
+            if wait <= 0:
+                break
+            try:
+                req = self._q.get(timeout=wait)
+            except queue.Empty:
+                break
+            if req is _DONE:
+                self._q.put(_DONE)  # flush this window, end on the next
+                break
+            window.append(req)
+            n += len(req.ids)
+        return window

@@ -186,3 +186,23 @@ def forward_partitioned(params: Dict, pb: PartitionedBundle,
         if i < n_layers - 1:
             h = jax.nn.elu(h)
     return h, None
+
+
+def infer(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
+          strategy: str = "auto",
+          attn: Optional[str] = None) -> jnp.ndarray:
+    """Inference-mode forward — the serving tier's layer-wise refresh
+    entry point (dropout off, no rng threading)."""
+    return forward(params, bundle, x, strategy=strategy, train=False,
+                   attn=attn)
+
+
+def infer_blocks(params: Dict, blocks, x: jnp.ndarray, *,
+                 strategy: str = "auto",
+                 attn: Optional[str] = None) -> jnp.ndarray:
+    """Inference-mode block forward — the serving tier's fan-out path.
+
+    Defaults to the same multipass softmax family as the full forward
+    so the two serve modes agree to float tolerance."""
+    return forward_blocks(params, blocks, x, strategy=strategy,
+                          train=False, attn=attn)

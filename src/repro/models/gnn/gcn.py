@@ -112,3 +112,17 @@ def forward_partitioned(params: Dict, pb: PartitionedBundle,
         if i < n_layers - 1:
             h = jax.nn.relu(h)
     return h, tuple(halo_out) if halo is not None else None
+
+
+def infer(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
+          strategy: str = "auto") -> jnp.ndarray:
+    """Inference-mode forward — the serving tier's layer-wise refresh
+    entry point (dropout off, no rng threading)."""
+    return forward(params, bundle, x, strategy=strategy, train=False)
+
+
+def infer_blocks(params: Dict, blocks, x: jnp.ndarray, *,
+                 strategy: str = "auto") -> jnp.ndarray:
+    """Inference-mode block forward — the serving tier's fan-out path."""
+    return forward_blocks(params, blocks, x, strategy=strategy,
+                          train=False)

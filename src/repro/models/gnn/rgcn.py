@@ -132,3 +132,18 @@ def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
     return run_blocks(block_layer, params["layers"], blocks, x,
                       strategy=strategy, bwd_strategy=bwd_strategy,
                       activation=jax.nn.relu, train=train, rng=rng)
+
+
+def infer(params: Dict, rg, x: jnp.ndarray, *,
+          strategy: str = "auto") -> jnp.ndarray:
+    """Inference-mode forward — the serving tier's layer-wise refresh
+    entry point (no rng threading)."""
+    return forward(params, rg, x, strategy=strategy, train=False)
+
+
+def infer_blocks(params: Dict, blocks, x: jnp.ndarray, *,
+                 strategy: str = "auto") -> jnp.ndarray:
+    """Inference-mode relational block forward — the serving tier's
+    fan-out path."""
+    return forward_blocks(params, blocks, x, strategy=strategy,
+                          train=False)

@@ -113,3 +113,17 @@ def forward_sampled(params: Dict, blocks, feats_fn, *,
     zero-padded features."""
     h = feats_fn(blocks[0].src_ids)
     return forward_blocks(params, blocks, h, strategy=strategy)[:batch_size]
+
+
+def infer(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,
+          strategy: str = "auto") -> jnp.ndarray:
+    """Inference-mode forward — the serving tier's layer-wise refresh
+    entry point (dropout off, no rng threading)."""
+    return forward(params, bundle, x, strategy=strategy, train=False)
+
+
+def infer_blocks(params: Dict, blocks, x: jnp.ndarray, *,
+                 strategy: str = "auto") -> jnp.ndarray:
+    """Inference-mode block forward — the serving tier's fan-out path."""
+    return forward_blocks(params, blocks, x, strategy=strategy,
+                          train=False)

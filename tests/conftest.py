@@ -12,12 +12,18 @@ import sys
 import numpy as np
 import pytest
 
-# Host-platform device emulation is only exercised where the crash
-# convention below (signal death ⇒ negative returncode) is observable
-# and enough cores exist to make 8 emulated devices meaningful.
+# Host-platform device emulation needs the crash convention below
+# (signal death ⇒ negative returncode) to be observable — POSIX only.
+# Core count is NOT a precondition: XLA's emulated devices are threads,
+# so even a 1-CPU host runs 8 of them (slowly). The child env forces
+# the emulated device count, so the guard never silently skips on
+# small hosts (the PR-6 regression: 6 tests skipped on 1-CPU runners).
 MULTIDEVICE_UNSUPPORTED = (
-    "multi-device host-platform emulation needs a POSIX host with ≥ 2 "
-    "CPUs" if (os.name != "posix" or (os.cpu_count() or 1) < 2) else None)
+    "multi-device host-platform emulation needs a POSIX host (signal "
+    "death must be observable as a negative returncode)"
+    if os.name != "posix" else None)
+
+MULTIDEVICE_FLAGS = "--xla_force_host_platform_device_count=8"
 
 
 def run_multidevice(prog: str, *args: str, timeout: int = 900):
@@ -33,7 +39,10 @@ def run_multidevice(prog: str, *args: str, timeout: int = 900):
         pytest.skip(MULTIDEVICE_UNSUPPORTED)
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("XLA_FLAGS", None)
+    # force emulated devices from the OUTSIDE too: programs that set
+    # XLA_FLAGS themselves before importing jax keep working, and ones
+    # that don't still see 8 emulated devices on any host size
+    env["XLA_FLAGS"] = MULTIDEVICE_FLAGS
     r = subprocess.run([sys.executable, "-c", prog, *args], env=env,
                        capture_output=True, text=True, timeout=timeout)
     if r.returncode < 0:

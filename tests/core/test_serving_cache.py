@@ -1,0 +1,195 @@
+"""Property tests for the serving-tier hot-node cache (DESIGN.md §10).
+
+The cache's accounting is pinned against a brute-force oracle: a plain
+dict replaying the same lookup/update trace. Hypothesis drives the
+traces when installed; the same properties run over seeded random
+traces otherwise (the tier-1 environment has no hypothesis), so these
+tests never silently skip.
+"""
+import numpy as np
+import pytest
+
+from repro.core.serving import CacheStats, FeatureCache, hot_node_ids
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+N_ROWS, DIM = 32, 3
+
+
+class OracleCache:
+    """Reference LRU-with-pinned-set: a dict and a recency list, no
+    cleverness — exactly the accounting FeatureCache must reproduce."""
+
+    def __init__(self, store, capacity, pinned):
+        self.store = store
+        self.capacity = capacity
+        self.pinned = set(int(i) for i in pinned)
+        self.order = []                    # LRU order, oldest first
+        self.hits = self.misses = self.evictions = self.pinned_hits = 0
+
+    def lookup(self, ids):
+        for i in ids:
+            i = int(i)
+            if i in self.pinned:
+                self.hits += 1
+                self.pinned_hits += 1
+            elif i in self.order:
+                self.hits += 1
+                self.order.remove(i)
+                self.order.append(i)
+            else:
+                self.misses += 1
+                if self.capacity > 0:
+                    self.order.append(i)
+                    if len(self.order) > self.capacity:
+                        self.order.pop(0)
+                        self.evictions += 1
+
+
+def random_trace(rng, n_ops=60):
+    """A mixed lookup/update trace over a skewed id distribution (so
+    hits, misses, AND evictions all actually occur)."""
+    ops = []
+    for _ in range(n_ops):
+        if rng.random() < 0.8:
+            k = int(rng.integers(1, 6))
+            # zipf-ish skew: half the traffic on the first few rows
+            hot = rng.integers(0, 4, k)
+            cold = rng.integers(0, N_ROWS, k)
+            ids = np.where(rng.random(k) < 0.5, hot, cold)
+            ops.append(("lookup", ids))
+        else:
+            ids = rng.integers(0, N_ROWS, int(rng.integers(1, 4)))
+            ops.append(("update", ids))
+    return ops
+
+
+def replay(ops, capacity, n_pinned):
+    store = np.arange(N_ROWS * DIM, dtype=np.float32).reshape(N_ROWS, DIM)
+    pinned = np.arange(n_pinned)
+    cache = FeatureCache(store.copy(), capacity, pinned=pinned)
+    oracle = OracleCache(store.copy(), capacity, pinned)
+    bump = 0.0
+    for kind, ids in ops:
+        if kind == "lookup":
+            got = cache.lookup(ids)
+            oracle.lookup(ids)
+            # served values always equal the CURRENT store rows
+            np.testing.assert_array_equal(got, oracle.store[ids])
+        else:
+            bump += 1.0
+            rows = oracle.store[ids] + bump
+            cache.update(ids, rows)
+            oracle.store[ids] = rows
+    return cache, oracle
+
+
+def assert_matches_oracle(cache, oracle):
+    s = cache.stats()
+    assert (s.hits, s.misses, s.evictions, s.pinned_hits) == (
+        oracle.hits, oracle.misses, oracle.evictions, oracle.pinned_hits)
+    assert s.size == len(oracle.order)
+    # same resident set, same LRU order ⇒ identical future behavior
+    assert list(cache._lru) == oracle.order
+    assert s.hit_ratio == pytest.approx(
+        oracle.hits / max(oracle.hits + oracle.misses, 1))
+
+
+@pytest.mark.parametrize("seed", range(8))
+@pytest.mark.parametrize("capacity,n_pinned", [(4, 0), (4, 3), (0, 2),
+                                               (100, 5)])
+def test_accounting_matches_oracle_seeded(seed, capacity, n_pinned):
+    rng = np.random.default_rng(seed)
+    cache, oracle = replay(random_trace(rng), capacity, n_pinned)
+    assert_matches_oracle(cache, oracle)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.integers(0, 2**31 - 1), st.integers(0, 6),
+           st.integers(0, 5))
+    @settings(max_examples=40, deadline=None)
+    def test_accounting_matches_oracle_hypothesis(seed, capacity, n_pinned):
+        rng = np.random.default_rng(seed)
+        cache, oracle = replay(random_trace(rng), capacity, n_pinned)
+        assert_matches_oracle(cache, oracle)
+
+
+def test_lru_eviction_order_exact():
+    store = np.eye(8, dtype=np.float32)
+    c = FeatureCache(store, capacity=3)
+    c.lookup([0, 1, 2])          # resident: 0,1,2 (0 oldest)
+    c.lookup([0])                # refreshes 0 → 1 is now oldest
+    c.lookup([3])                # evicts 1
+    assert c.evictions == 1
+    assert list(c._lru) == [2, 0, 3]
+    c.lookup([1])                # 1 is a miss again, evicts 2
+    assert c.misses == 5 and c.evictions == 2
+    assert list(c._lru) == [0, 3, 1]
+
+
+def test_update_never_serves_stale_rows():
+    store = np.zeros((6, 2), np.float32)
+    c = FeatureCache(store, capacity=4, pinned=[0])
+    c.lookup([0, 1, 2])          # 0 pinned-resident, 1/2 LRU-resident
+    c.update([0, 1, 5], np.ones((3, 2), np.float32))
+    got = c.lookup([0, 1, 5, 2])
+    np.testing.assert_array_equal(got[0], [1, 1])    # pinned refreshed
+    np.testing.assert_array_equal(got[1], [1, 1])    # resident refreshed
+    np.testing.assert_array_equal(got[2], [1, 1])    # non-resident
+    np.testing.assert_array_equal(got[3], [0, 0])    # untouched row
+    # explicit invalidation also re-reads the store
+    c.invalidate()
+    assert c.stats().size == 0
+    np.testing.assert_array_equal(c.lookup([1])[0], [1, 1])
+
+
+def test_replace_store_refreshes_residents():
+    c = FeatureCache(np.zeros((4, 2), np.float32), capacity=2, pinned=[3])
+    c.lookup([1, 3])
+    c.replace_store(np.full((4, 2), 7, np.float32))
+    hits_before = c.hits
+    got = c.lookup([1, 3])
+    np.testing.assert_array_equal(got, np.full((2, 2), 7, np.float32))
+    assert c.hits == hits_before + 2     # still resident — refresh, not drop
+
+
+def test_pinned_set_never_evicted():
+    rng = np.random.default_rng(0)
+    store = rng.standard_normal((N_ROWS, DIM)).astype(np.float32)
+    pinned = [0, 7, 13]
+    c = FeatureCache(store, capacity=2, pinned=pinned)
+    for _ in range(50):
+        c.lookup(rng.integers(0, N_ROWS, 5))
+        for p in pinned:
+            assert c.resident(p)
+    assert c.stats().pinned == 3
+    # pinned traffic never counts as misses after construction
+    h0 = c.pinned_hits
+    c.lookup(pinned * 3)
+    assert c.pinned_hits == h0 + 9 and c.stats().pinned == 3
+
+
+def test_duplicate_ids_hit_on_second_occurrence():
+    c = FeatureCache(np.eye(4, dtype=np.float32), capacity=2)
+    c.lookup([2, 2, 2])
+    assert c.misses == 1 and c.hits == 2
+
+
+def test_hot_node_ids_degree_ordered():
+    deg = np.array([5, 9, 1, 9, 0])
+    np.testing.assert_array_equal(hot_node_ids(deg, 3), [1, 3, 0])
+    assert hot_node_ids(deg, 0).size == 0
+    assert hot_node_ids(deg, 99).shape == (5,)
+
+
+def test_stats_is_a_pytree():
+    import jax
+    s = CacheStats(hits=3, misses=1, size=2, capacity=4)
+    leaves = jax.tree_util.tree_leaves(s)
+    assert 3 in leaves and s.hit_ratio == 0.75
+    doubled = jax.tree_util.tree_map(lambda x: x * 2, s)
+    assert doubled.hits == 6

@@ -1,0 +1,171 @@
+"""Request micro-batching tests (DESIGN.md §10).
+
+Three contracts: signature-class assignment is a pure function of the
+request sizes (deterministic), pad rows are structurally unreachable
+from any response, and a steady-state replay of 100 batches observes
+zero new compile signatures after the first batch per class.
+"""
+import numpy as np
+import pytest
+
+from repro.core import from_coo
+from repro.core.blocks import serve_block_signature
+from repro.core.serving import MicroBatcher
+from repro.data import (NeighborSampler, RequestQueue, SignatureTracker,
+                        prefetch)
+from repro.data.synthetic import rmat_graph
+
+
+# --------------------------------------------------------------------- #
+# class assignment
+# --------------------------------------------------------------------- #
+def test_class_assignment_deterministic():
+    b = MicroBatcher(classes=(8, 32, 128))
+    assert [b.assign_class(n) for n in (1, 8, 9, 32, 33, 128, 500)] == \
+        [8, 8, 32, 32, 128, 128, 128]
+    # same requests → identical batches, run twice
+    reqs = [(0, [3, 1]), (1, [4]), (2, list(range(40)))]
+    a, c = b.coalesce(reqs), b.coalesce(reqs)
+    assert [(x.cls, x.n_real, x.spans) for x in a] == \
+        [(x.cls, x.n_real, x.spans) for x in c]
+    for x, y in zip(a, c):
+        np.testing.assert_array_equal(x.ids, y.ids)
+
+
+def test_classes_validated():
+    with pytest.raises(ValueError):
+        MicroBatcher(classes=())
+    with pytest.raises(ValueError):
+        MicroBatcher(classes=(4, 4))
+    with pytest.raises(ValueError):
+        MicroBatcher(classes=(0, 8))
+    with pytest.raises(ValueError):
+        MicroBatcher().assign_class(0)
+
+
+def test_coalesce_packs_and_flushes():
+    b = MicroBatcher(classes=(4, 8))
+    batches = b.coalesce([(0, [1, 2, 3]), (1, [4, 5, 6]),   # 6 → class 8
+                          (2, [7, 8, 9])])                  # overflow → new
+    assert [x.cls for x in batches] == [8, 4]
+    assert batches[0].n_real == 6 and batches[1].n_real == 3
+    # ids laid out in arrival order, pad tail is -1
+    np.testing.assert_array_equal(batches[0].ids,
+                                  [1, 2, 3, 4, 5, 6, -1, -1])
+
+
+def test_oversize_request_splits_into_chunks():
+    b = MicroBatcher(classes=(4,))
+    batches = b.coalesce([(7, np.arange(10))])
+    assert [x.cls for x in batches] == [4, 4, 4]
+    assert [x.n_real for x in batches] == [4, 4, 2]
+    got = np.concatenate([x.ids[:x.n_real] for x in batches])
+    np.testing.assert_array_equal(got, np.arange(10))
+
+
+def test_rejects_bad_requests():
+    b = MicroBatcher()
+    with pytest.raises(ValueError):
+        b.coalesce([(0, [])])
+    with pytest.raises(ValueError):
+        b.coalesce([(0, [3, -1])])
+
+
+# --------------------------------------------------------------------- #
+# pad rows never leak
+# --------------------------------------------------------------------- #
+@pytest.mark.parametrize("seed", range(5))
+def test_pad_rows_never_leak_into_responses(seed):
+    rng = np.random.default_rng(seed)
+    b = MicroBatcher(classes=(4, 16, 64))
+    reqs = [(rid, rng.integers(0, 100, rng.integers(1, 9)))
+            for rid in range(12)]
+    sizes = {rid: len(ids) for rid, ids in reqs}
+    for batch in b.coalesce(reqs):
+        # poison every pad row; real rows carry their global id
+        vals = np.full((batch.cls, 2), np.nan, np.float32)
+        vals[:batch.n_real] = batch.ids[:batch.n_real, None]
+        out = b.unpack(batch, vals)
+        for rid, rows in out.items():
+            assert np.isfinite(rows).all(), "pad row leaked into response"
+            assert rows.shape[0] <= sizes[rid]
+    # spans tile [0, n_real) exactly — no gaps, no overlap, no pad reach
+    for batch in b.coalesce(reqs):
+        edges = sorted(batch.spans, key=lambda s: s[1])
+        assert edges[0][1] == 0 and edges[-1][2] == batch.n_real
+        for (_, _, stop), (_, start, _) in zip(edges, edges[1:]):
+            assert stop == start
+
+
+# --------------------------------------------------------------------- #
+# steady state: zero recompiles over a 100-batch replay
+# --------------------------------------------------------------------- #
+def test_steady_state_replay_zero_recompiles():
+    rng = np.random.default_rng(0)
+    src, dst, n = rmat_graph(6, 400, seed=3)   # power-law-ish degrees
+    g = from_coo(src, dst, n_src=n, n_dst=n)
+    fanout = int(np.asarray(g.in_degrees).max())
+    classes = (4, 16)
+    samplers = {c: NeighborSampler(g, [fanout, fanout], batch_size=c,
+                                   seed=0)
+                for c in classes}
+    batcher = MicroBatcher(classes=classes)
+    tracker = SignatureTracker(limit=len(classes))
+    compiles = []
+    for i in range(100):
+        k = int(rng.integers(1, 17))
+        reqs = [(i, rng.integers(0, g.n_src, k))]
+        for batch in batcher.coalesce(reqs):
+            mb = samplers[batch.cls].sample(
+                batch.ids[:batch.n_real],
+                np.zeros(batch.n_real, np.int64))
+            sig = (batch.cls,) + mb.shape_signature()
+            if tracker.observe(sig):
+                compiles.append(i)
+            tracker.assert_bounded()
+            # the predicted signature IS the sampled one — the serving
+            # tier can pre-register compiles without sampling
+            assert mb.shape_signature() == serve_block_signature(
+                batch.cls, fanout, 2)
+    # every distinct signature appeared in the warmup prefix, none later
+    assert len(tracker.seen) == len(classes)
+    assert all(i < 10 for i in compiles), \
+        f"recompile after steady state: batches {compiles}"
+
+
+# --------------------------------------------------------------------- #
+# the request queue
+# --------------------------------------------------------------------- #
+def test_request_queue_windows_and_futures():
+    rq = RequestQueue(max_wait=0.01)
+    r1 = rq.submit([1, 2])
+    r2 = rq.submit([3])
+    window = next(iter(rq))
+    assert [r.rid for r in window] == [r1.rid, r2.rid]
+    np.testing.assert_array_equal(window[0].ids, [1, 2])
+    r1.set_result("a")
+    assert r1.result(timeout=1) == "a" and r1.done() and not r2.done()
+    r2.set_error(RuntimeError("boom"))
+    with pytest.raises(RuntimeError, match="boom"):
+        r2.result(timeout=1)
+
+
+def test_request_queue_close_drains_through_prefetcher():
+    rq = RequestQueue(max_wait=0.001)
+    reqs = [rq.submit([i]) for i in range(5)]
+    rq.close()
+    with pytest.raises(RuntimeError):
+        rq.submit([9])
+    seen = [r for window in prefetch(rq, depth=2) for r in window]
+    assert {r.rid for r in seen} == {r.rid for r in reqs}
+    # a closed-and-drained queue stays exhausted
+    assert next(iter(rq), None) is None
+
+
+def test_request_queue_window_caps_at_max_nodes():
+    rq = RequestQueue(max_nodes=4, max_wait=5.0)   # long window: the cap
+    for i in range(4):                             # must cut it, not time
+        rq.submit([i, 100 + i])
+    w1 = next(iter(rq))
+    assert sum(len(r.ids) for r in w1) >= 4
+    assert len(w1) < 4

@@ -1,0 +1,202 @@
+"""Differential serving parity (DESIGN.md §10).
+
+Every serve path is pinned to the training-path full-graph forward it
+must reproduce: for each app (GCN/SAGE/GAT/RGCN) and each serve mode
+(layer-wise, full-neighbor fan-out), micro-batched served predictions
+equal the direct full forward to 1e-5 — across batch splits, request
+orderings, and duplicate node ids inside one batch.
+
+The graph is built with a small uniform in-degree so full-neighbor
+fan-out blocks stay tiny (the DEFAULT fanout is the max in-degree,
+which makes the fan-out path exact, not approximate).
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import GNNServer, from_coo
+from repro.data import RequestQueue
+from repro.models.gnn import gat, gcn, rgcn, sage
+from repro.models.gnn.common import make_bundle
+
+N, D_IN, D_HID, K_IN = 100, 8, 8, 4
+CLASSES = (4, 16)
+APPS = ("gcn", "sage", "gat", "rgcn")
+MODES = ("layerwise", "fanout")
+TOL = 1e-5
+
+
+def _square_graph(rng, n=N, k=K_IN):
+    """Every node gets exactly ``k`` in-edges → max in-degree is k and
+    the full-neighbor fan-out expansion stays small."""
+    src = rng.integers(0, n, (n, k)).reshape(-1)
+    dst = np.repeat(np.arange(n), k)
+    return from_coo(src, dst, n_src=n, n_dst=n)
+
+
+_built = {}
+
+
+def _setup(app):
+    """(server-ctor kwargs, reference full-forward logits) per app —
+    built once, shared by every mode/parametrization."""
+    if app in _built:
+        return _built[app]
+    rng = np.random.default_rng(17)
+    key = jax.random.PRNGKey(17)
+    feats = rng.standard_normal((N, D_IN)).astype(np.float32)
+    if app == "rgcn":
+        n_rel = 3
+        rels = [(rng.integers(0, N, N * 2), rng.integers(0, N, N * 2))
+                for _ in range(n_rel)]
+        params = rgcn.init(key, D_IN, D_HID, 5, n_rel)
+        ref = rgcn.infer(params, rgcn.build_relgraph(rels, N),
+                         jnp.asarray(feats))
+        kw = dict(g=None, rels=rels)
+    else:
+        g = _square_graph(rng)
+        mod = {"gcn": gcn, "sage": sage, "gat": gat}[app]
+        params = mod.init(key, D_IN, D_HID, 5)
+        ref = mod.infer(params, make_bundle(g), jnp.asarray(feats))
+        kw = dict(g=g)
+    _built[app] = (app, params, feats, kw, np.asarray(ref))
+    return _built[app]
+
+
+_servers = {}
+
+
+def _server(app, mode):
+    if (app, mode) not in _servers:
+        name, params, feats, kw, _ = _setup(app)
+        _servers[(app, mode)] = GNNServer(name, params, feats=feats,
+                                          mode=mode, classes=CLASSES,
+                                          cache_rows=32, pin_hot=8, **kw)
+    return _servers[(app, mode)]
+
+
+def _check(app, mode, requests):
+    *_, ref = _setup(app)
+    srv = _server(app, mode)
+    out = srv.serve(requests)
+    for rid, ids in requests:
+        got = out[rid]
+        assert got.shape == (len(np.atleast_1d(ids)), ref.shape[1])
+        np.testing.assert_allclose(got, ref[np.asarray(ids)], atol=TOL,
+                                   err_msg=f"{app}/{mode} rid={rid}")
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("app", APPS)
+def test_served_equals_full_forward(app, mode):
+    rng = np.random.default_rng(3)
+    _check(app, mode, [(0, rng.integers(0, N, 6))])
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("app", APPS)
+def test_parity_across_batch_splits(app, mode):
+    ids = np.random.default_rng(4).integers(0, N, 12)
+    # one request, many small requests, and uneven splits — all equal
+    _check(app, mode, [(0, ids)])
+    _check(app, mode, [(i, ids[i:i + 1]) for i in range(len(ids))])
+    _check(app, mode, [(0, ids[:5]), (1, ids[5:7]), (2, ids[7:])])
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("app", APPS)
+def test_parity_across_request_orderings(app, mode):
+    rng = np.random.default_rng(5)
+    ids = rng.integers(0, N, 9)
+    for _ in range(3):
+        perm = rng.permutation(len(ids))
+        _check(app, mode, [(0, ids[perm])])
+
+
+@pytest.mark.parametrize("mode", MODES)
+@pytest.mark.parametrize("app", APPS)
+def test_parity_with_duplicate_ids_in_one_batch(app, mode):
+    ids = np.array([7, 7, 3, 99, 3, 7, 0, 0])
+    _check(app, mode, [(0, ids)])
+    # duplicates across requests coalesced into the SAME batch too
+    _check(app, mode, [(0, [7, 3, 7]), (1, [3, 3]), (2, [7])])
+
+
+def test_zero_steady_state_recompiles_all_apps():
+    for app in APPS:
+        for mode in MODES:
+            srv = _server(app, mode)
+            srv.warmup()
+            before = srv.compiles
+            rng = np.random.default_rng(6)
+            for i in range(10):
+                srv.serve([(i, rng.integers(0, N, rng.integers(1, 17)))])
+            assert srv.compiles == before, f"{app}/{mode} recompiled"
+            srv.tracker.assert_bounded()
+
+
+def test_plan_log_has_serve_rows():
+    from repro.core import planner
+    _server("gcn", "layerwise").serve([(0, [1])])
+    log = planner.plan_log()
+    assert any(name == "serve:infer" for name, *_ in log)
+
+
+def test_mode_auto_resolves_per_planner():
+    app, params, feats, kw, _ = _setup("gcn")
+    srv = GNNServer(app, params, feats=feats, classes=CLASSES,
+                    cache_rows=32, pin_hot=8, **kw)
+    for cls in CLASSES:
+        assert srv.mode_for_class(cls) in MODES
+    # tiny graph + tiny fanout: re-using the full-graph table wins
+    assert srv.mode_for_class(CLASSES[0]) == "layerwise"
+
+
+def test_update_features_invalidates_served_table():
+    app, params, feats, kw, _ = _setup("gcn")
+    srv = GNNServer(app, params, feats=feats.copy(), mode="layerwise",
+                    classes=CLASSES, cache_rows=32, pin_hot=8, **kw)
+    ids = np.arange(10)
+    before = srv.serve([(0, ids)])[0]
+    srv.update_features([2], 10 + feats[2])
+    after = srv.serve([(1, ids)])[1]
+    # node 2's feature reaches its OWN row and its out-neighbors' rows;
+    # nothing is served from the pre-update table
+    ref = np.asarray(gcn.infer(params, make_bundle(kw["g"]),
+                               jnp.asarray(srv.feats)))
+    np.testing.assert_allclose(after, ref[ids], atol=TOL)
+    assert not np.allclose(before, after, atol=TOL)
+
+
+def test_end_to_end_request_queue_session():
+    """Concurrent requesters through RequestQueue + prefetcher: every
+    future resolves to full-forward parity."""
+    app, params, feats, kw, ref = _setup("gcn")
+    srv = _server("gcn", "layerwise")
+    rq = RequestQueue(max_wait=0.001)
+    results = {}
+
+    def client(cid):
+        rng = np.random.default_rng(cid)
+        for j in range(5):
+            ids = rng.integers(0, N, rng.integers(1, 9))
+            results[(cid, j)] = (ids, rq.submit(ids))
+
+    threads = [threading.Thread(target=client, args=(c,)) for c in range(3)]
+    for t in threads:
+        t.start()
+
+    def close_when_done():
+        for t in threads:
+            t.join()
+        rq.close()
+
+    threading.Thread(target=close_when_done).start()
+    srv.run(rq)
+    assert len(results) == 15
+    for ids, req in results.values():
+        np.testing.assert_allclose(req.result(timeout=5), ref[ids],
+                                   atol=TOL)
