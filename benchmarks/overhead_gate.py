@@ -1,0 +1,76 @@
+"""CI telemetry-overhead gate (DESIGN.md §11).
+
+Runs the quick serve SLO benchmark twice per trial — telemetry OFF
+then ON, interleaved so machine drift hits both arms equally — and
+fails (exit 1) if the median telemetry-on p50 regresses more than
+``GATE_REL`` over telemetry-off plus a small absolute epsilon (the
+quick bench p50 is ~1–3 ms, so a pure ratio gate would be decided by
+scheduler noise).
+
+The toggle is in-process (:func:`repro.obs.set_enabled`); the server
+is rebuilt per arm because instruments resolved at construction time
+(feature-cache counters) bind to the enabled state then in force.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.overhead_gate``
+Writes ``overhead_gate.json`` next to the BENCH artifacts.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+from repro import obs
+from repro.launch.serve_gnn import build_server, run_session
+
+GATE_REL = 1.05          # on may be at most 5% over off ...
+GATE_ABS_MS = 0.05       # ... plus this absolute floor
+TRIALS = int(os.environ.get("REPRO_GATE_TRIALS", "3"))
+
+
+def _one_session(app: str = "gcn", dataset: str = "tiny") -> float:
+    srv = build_server(app, dataset, classes=(8, 32))
+    n_nodes = srv.g.n_src
+
+    def ids_fn(rng: np.random.Generator) -> np.ndarray:
+        return rng.integers(0, n_nodes, 4)
+
+    res = run_session(srv, n_clients=2, requests_per_client=8,
+                      ids_fn=ids_fn)
+    return res["p50_ms"]
+
+
+def main() -> int:
+    p50 = {"off": [], "on": []}
+    for trial in range(TRIALS):
+        for arm, on in (("off", False), ("on", True)):
+            prev = obs.set_enabled(on)
+            try:
+                obs.clear_trace()          # bound the span buffer
+                p50[arm].append(_one_session())
+            finally:
+                obs.set_enabled(prev)
+        print(f"# trial {trial}: off {p50['off'][-1]:.3f} ms, "
+              f"on {p50['on'][-1]:.3f} ms", file=sys.stderr)
+
+    med_off = float(np.median(p50["off"]))
+    med_on = float(np.median(p50["on"]))
+    limit = med_off * GATE_REL + GATE_ABS_MS
+    ok = med_on <= limit
+    result = {"p50_off_ms": med_off, "p50_on_ms": med_on,
+              "overhead_pct": 100.0 * (med_on / med_off - 1.0),
+              "limit_ms": limit, "trials": TRIALS, "ok": ok,
+              "samples": p50}
+    with open("overhead_gate.json", "w") as f:
+        json.dump(result, f, indent=2, sort_keys=True)
+    print(f"# telemetry overhead: off {med_off:.3f} ms → on "
+          f"{med_on:.3f} ms ({result['overhead_pct']:+.1f}%), "
+          f"limit {limit:.3f} ms → {'OK' if ok else 'FAIL'}",
+          file=sys.stderr)
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

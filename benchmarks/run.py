@@ -46,6 +46,9 @@ def main() -> None:
     ap.add_argument("--json", default=None,
                     help="output path for the JSON results "
                          "(default BENCH_<section>.json)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="also export the run's spans as Chrome-trace "
+                         "JSON (open in Perfetto)")
     args = ap.parse_args()
 
     print("name,us_per_call,derived")
@@ -79,13 +82,22 @@ def main() -> None:
     out_path = args.json or f"BENCH_{args.only or 'all'}.json"
     plans = {f"{op}|{requested}": chosen
              for (op, requested), chosen in planner.plan_log().items()}
+    from repro import obs
+    drift = planner.drift_report()
     with open(out_path, "w") as f:
         json.dump({"section": args.only or "all",
                    "strategy": args.strategy,
                    "rows": common.RESULTS,
-                   "plans": plans}, f, indent=2, sort_keys=True)
-    print(f"# wrote {out_path} ({len(common.RESULTS)} rows)",
-          file=sys.stderr)
+                   "plans": plans,
+                   "metrics": obs.snapshot(),
+                   "plan_events": obs.plan_events(),
+                   "drift": drift}, f, indent=2, sort_keys=True)
+    print(f"# wrote {out_path} ({len(common.RESULTS)} rows, "
+          f"{len(drift)} drift rows)", file=sys.stderr)
+    if args.trace:
+        obs.export_chrome_trace(args.trace)
+        print(f"# wrote {args.trace} ({len(obs.trace_events())} span "
+              f"events)", file=sys.stderr)
 
 
 if __name__ == '__main__':

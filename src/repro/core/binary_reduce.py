@@ -32,6 +32,7 @@ import jax.numpy as jnp
 from . import planner
 from . import strategies as S
 from .graph import Graph
+from ..obs.events import timed as _timed
 from .tiling import ELLPack, TilePack
 
 __all__ = ["BRSpec", "parse_op", "gspmm", "gsddmm", "copy_reduce",
@@ -209,7 +210,10 @@ def gspmm(g: Graph, op_name: str, *,
     plan = planner.plan_gspmm(g, spec, lhs_data, rhs_data,
                               requested=strategy, cache=cache,
                               ell=ell, tiles=tiles, runner=runner)
-    return _execute(g, spec, lhs_data, rhs_data, plan)
+    # eager calls are fenced + timed under the op's plan-log key, so
+    # drift_report can hold the cost model against reality
+    return _timed(spec.name,
+                  lambda: _execute(g, spec, lhs_data, rhs_data, plan))
 
 
 # --------------------------------------------------------------------- #
@@ -277,8 +281,12 @@ def gsddmm(g: Graph, op_name: str, *,
                 and (rhs_data is None
                      or jnp.issubdtype(rhs_data.dtype, jnp.floating)))
     if floating:
-        return _sddmm_exec_rev(spec, chosen, g, lhs_data, rhs_data)
-    return _sddmm_execute(g, spec, lhs_data, rhs_data, chosen)
+        return _timed(f"sddmm:{spec.name}",
+                      lambda: _sddmm_exec_rev(spec, chosen, g,
+                                              lhs_data, rhs_data))
+    return _timed(f"sddmm:{spec.name}",
+                  lambda: _sddmm_execute(g, spec, lhs_data, rhs_data,
+                                         chosen))
 
 
 def _sddmm_execute(g: Graph, spec: BRSpec, lhs_data, rhs_data,

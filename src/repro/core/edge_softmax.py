@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 
 from . import planner
+from ..obs.events import timed as _timed
 from .binary_reduce import gspmm
 from .blocks import BlockGraph, block_gspmm
 from .graph import Graph
@@ -221,10 +222,14 @@ def fused_attention(g: Graph, el: jnp.ndarray, er: jnp.ndarray,
                          "use fused_attention_partitioned")
 
     slope = float(negative_slope)
+    # eager calls are fenced + timed under the attention plan-log key
     if jnp.issubdtype(z.dtype, jnp.floating):
-        out = _attention_rev(chosen, slope, g, el, er, z)
+        out = _timed("attn:fused",
+                     lambda: _attention_rev(chosen, slope, g, el, er, z))
     else:
-        out = _attention_execute(g, el, er, z, slope, chosen)
+        out = _timed("attn:fused",
+                     lambda: _attention_execute(g, el, er, z, slope,
+                                                chosen))
     return out[:, 0, :] if squeeze else out
 
 

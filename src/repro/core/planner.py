@@ -44,6 +44,9 @@ import numpy as np
 from .graph import Graph
 from .tiling import (ELLClass, ELLPack, TilePack, build_ell,
                      build_ell_uniform, build_tiles)
+from ..obs import events as _obs_events
+from ..obs import metrics as _obs_metrics
+from ..obs.events import drift_report, plan_events  # noqa: F401 (re-export)
 
 __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "compute_stats", "estimate_cost", "plan_gspmm", "supports",
@@ -56,7 +59,8 @@ __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "SDDMM_STRATEGIES", "sddmm_supports", "plan_sddmm",
            "clear_sddmm_plans", "ATTN_STRATEGIES", "plan_attention",
            "SERVE_MODES", "plan_serve", "clear_serve_plans",
-           "use_ring", "active_ring", "RingContext"]
+           "use_ring", "active_ring", "RingContext",
+           "drift_report", "plan_events"]
 
 STRATEGIES = ("push", "segment", "ell", "onehot", "pallas", "ring")
 
@@ -148,6 +152,11 @@ def pack_build_totals() -> Dict[str, int]:
     return dict(_PACK_BUILDS)
 
 
+def _note_pack_build(kind: str) -> None:
+    _PACK_BUILDS[kind] += 1
+    _obs_metrics.counter(f"planner.pack_builds.{kind}").inc()
+
+
 @jax.tree_util.register_pytree_node_class
 class PlanCache:
     """Lazily-built, memoized packs + stats for one :class:`Graph`.
@@ -224,14 +233,14 @@ class PlanCache:
                 if g is None:
                     return None
                 self._ell = build_ell(g, cap)
-                _PACK_BUILDS["ell"] += 1
+                _note_pack_build("ell")
             return self._ell
         if cap not in self._ell_by_cap:
             g = self._graph()
             if g is None:
                 return None
             self._ell_by_cap[cap] = build_ell(g, cap)
-            _PACK_BUILDS["ell"] += 1
+            _note_pack_build("ell")
         return self._ell_by_cap[cap]
 
     def tiles(self, bm: int = 128, bk: int = 128, eb: int = 256
@@ -243,14 +252,14 @@ class PlanCache:
                 if g is None:
                     return None
                 self._tiles = build_tiles(g, bm, bk, eb)
-                _PACK_BUILDS["tiles"] += 1
+                _note_pack_build("tiles")
             return self._tiles
         if geom not in self._tiles_by_geom:
             g = self._graph()
             if g is None:
                 return None
             self._tiles_by_geom[geom] = build_tiles(g, bm, bk, eb)
-            _PACK_BUILDS["tiles"] += 1
+            _note_pack_build("tiles")
         return self._tiles_by_geom[geom]
 
     def ell_uniform(self, width: int) -> Optional[ELLClass]:
@@ -259,7 +268,7 @@ class PlanCache:
             if g is None:
                 return None
             self._uniform[width] = build_ell_uniform(g, width)
-            _PACK_BUILDS["ell_uniform"] += 1
+            _note_pack_build("ell_uniform")
         return self._uniform[width]
 
     def partition(self, n_shards: int, mode: str = "contiguous"):
@@ -284,7 +293,7 @@ class PlanCache:
                 return None
             from .partition import build_partition  # local: avoids cycle
             self._partitions[key] = build_partition(g, n_shards, mode)
-            _PACK_BUILDS["partition"] += 1
+            _note_pack_build("partition")
         return self._partitions[key]
 
     def peek_partition(self, n_shards: int, mode: str = "contiguous"):
@@ -307,7 +316,7 @@ class PlanCache:
         src, dst = caller_coo(g)
         self._krel = from_rels([(src, dst)] * int(n_rel),
                                n_src=g.n_src, n_dst=g.n_dst)
-        _PACK_BUILDS["krel"] += 1
+        _note_pack_build("krel")
         return self._krel
 
     # -- planning helpers -------------------------------------------------
@@ -501,10 +510,13 @@ _LAST_PLAN: Dict[Tuple[str, str], str] = {}
 _WARNED: set = set()
 
 
-def _record(spec_name: str, requested: str, chosen: str) -> None:
+def _record(spec_name: str, requested: str, chosen: str,
+            predicted: Optional[float] = None) -> None:
     key = (spec_name, requested)
     _PLAN_LOG.setdefault(key, Counter())[chosen] += 1
     _LAST_PLAN[key] = chosen
+    _obs_events.plan_event(spec_name, requested, chosen,
+                           predicted_cost=predicted)
 
 
 def plan_log() -> Dict[Tuple[str, str], Dict[str, int]]:
@@ -645,7 +657,19 @@ def plan_gspmm(g: Graph, spec, lhs_data, rhs_data, *,
     elif chosen == "ring":
         ctx = active_ring()
         plan.partition = cache.partition(ctx.n_shards, ctx.mode)
-    _record(spec.name, requested, chosen)
+    predicted = None
+    if _obs_events.enabled() and stats is not None:
+        d = int(np.prod(lhs_data.shape[1:])) if lhs_data.ndim > 1 else 1
+        if chosen == "ring":
+            ctx = active_ring()
+            pgp = (cache.peek_partition(ctx.n_shards, ctx.mode)
+                   if ctx is not None and cache is not None else None)
+            predicted = estimate_cost(chosen, stats, d,
+                                      ring_stats=None if pgp is None
+                                      else pgp.stats)
+        else:
+            predicted = estimate_cost(chosen, stats, d)
+    _record(spec.name, requested, chosen, predicted)
     return plan
 
 
@@ -674,8 +698,9 @@ def _plan_auto(spec, lhs_data, rhs_data, stats, ok, cache, runner,
                else (ring_ctx.n_shards, ring_ctx.axis, ring_ctx.mode))
         winner = cache._autotuned.get(key)
         if winner is None or winner not in candidates:
-            winner = min(candidates,
-                         key=lambda s: _measure(runner, s))
+            times = {s: _measure(runner, s) for s in candidates}
+            winner = min(times, key=times.get)
+            _obs_events.measured_event(spec.name, times[winner])
             cache._autotuned[key] = winner
         return winner, "autotune"
     ctx = active_ring()
@@ -765,8 +790,9 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
             if not candidates:
                 chosen = "segment"
             elif _MODE == "autotune" and runner is not None:
-                chosen = min(candidates,
-                             key=lambda s: _measure(runner, s))
+                times = {s: _measure(runner, s) for s in candidates}
+                chosen = min(times, key=times.get)
+                _obs_events.measured_event(log_name, times[chosen])
             else:
                 stats = block_stats(*signature)
                 chosen = min(candidates,
@@ -789,7 +815,11 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
             _warn_fallback(log_name, requested, chosen)
         if memoize:
             _BLOCK_PLANS[key] = chosen
-    _record(log_name, requested, chosen)
+    predicted = None
+    if _obs_events.enabled() and chosen in ("push", "segment", "ell"):
+        predicted = estimate_cost(chosen, block_stats(*signature), d,
+                                  backend=backend)
+    _record(log_name, requested, chosen, predicted)
     return chosen
 
 
@@ -823,6 +853,20 @@ _BLOCK_BWD_PLANS: Dict[Tuple, str] = {}
 # truth per signature.
 _BWD_COLLISION_SLOTS = 1_000_000   # full-serialization edge-slot scale
 _BWD_GATHER_REORDER = 0.45         # gather's extra work vs one segment pass
+
+
+def _block_bwd_cost(strategy: str, signature: Tuple[int, int, int, int],
+                    d: int, backend: str) -> float:
+    """Estimated cost of differentiating one block op (element-ops)."""
+    n_src, _, slots, _ = signature
+    tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
+    dd = max(int(d), 1)
+    if strategy == "gather":
+        return tp["segment"] * (1.0 + _BWD_GATHER_REORDER) * slots * dd
+    rho = min(1.0, slots / max(n_src, 1))
+    size = min(1.0, slots / _BWD_COLLISION_SLOTS)
+    scatter_tp = tp["segment"] + (tp["push"] - tp["segment"]) * rho * size
+    return scatter_tp * slots * dd
 
 
 def block_bwd_supports(strategy: str, spec) -> bool:
@@ -870,22 +914,14 @@ def plan_block_vjp(signature: Tuple[int, int, int, int], spec, d: int,
             if not ok("gather"):
                 chosen = "scatter"
             elif _MODE == "autotune" and runner is not None:
-                chosen = min(BLOCK_BWD_STRATEGIES,
-                             key=lambda s: _measure(runner, s))
+                times = {s: _measure(runner, s)
+                         for s in BLOCK_BWD_STRATEGIES}
+                chosen = min(times, key=times.get)
+                _obs_events.measured_event(log_name, times[chosen])
             else:
-                n_src, _, slots, _ = signature
-                tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
-                rho = min(1.0, slots / max(n_src, 1))
-                size = min(1.0, slots / _BWD_COLLISION_SLOTS)
-                scatter_tp = (tp["segment"]
-                              + (tp["push"] - tp["segment"]) * rho * size)
-                cost = {
-                    "gather": (tp["segment"]
-                               * (1.0 + _BWD_GATHER_REORDER)
-                               * slots * max(int(d), 1)),
-                    "scatter": scatter_tp * slots * max(int(d), 1),
-                }
-                chosen = min(BLOCK_BWD_STRATEGIES, key=cost.__getitem__)
+                chosen = min(BLOCK_BWD_STRATEGIES,
+                             key=lambda s: _block_bwd_cost(
+                                 s, signature, d, backend))
                 # same rule as the forward block plans: a cost-model
                 # stand-in computed in autotune mode is not pinned, so a
                 # later eager call still gets to measure
@@ -901,7 +937,10 @@ def plan_block_vjp(signature: Tuple[int, int, int, int], spec, d: int,
             _warn_fallback(log_name, requested, chosen)
         if memoize:
             _BLOCK_BWD_PLANS[key] = chosen
-    _record(log_name, requested, chosen)
+    predicted = None
+    if _obs_events.enabled():
+        predicted = _block_bwd_cost(chosen, signature, d, backend)
+    _record(log_name, requested, chosen, predicted)
     return chosen
 
 
@@ -929,6 +968,28 @@ _HETERO_FIXED = 2e4          # one-time fused-stream setup
 _HETERO_FALLBACK = ("fused", "loop")
 
 
+def _hetero_cost(strategy: str, signature: Tuple[int, int, int, int],
+                 d: int, backend: str,
+                 stats: Optional[GraphStats] = None) -> Optional[float]:
+    """Estimated cost of one relational aggregation (element-ops);
+    None when the strategy has no model (ell without fused stats)."""
+    _, _, n_edges, n_rel = signature
+    tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
+    dd = max(int(d), 1)
+    if strategy == "loop":
+        return (tp["segment"] * n_edges * dd
+                + n_rel * _HETERO_REL_OVERHEAD)
+    if strategy == "fused":
+        return (tp["segment"] * (1 + _HETERO_FUSED_TAX) * n_edges * dd
+                + _HETERO_FIXED)
+    if strategy == "ell" and stats is not None:
+        return ((1 + _HETERO_FUSED_TAX)
+                * estimate_cost("ell", stats, dd, backend=backend))
+    if strategy == "push":
+        return tp["push"] * n_edges * dd + n_rel * _HETERO_REL_OVERHEAD
+    return None
+
+
 def clear_hetero_plans() -> None:
     _HETERO_PLANS.clear()
 
@@ -954,7 +1015,6 @@ def plan_hetero(signature: Tuple[int, int, int, int], op_name: str,
     log_name = f"hetero:{op_name}"
     chosen = _HETERO_PLANS.get(key)
     if chosen is None:
-        n_src, n_dst, n_edges, n_rel = signature
         memoize = True
 
         def candidates():
@@ -966,21 +1026,12 @@ def plan_hetero(signature: Tuple[int, int, int, int], op_name: str,
         if requested == "auto":
             cand = candidates()
             if _MODE == "autotune" and runner is not None:
-                chosen = min(cand, key=lambda s: _measure(runner, s))
+                times = {s: _measure(runner, s) for s in cand}
+                chosen = min(times, key=times.get)
+                _obs_events.measured_event(log_name, times[chosen])
             else:
-                tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
-                dd = max(int(d), 1)
-                cost = {
-                    "loop": (tp["segment"] * n_edges * dd
-                             + n_rel * _HETERO_REL_OVERHEAD),
-                    "fused": (tp["segment"] * (1 + _HETERO_FUSED_TAX)
-                              * n_edges * dd + _HETERO_FIXED),
-                }
-                if "ell" in cand:
-                    cost["ell"] = ((1 + _HETERO_FUSED_TAX)
-                                   * estimate_cost("ell", stats, dd,
-                                                   backend=backend))
-                chosen = min(cand, key=cost.__getitem__)
+                chosen = min(cand, key=lambda s: _hetero_cost(
+                    s, signature, d, backend, stats))
                 memoize = _MODE != "autotune"
         elif requested in HETERO_STRATEGIES:
             if requested == "ell" and not ell_ok:
@@ -999,7 +1050,10 @@ def plan_hetero(signature: Tuple[int, int, int, int], op_name: str,
                 f"of {HETERO_STRATEGIES + STRATEGIES + ('auto',)}")
         if memoize:
             _HETERO_PLANS[key] = chosen
-    _record(log_name, requested, chosen)
+    predicted = None
+    if _obs_events.enabled():
+        predicted = _hetero_cost(chosen, signature, d, backend, stats)
+    _record(log_name, requested, chosen, predicted)
     return chosen
 
 
@@ -1109,7 +1163,9 @@ def plan_sddmm(signature: Tuple[int, int, int], spec, d: int,
             cand = [s for s in SDDMM_STRATEGIES
                     if s != "pallas" or pallas_ok]
             if _MODE == "autotune" and runner is not None:
-                chosen = min(cand, key=lambda s: _measure(runner, s))
+                times = {s: _measure(runner, s) for s in cand}
+                chosen = min(times, key=times.get)
+                _obs_events.measured_event(log_name, times[chosen])
             else:
                 chosen = min(cand, key=lambda s: _sddmm_cost(
                     s, n_edges, d, backend))
@@ -1128,7 +1184,10 @@ def plan_sddmm(signature: Tuple[int, int, int], spec, d: int,
             _warn_fallback(log_name, requested, chosen)
         if memoize:
             _SDDMM_PLANS[key] = chosen
-    _record(log_name, requested, chosen)
+    predicted = None
+    if _obs_events.enabled():
+        predicted = _sddmm_cost(chosen, signature[2], d, backend)
+    _record(log_name, requested, chosen, predicted)
     return chosen
 
 
@@ -1155,6 +1214,19 @@ _ATTN_PLANS: Dict[Tuple, str] = {}
 _ATTN_PALLAS_FIXED = 5e4
 
 
+def _attn_cost(strategy: str, n_edges: int, hf: int, backend: str,
+               padded_slots: Optional[int] = None) -> Optional[float]:
+    """Estimated cost of one fused-attention pass (element-ops); None
+    for ring (the partitioned composition has no single-device model)."""
+    tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
+    if strategy == "fused":
+        return tp["segment"] * n_edges * hf
+    if strategy == "pallas":
+        slots = n_edges if padded_slots is None else padded_slots
+        return tp["pallas"] * slots * hf + _ATTN_PALLAS_FIXED
+    return None
+
+
 def plan_attention(signature: Tuple[int, int, int], heads: int, feat: int,
                    requested: str = "auto", pallas_ok: bool = False,
                    padded_slots: Optional[int] = None) -> str:
@@ -1173,13 +1245,9 @@ def plan_attention(signature: Tuple[int, int, int], heads: int, feat: int,
         n_edges = signature[2]
         hf = max(int(heads), 1) * max(int(feat), 1)
         if requested == "auto":
-            tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
-            slots = n_edges if padded_slots is None else padded_slots
-            cost = {"fused": tp["segment"] * n_edges * hf}
-            if pallas_ok:
-                cost["pallas"] = (tp["pallas"] * slots * hf
-                                  + _ATTN_PALLAS_FIXED)
-            chosen = min(cost, key=cost.__getitem__)
+            cand = ["fused"] + (["pallas"] if pallas_ok else [])
+            chosen = min(cand, key=lambda s: _attn_cost(
+                s, n_edges, hf, backend, padded_slots))
         elif requested not in ATTN_STRATEGIES:
             raise ValueError(
                 f"unknown attention strategy {requested!r}; expected one "
@@ -1190,7 +1258,12 @@ def plan_attention(signature: Tuple[int, int, int], heads: int, feat: int,
         else:
             chosen = requested
         _ATTN_PLANS[key] = chosen
-    _record("attn:fused", requested, chosen)
+    predicted = None
+    if _obs_events.enabled():
+        hf = max(int(heads), 1) * max(int(feat), 1)
+        predicted = _attn_cost(chosen, signature[2], hf, backend,
+                               padded_slots)
+    _record("attn:fused", requested, chosen, predicted)
     return chosen
 
 
@@ -1216,6 +1289,17 @@ _SERVE_PLANS: Dict[Tuple, str] = {}
 _SERVE_LOOKUP_COST = 8.0
 
 
+def _serve_cost(mode: str, signature: Tuple[int, int, int, int],
+                expansion_edges: int, refresh_batches: int) -> float:
+    """Estimated per-batch cost of one serve mode (element-ops)."""
+    n_edges, cls, layers = signature[1], signature[2], signature[3]
+    if mode == "layerwise":
+        per = max(int(refresh_batches), 1)
+        return ((n_edges * max(layers, 1)) / per
+                + _SERVE_LOOKUP_COST * cls)
+    return float(expansion_edges)
+
+
 def plan_serve(signature: Tuple[int, int, int, int], op_name: str = "infer",
                requested: str = "auto", *, expansion_edges: int,
                refresh_batches: int = 1024) -> str:
@@ -1234,14 +1318,8 @@ def plan_serve(signature: Tuple[int, int, int, int], op_name: str = "infer",
     chosen = _SERVE_PLANS.get(key)
     if chosen is None:
         if requested == "auto":
-            n_edges, cls, layers = signature[1], signature[2], signature[3]
-            per = max(int(refresh_batches), 1)
-            cost = {
-                "layerwise": (n_edges * max(layers, 1)) / per
-                             + _SERVE_LOOKUP_COST * cls,
-                "fanout": float(expansion_edges),
-            }
-            chosen = min(cost, key=cost.__getitem__)
+            chosen = min(SERVE_MODES, key=lambda m: _serve_cost(
+                m, signature, expansion_edges, refresh_batches))
         elif requested not in SERVE_MODES:
             raise ValueError(
                 f"unknown serve mode {requested!r}; expected one of "
@@ -1249,7 +1327,11 @@ def plan_serve(signature: Tuple[int, int, int, int], op_name: str = "infer",
         else:
             chosen = requested
         _SERVE_PLANS[key] = chosen
-    _record(log_name, requested, chosen)
+    predicted = None
+    if _obs_events.enabled():
+        predicted = _serve_cost(chosen, signature, expansion_edges,
+                                refresh_batches)
+    _record(log_name, requested, chosen, predicted)
     return chosen
 
 

@@ -44,6 +44,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import planner
+from ..obs import metrics as _obs_metrics
+from ..obs.events import measured_event as _measured_event
+from ..obs.spans import span as _span
 
 __all__ = ["CacheStats", "FeatureCache", "MicroBatch", "MicroBatcher",
            "GNNServer", "hot_node_ids", "SERVE_APPS"]
@@ -111,13 +114,17 @@ class FeatureCache:
     """
 
     def __init__(self, store: np.ndarray, capacity: int,
-                 pinned: Optional[np.ndarray] = None):
+                 pinned: Optional[np.ndarray] = None,
+                 name: Optional[str] = None):
         self.store = np.asarray(store)
         if self.store.ndim < 1:
             raise ValueError("store must be at least 1-D (rows)")
         self.capacity = int(capacity)
         if self.capacity < 0:
             raise ValueError("capacity must be ≥ 0")
+        # a named cache mirrors its counters into the metrics registry
+        # (serve.cache.<name>.*), so snapshots carry CacheStats
+        self.name = name
         self._pinned: Dict[int, np.ndarray] = {}
         if pinned is not None:
             for i in np.asarray(pinned).reshape(-1):
@@ -142,6 +149,7 @@ class FeatureCache:
         become LRU-resident (evicting the least recently used row when
         over capacity); hits refresh recency."""
         ids = np.asarray(ids).reshape(-1)
+        h0, m0, e0 = self.hits, self.misses, self.evictions
         out = np.empty((ids.shape[0],) + self.store.shape[1:],
                        self.store.dtype)
         for j, raw in enumerate(ids):
@@ -166,6 +174,12 @@ class FeatureCache:
                 if len(self._lru) > self.capacity:
                     self._lru.popitem(last=False)
                     self.evictions += 1
+        if self.name is not None:
+            pre = f"serve.cache.{self.name}"
+            _obs_metrics.counter(f"{pre}.hits").inc(self.hits - h0)
+            _obs_metrics.counter(f"{pre}.misses").inc(self.misses - m0)
+            _obs_metrics.counter(
+                f"{pre}.evictions").inc(self.evictions - e0)
         return out
 
     def update(self, ids, rows) -> None:
@@ -406,11 +420,12 @@ class GNNServer:
         self.cache_rows = int(cache_rows)
         self._hot = hot_node_ids(deg, pin_hot)
 
-        from ..data.pipeline import SignatureTracker
+        from ..obs.signatures import SignatureTracker
         # one signature per (class, mode) is the compile budget;
         # anything beyond that is a recompile leak
         self.tracker = SignatureTracker(
-            limit=len(self.batcher.classes) * len(planner.SERVE_MODES))
+            limit=len(self.batcher.classes) * len(planner.SERVE_MODES),
+            name="serve")
         self.compiles = 0
         self.served_batches = 0
         self.served_requests = 0
@@ -446,12 +461,14 @@ class GNNServer:
         """Recompute the layer-wise output table (each layer once, for
         all nodes — the training-path full forward, unchanged) and push
         it through the hot-node cache without dropping counters."""
-        logits = self._full_fn(self.params, self._graph_arg,
-                               jnp.asarray(self.feats))
+        with _span("serve.refresh") as sp:
+            logits = self._full_fn(self.params, self._graph_arg,
+                                   jnp.asarray(self.feats))
+            sp.fence(logits)
         store = np.asarray(jax.block_until_ready(logits))
         if self._out_cache is None:
             self._out_cache = FeatureCache(store, self.cache_rows,
-                                           pinned=self._hot)
+                                           pinned=self._hot, name="out")
         else:
             self._out_cache.replace_store(store)
         return self._out_cache.stats()
@@ -483,51 +500,67 @@ class GNNServer:
         hot-node cache (-1 pads read as zero rows)."""
         if self._feat_cache is None:
             self._feat_cache = FeatureCache(self.feats, self.cache_rows,
-                                            pinned=self._hot)
+                                            pinned=self._hot, name="feat")
         ids = np.asarray(ids)
         x = np.zeros((ids.shape[0], self.feats.shape[1]), np.float32)
         real = ids >= 0
         if real.any():
-            x[real] = self._feat_cache.lookup(ids[real])
+            with _span("serve.cache_lookup", args={"cache": "feat"}):
+                x[real] = self._feat_cache.lookup(ids[real])
         return jnp.asarray(x)
 
     def _serve_fanout(self, batch: MicroBatch) -> np.ndarray:
         sampler = self._sampler(batch.cls)
-        mb = sampler.sample(batch.ids[:batch.n_real],
-                            np.zeros(batch.n_real, np.int64))
+        with _span("serve.sample", args={"cls": batch.cls}):
+            mb = sampler.sample(batch.ids[:batch.n_real],
+                                np.zeros(batch.n_real, np.int64))
         x = self._feature_rows(np.asarray(mb.input_ids))
         self._observe(("fanout", batch.cls) + mb.shape_signature())
-        out = self._infer_jit(self.params, mb.blocks, x)
+        with _span("serve.infer", args={"cls": batch.cls}) as sp:
+            out = self._infer_jit(self.params, mb.blocks, x)
+            sp.fence(out)
         return np.asarray(jax.block_until_ready(out))[:batch.n_real]
 
     # -- serving -------------------------------------------------------- #
     def _observe(self, signature: Tuple) -> None:
-        if self.tracker.observe(signature):
+        # the shared train/serve accounting path (repro.obs.signatures)
+        if self.tracker.observe_checked(signature):
             self.compiles += 1
-            self.tracker.assert_bounded()
 
     def serve_batch(self, batch: MicroBatch) -> np.ndarray:
         """(n_real, n_out) predictions for one coalesced batch."""
+        t0 = time.perf_counter()
         mode = self.mode_for_class(batch.cls)
         if mode == "layerwise":
             if self._out_cache is None:
                 self.refresh()
             self._observe(("layerwise", batch.cls))
-            out = self._out_cache.lookup(batch.ids[:batch.n_real])
+            with _span("serve.cache_lookup", args={"cache": "out",
+                                                   "cls": batch.cls}):
+                out = self._out_cache.lookup(batch.ids[:batch.n_real])
         else:
             out = self._serve_fanout(batch)
         self.served_batches += 1
+        # the measured side of the serve:infer plan row + the batch
+        # latency histogram (out is host-side here — nothing in flight)
+        dt = time.perf_counter() - t0
+        _measured_event("serve:infer", dt)
+        _obs_metrics.histogram("serve.batch_seconds").observe(dt)
         return out
 
     def serve(self, requests: Sequence[Tuple[int, Sequence[int]]]
               ) -> Dict[int, np.ndarray]:
         """Serve ``(rid, node_ids)`` requests; returns rid → (len(ids),
         n_out) predictions, padded rows never included."""
+        with _span("serve.batching"):
+            batches = self.batcher.coalesce(requests)
         results: Dict[int, List[np.ndarray]] = {}
-        for batch in self.batcher.coalesce(requests):
+        for batch in batches:
             vals = self.serve_batch(batch)
-            for rid, rows in self.batcher.unpack(batch, vals).items():
-                results.setdefault(rid, []).append(rows)
+            with _span("serve.respond"):
+                for rid, rows in self.batcher.unpack(batch,
+                                                     vals).items():
+                    results.setdefault(rid, []).append(rows)
         self.served_requests += len(results)
         # a request split across largest-class chunks re-assembles here
         return {rid: parts[0] if len(parts) == 1
@@ -552,8 +585,18 @@ class GNNServer:
         :class:`~repro.data.Prefetcher` (batch assembly overlaps the
         device step, exactly like sampling overlaps training)."""
         from ..data.pipeline import prefetch
-        for reqs in prefetch(request_queue, depth=depth):
-            self.serve_requests(reqs)
+        it = iter(prefetch(request_queue, depth=depth))
+        sentinel = object()
+        while True:
+            # intake (blocking on the coalescing window) and handling
+            # are the two top-level spans — together they tile the
+            # session wall time, so trace coverage is ~100%
+            with _span("serve.intake"):
+                reqs = next(it, sentinel)
+            if reqs is sentinel:
+                break
+            with _span("serve.handle"):
+                self.serve_requests(reqs)
 
     def warmup(self) -> None:
         """Trace every signature class once so steady-state request

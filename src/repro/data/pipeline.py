@@ -19,7 +19,7 @@ import itertools
 import queue
 import threading
 import time
-from typing import Iterable, Iterator, List, Optional, Sequence, Set, Tuple
+from typing import Iterable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -111,25 +111,9 @@ def prefetch(it: Iterable, depth: int = 2) -> Iterator:
     return Prefetcher(it, depth=depth)
 
 
-class SignatureTracker:
-    """Counts distinct static shape signatures seen by a jitted step."""
-
-    def __init__(self, limit: int = 4):
-        self.limit = limit
-        self.seen: Set[Tuple] = set()
-
-    def observe(self, signature: Tuple) -> bool:
-        """Record a signature; True if it is new (⇒ a fresh compile)."""
-        new = signature not in self.seen
-        self.seen.add(signature)
-        return new
-
-    def assert_bounded(self) -> None:
-        if len(self.seen) > self.limit:
-            raise RuntimeError(
-                f"{len(self.seen)} distinct minibatch shape signatures "
-                f"(> {self.limit}): static padding is broken, every batch "
-                f"recompiles the train step")
+# SignatureTracker lives in repro.obs.signatures (the shared
+# train/serve accounting path); re-exported here for compatibility.
+from ..obs.signatures import SignatureTracker  # noqa: E402,F401
 
 
 class ServeRequest:

@@ -21,9 +21,12 @@ from typing import Callable, Dict, List, Optional
 import jax
 import numpy as np
 
+from ..core import planner
 from ..core.serving import SERVE_APPS, GNNServer
 from ..data import RequestQueue, make_node_dataset, relational_graph
 from ..models.gnn import gat, gcn, rgcn, sage
+from ..obs import (export_chrome_trace, percentile_nearest_rank, snapshot,
+                   span_coverage)
 
 
 def build_server(app: str, dataset: str, *, mode: str = "auto",
@@ -101,10 +104,15 @@ def run_session(srv: GNNServer, *, n_clients: int, requests_per_client: int,
 
     flat = sorted(x for per in lat for x in per)
     n = len(flat)
+    # nearest-rank percentiles over the FULL latency vector (the old
+    # floor-index arithmetic under-read both tails: p99 of 100 samples
+    # returned the 99th-smallest instead of the 100th)
     return {
         "latencies": flat,
-        "p50_ms": 1e3 * flat[n // 2] if n else float("nan"),
-        "p99_ms": 1e3 * flat[min(n - 1, (99 * n) // 100)] if n else
+        "n_samples": n,
+        "p50_ms": 1e3 * percentile_nearest_rank(flat, 50) if n else
+                  float("nan"),
+        "p99_ms": 1e3 * percentile_nearest_rank(flat, 99) if n else
                   float("nan"),
         "throughput_rps": n / max(elapsed, 1e-9),
         "elapsed_s": elapsed,
@@ -131,6 +139,12 @@ def main():
     ap.add_argument("--cache-rows", type=int, default=4096)
     ap.add_argument("--pin-hot", type=int, default=256)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="export the session as Chrome-trace JSON "
+                         "(open in Perfetto / chrome://tracing)")
+    ap.add_argument("--drift", action="store_true",
+                    help="print the planner predicted-vs-measured "
+                         "drift report after the session")
     args = ap.parse_args()
 
     srv = build_server(args.app, args.dataset, mode=args.mode,
@@ -150,7 +164,8 @@ def main():
           f"ids/req={args.request_ids}")
     print(f"[serve_gnn] class→mode {modes}")
     print(f"[serve_gnn] p50 {res['p50_ms']:.2f} ms  p99 {res['p99_ms']:.2f} "
-          f"ms  {res['throughput_rps']:.0f} req/s")
+          f"ms  {res['throughput_rps']:.0f} req/s "
+          f"(n={res['n_samples']})")
     print(f"[serve_gnn] steady-state recompiles: "
           f"{res['recompiles_steady']} (must be 0)")
     st = res["stats"]
@@ -160,6 +175,25 @@ def main():
             print(f"[serve_gnn] {tier}: hit_ratio {cs.hit_ratio:.3f} "
                   f"({cs.hits}h/{cs.misses}m, {cs.evictions} evictions, "
                   f"{cs.pinned} pinned)")
+    if args.trace:
+        from ..obs import trace_events
+        export_chrome_trace(args.trace)
+        print(f"[serve_gnn] trace: {len(trace_events())} events → "
+              f"{args.trace} (span coverage {span_coverage():.1%})")
+    if args.drift:
+        rows = planner.drift_report()
+        print(f"[serve_gnn] drift report ({len(rows)} rows):")
+        for r in rows:
+            print(f"  {r['op']:28s} {r['chosen']:10s} "
+                  f"pred={r['predicted_cost']:.3g} "
+                  f"meas={1e3 * r['measured_mean_s']:.3f}ms "
+                  f"ratio={r['ratio']:.2f}"
+                  f"{'  DRIFTED' if r['drifted'] else ''}")
+        snap = snapshot()
+        batch_h = snap.get("serve.batch_seconds")
+        if batch_h:
+            print(f"[serve_gnn] serve.batch_seconds: "
+                  f"n={batch_h['count']} mean={1e3 * batch_h['mean']:.3f}ms")
     if res["recompiles_steady"]:
         raise SystemExit("steady-state recompiles detected")
 

@@ -27,8 +27,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ...data.pipeline import SignatureTracker, prefetch
+from ...data.pipeline import prefetch
 from ...data.sampler import NeighborSampler
+from ...obs import events as _obs_events
+from ...obs.signatures import SignatureTracker
+from ...obs.spans import span as _span
 from ...optim import adamw, apply_updates, clip_by_global_norm
 from ...substrate.nn import cross_entropy_loss, accuracy
 from .common import (block_features, make_partitioned_bundle,
@@ -249,6 +252,33 @@ def make_sampled_train_step(forward_blocks_fn: Callable, strategy: str,
     return opt_init, step
 
 
+def _drift_probe(forward_blocks_fn, params, mb, feats_pad, strategy,
+                 bwd_strategy) -> None:
+    """Once-per-new-signature eager probe feeding the drift report.
+
+    The jitted train step never executes block ops eagerly, so the
+    ``block:*`` / ``block_bwd:*`` plan rows would have predictions but
+    no measurements. This runs the block forward un-jitted (the timed
+    hooks in core/blocks.py fire) and replays its VJP (the custom
+    gather backward executes eagerly at ``vjp_fn`` call time). It rides
+    the compile batch — a NEW signature already pays a trace+compile —
+    so steady-state per-step time is untouched.
+    """
+    if not _obs_events.enabled():
+        return
+    with _span("train.drift_probe"):
+        x = block_features(feats_pad, mb.input_ids)
+
+        def f(p):
+            return forward_blocks_fn(p, mb.blocks, x, strategy=strategy,
+                                     bwd_strategy=bwd_strategy,
+                                     train=False)
+
+        jax.block_until_ready(f(params))        # eager fwd → block:*
+        out, vjp_fn = jax.vjp(f, params)
+        jax.block_until_ready(vjp_fn(jnp.ones_like(out)))  # block_bwd:*
+
+
 def train_sampled(forward_blocks_fn: Callable, params: Dict, g, feats,
                   labels, train_ids, *, fanouts=(10, 10),
                   batch_size: int = 64, strategy: str = "auto",
@@ -282,39 +312,48 @@ def train_sampled(forward_blocks_fn: Callable, params: Dict, g, feats,
                "step_time": [], "n_batches": []}
     step_i = 0
     for _ in range(epochs):
-        it = prefetch(sampler.batches(train_ids, labels[train_ids],
-                                      drop_last=drop_last),
-                      depth=prefetch_depth)
-        t_epoch = time.perf_counter()
-        t_sample = t_step = 0.0
-        losses = []
-        try:
-            while max_batches is None or len(losses) < max_batches:
-                t0 = time.perf_counter()
-                mb = next(it, None)
-                if mb is None:
-                    break
-                t_sample += time.perf_counter() - t0
-                # signature-change work is hoisted behind the tracker:
-                # only a NEW signature (⇒ a fresh compile) re-checks the
-                # bound — unchanged batches skip the per-step accounting
-                # (the sampler likewise reuses one cached label-mask
-                # array per real-seed count instead of re-padding)
-                if tracker.observe(mb.shape_signature()):
-                    tracker.assert_bounded()
-                rng, sub = jax.random.split(rng)
-                t0 = time.perf_counter()
-                params, opt_state, loss = step(params, opt_state, step_i,
-                                               mb, feats_pad, sub)
-                jax.block_until_ready(loss)
-                t_step += time.perf_counter() - t0
-                losses.append(float(loss))
-                step_i += 1
-            # stop the clock before close(): the join waits out an
-            # abandoned in-flight sample no train step consumed
-            t_epoch = time.perf_counter() - t_epoch
-        finally:
-            it.close()      # never leave the producer thread mid-batch
+        # one top-level span per epoch; sample/step/probe spans nest
+        # under it, so the exported trace tiles the whole run
+        with _span("train.epoch"):
+            it = prefetch(sampler.batches(train_ids, labels[train_ids],
+                                          drop_last=drop_last),
+                          depth=prefetch_depth)
+            t_epoch = time.perf_counter()
+            t_sample = t_step = 0.0
+            losses = []
+            try:
+                while max_batches is None or len(losses) < max_batches:
+                    t0 = time.perf_counter()
+                    with _span("train.sample"):
+                        mb = next(it, None)
+                    if mb is None:
+                        break
+                    t_sample += time.perf_counter() - t0
+                    # signature-change work is hoisted behind the
+                    # tracker: only a NEW signature (⇒ a fresh compile)
+                    # re-checks the bound — unchanged batches skip the
+                    # per-step accounting (the sampler likewise reuses
+                    # one cached label-mask array per real-seed count
+                    # instead of re-padding)
+                    if tracker.observe_checked(mb.shape_signature()):
+                        _drift_probe(forward_blocks_fn, params, mb,
+                                     feats_pad, strategy, bwd_strategy)
+                    rng, sub = jax.random.split(rng)
+                    t0 = time.perf_counter()
+                    with _span("train.step") as sp:
+                        params, opt_state, loss = step(params, opt_state,
+                                                       step_i, mb,
+                                                       feats_pad, sub)
+                        sp.fence(loss)
+                        jax.block_until_ready(loss)
+                    t_step += time.perf_counter() - t0
+                    losses.append(float(loss))
+                    step_i += 1
+                # stop the clock before close(): the join waits out an
+                # abandoned in-flight sample no train step consumed
+                t_epoch = time.perf_counter() - t_epoch
+            finally:
+                it.close()  # never leave the producer thread mid-batch
         history["loss"].append(float(np.mean(losses)) if losses
                                else float("nan"))
         history["epoch_time"].append(t_epoch)

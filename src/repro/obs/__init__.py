@@ -1,0 +1,45 @@
+"""repro.obs — unified telemetry: metrics registry, spans, plan events.
+
+The observability layer every subsystem reports through (DESIGN.md
+§11). Three pieces, one on/off switch (``REPRO_TELEMETRY=0`` disables
+everything; :func:`set_enabled` toggles at runtime):
+
+* :mod:`.metrics` — a low-overhead, thread-safe registry of counters /
+  gauges / log2-bucket histograms. Serving caches, compile trackers,
+  pack-build counters and the benchmark rows all register here, so one
+  :func:`snapshot` describes a whole run.
+* :mod:`.spans` — ``with span("compute") as sp: ...; sp.fence(out)``
+  wall-time tracing with ``block_until_ready`` fencing at span exit
+  (device work is attributed to the span that launched it), exportable
+  as Chrome-trace JSON (:func:`export_chrome_trace`, loadable in
+  Perfetto / chrome://tracing).
+* :mod:`.events` — the structured plan-event stream: every planner
+  decision row records the cost model's *predicted* cost, eager op
+  executions record *measured* wall time, and :func:`drift_report`
+  surfaces ops where prediction and reality diverge.
+
+``repro.obs`` sits below every other repro package (it imports only
+jax/numpy/stdlib), so core/data/models/launch can all report here
+without import cycles.
+"""
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      REGISTRY, counter, gauge, histogram, snapshot,
+                      reset_metrics, enabled, set_enabled,
+                      percentile_nearest_rank)
+from .spans import (Span, span, export_chrome_trace, trace_events,
+                    clear_trace, span_coverage)
+from .events import (PLAN_EVENT_FIELDS, DRIFT_FIELDS, plan_event,
+                     measured_event, timed, plan_events, drift_report,
+                     clear_events, family_of)
+from .signatures import SignatureTracker
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry", "REGISTRY",
+    "counter", "gauge", "histogram", "snapshot", "reset_metrics",
+    "enabled", "set_enabled", "percentile_nearest_rank",
+    "Span", "span", "export_chrome_trace", "trace_events",
+    "clear_trace", "span_coverage",
+    "PLAN_EVENT_FIELDS", "DRIFT_FIELDS", "plan_event", "measured_event",
+    "timed", "plan_events", "drift_report", "clear_events", "family_of",
+    "SignatureTracker",
+]

@@ -1,0 +1,55 @@
+"""Compile-signature accounting, shared by train and serve.
+
+``SignatureTracker`` (moved here from ``repro.data.pipeline``, which
+re-exports it for compatibility) counts distinct static shape
+signatures seen by a jitted step. ``observe_checked`` is the single
+accounting path both ``train_sampled`` and ``GNNServer`` use: record
+the signature, and if it is new (⇒ a fresh compile) immediately
+enforce the bounded-signatures invariant — identical behavior to the
+observe/assert pairs the two call sites used to hand-roll.
+
+New signatures increment the registry counter
+``signatures.<name>.compiles`` so recompile counts appear in metrics
+snapshots next to cache and serve statistics.
+"""
+from typing import Set, Tuple
+
+from . import metrics as _metrics
+
+__all__ = ["SignatureTracker"]
+
+
+class SignatureTracker:
+    """Counts distinct static shape signatures seen by a jitted step."""
+
+    def __init__(self, limit: int = 4, name: str = "default"):
+        self.limit = limit
+        self.name = name
+        self.seen: Set[Tuple] = set()
+
+    def observe(self, signature: Tuple) -> bool:
+        """Record a signature; True if it is new (⇒ a fresh compile)."""
+        new = signature not in self.seen
+        self.seen.add(signature)
+        if new:
+            _metrics.counter(f"signatures.{self.name}.compiles").inc()
+        return new
+
+    def assert_bounded(self) -> None:
+        if len(self.seen) > self.limit:
+            raise RuntimeError(
+                f"{len(self.seen)} distinct minibatch shape signatures "
+                f"(> {self.limit}): static padding is broken, every batch "
+                f"recompiles the train step")
+
+    def observe_checked(self, signature: Tuple) -> bool:
+        """Observe + enforce the bound when the signature is new.
+
+        The shared accounting path: returns True on a fresh signature
+        (the caller is about to pay a compile), raising first if the
+        tracker has now seen more signatures than its limit.
+        """
+        new = self.observe(signature)
+        if new:
+            self.assert_bounded()
+        return new

@@ -1,0 +1,195 @@
+"""Metrics registry: thread safety, log2 bucket edges, disabled mode."""
+import json
+import math
+import threading
+
+import pytest
+
+from repro import obs
+from repro.obs.metrics import Histogram, MetricsRegistry
+
+
+@pytest.fixture(autouse=True)
+def _clean_registry():
+    obs.reset_metrics()
+    yield
+    obs.reset_metrics()
+
+
+# ------------------------------------------------------------------ #
+# thread safety — concurrent writers must not lose updates
+# ------------------------------------------------------------------ #
+def test_counter_concurrent_exact():
+    c = obs.counter("t.concurrent")
+    n_threads, per = 8, 10_000
+
+    def worker():
+        for _ in range(per):
+            c.inc()
+
+    ts = [threading.Thread(target=worker) for _ in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert c.value == n_threads * per
+
+
+def test_histogram_concurrent_exact_count():
+    h = obs.histogram("t.hist_concurrent")
+    n_threads, per = 8, 5_000
+
+    def worker(seed):
+        for i in range(per):
+            h.observe(((seed + i) % 100 + 1) / 100.0)
+
+    ts = [threading.Thread(target=worker, args=(k,))
+          for k in range(n_threads)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert h.count == n_threads * per
+    assert sum(n for _, n in h.buckets()) == n_threads * per
+
+
+# ------------------------------------------------------------------ #
+# histogram bucket boundaries — exact log2 edges via frexp
+# ------------------------------------------------------------------ #
+def test_bucket_index_power_of_two_edges():
+    h = Histogram("t.edges")
+    # 2^i lands in bucket i (half-open [2^i, 2^{i+1}))
+    for i in (-20, -3, -1, 0, 1, 2):
+        assert h.bucket_index(float(2.0 ** i)) == i
+    # just under a power of two stays in the bucket below
+    assert h.bucket_index(2.0 - 1e-12) == 0
+    assert h.bucket_index(4.0 - 1e-12) == 1
+    assert h.bucket_index(0.5 - 1e-12) == -2
+    # out-of-range values clamp into the edge buckets
+    assert h.bucket_index(float(2.0 ** 10)) == h.hi
+    assert h.bucket_index(float(2.0 ** -30)) == h.lo
+
+
+def test_bucket_index_matches_floor_log2():
+    h = Histogram("t.floorlog")
+    for v in (1e-6, 3.7e-4, 0.02, 0.3, 1.5, 7.0):
+        assert h.bucket_index(v) == math.floor(math.log2(v))
+
+
+def test_nonpositive_goes_to_underflow():
+    h = Histogram("t.under")
+    assert h.bucket_index(0.0) is None
+    assert h.bucket_index(-1.0) is None
+    h.observe(0.0)
+    h.observe(-5.0)
+    h.observe(1.0)
+    assert h.count == 3
+    rows = dict(h.buckets())
+    assert rows[None] == 2          # underflow row
+    assert rows[2.0 ** 0] == 1
+
+
+def test_histogram_snapshot_roundtrips_json():
+    h = obs.histogram("t.snap")
+    for v in (0.001, 0.002, 0.004, 1.0):
+        h.observe(v)
+    snap = obs.snapshot()["t.snap"]
+    assert snap["type"] == "histogram"
+    assert snap["count"] == 4
+    assert snap["min"] == pytest.approx(0.001)
+    assert snap["max"] == pytest.approx(1.0)
+    json.dumps(snap)                # must be JSON-serializable as-is
+
+
+def test_histogram_quantile_bucketed():
+    h = obs.histogram("t.quant")
+    for _ in range(99):
+        h.observe(0.001)            # bucket [2^-10, 2^-9)
+    h.observe(10.0)                 # bucket [8, 16)
+    # p50 reports the bucket's upper bound — within 2x of the true value
+    assert h.quantile(0.5) <= 0.002
+    assert h.quantile(0.99) <= 0.002
+    assert h.quantile(1.0) >= 10.0
+
+
+# ------------------------------------------------------------------ #
+# disabled mode — a true no-op, not a cheap-op
+# ------------------------------------------------------------------ #
+def test_disabled_mode_is_noop():
+    prev = obs.set_enabled(False)
+    try:
+        c = obs.counter("t.dead")
+        g = obs.gauge("t.dead_gauge")
+        h = obs.histogram("t.dead_hist")
+        c.inc(100)
+        g.set(3.0)
+        h.observe(1.0)
+        assert c.value == 0
+        assert h.count == 0
+        assert obs.snapshot() == {}
+    finally:
+        obs.set_enabled(prev)
+    # the same names created while disabled never entered the registry
+    assert "t.dead" not in obs.snapshot()
+
+
+def test_disabled_instruments_are_shared_null():
+    prev = obs.set_enabled(False)
+    try:
+        assert obs.counter("t.a") is obs.counter("t.b")
+        assert obs.counter("t.a") is obs.histogram("t.c")
+    finally:
+        obs.set_enabled(prev)
+
+
+def test_set_enabled_returns_previous():
+    prev = obs.set_enabled(False)
+    try:
+        assert obs.set_enabled(True) is False
+        assert obs.set_enabled(True) is True
+    finally:
+        obs.set_enabled(prev)
+
+
+# ------------------------------------------------------------------ #
+# registry semantics
+# ------------------------------------------------------------------ #
+def test_same_name_same_instrument():
+    assert obs.counter("t.same") is obs.counter("t.same")
+
+
+def test_type_mismatch_raises():
+    obs.counter("t.typed")
+    with pytest.raises(TypeError):
+        obs.histogram("t.typed")
+
+
+def test_fresh_registry_isolated():
+    r = MetricsRegistry()
+    r.counter("x").inc()
+    assert "x" not in obs.snapshot()
+    assert r.snapshot()["x"]["value"] == 1
+
+
+# ------------------------------------------------------------------ #
+# nearest-rank percentile (shared with launch.serve_gnn)
+# ------------------------------------------------------------------ #
+def test_percentile_nearest_rank():
+    xs = list(range(1, 101))        # 1..100
+    assert obs.percentile_nearest_rank(xs, 50) == 50
+    assert obs.percentile_nearest_rank(xs, 99) == 99
+    assert obs.percentile_nearest_rank(xs, 100) == 100
+    assert obs.percentile_nearest_rank([7.0], 99) == 7.0
+    # p99 of 100 samples is the 99th-smallest by nearest rank; the old
+    # floor arithmetic in serve_gnn returned index 99 (the max) — and,
+    # worse, p50 of 2 samples returned the larger one
+    assert obs.percentile_nearest_rank([1.0, 9.0], 50) == 1.0
+
+
+def test_percentile_rejects_bad_input():
+    with pytest.raises(ValueError):
+        obs.percentile_nearest_rank([], 50)
+    with pytest.raises(ValueError):
+        obs.percentile_nearest_rank([1.0], 0)
+    with pytest.raises(ValueError):
+        obs.percentile_nearest_rank([1.0], 101)
