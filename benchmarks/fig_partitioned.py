@@ -95,6 +95,39 @@ for k in cfg["halo"]:
                                      else hist["epoch_time"][-1]),
                       "loss": hist["loss"][-1], "cut": 0.0,
                       "eb": 0}), flush=True)
+# precision x compression sweep (gcn): exchange bytes come from the obs
+# metrics registry (comm.ring.*_bytes), step time and final-loss delta
+# vs the fp32 row ride along (DESIGN.md SS12)
+from repro.obs import metrics as _metrics
+from repro.optim import Precision
+S = 4 if 4 in cfg["shards"] else max(cfg["shards"])
+mesh = make_shard_mesh(S)
+params = gcn.init(jax.random.PRNGKey(0), feats.shape[1], 64, nc)
+base_loss = None
+for pname, comm in (("fp32", "none"), ("bf16", "none"),
+                    ("fp32", "int8"), ("bf16", "int8")):
+    prec = Precision.parse(pname, comm=comm)
+    prev = _metrics.set_enabled(True)
+    _metrics.reset_metrics()
+    _, hist = train_partitioned(
+        gcn.forward_partitioned, params, g, feats, labels, tm,
+        n_shards=S, mesh=mesh, epochs=cfg["epochs"], drop=0.0, seed=1,
+        precision=prec,
+        init_comm_fn=gcn.init_comm if comm == "int8" else None)
+    snap = _metrics.snapshot()
+    _metrics.set_enabled(prev)
+    loss = hist["loss"][-1]
+    if base_loss is None:
+        base_loss = loss
+    print(json.dumps({"kind": "prec_row", "app": "gcn", "shards": S,
+                      "precision": prec.tag(),
+                      "epoch_time": hist["epoch_time"][-1],
+                      "loss": loss, "loss_delta": loss - base_loss,
+                      "raw_bytes": snap.get("comm.ring.raw_bytes",
+                                            {}).get("value", 0),
+                      "wire_bytes": snap.get("comm.ring.wire_bytes",
+                                             {}).get("value", 0)}),
+          flush=True)
 print(json.dumps({"kind": "plans",
                   "plans": {f"{op}|{req}": dict(cnt) for (op, req), cnt
                             in planner.plan_log().items()}}), flush=True)
@@ -161,6 +194,16 @@ def main() -> None:
             else:
                 derived += " stale-epoch"
             print(row(name, msg["epoch_time"], derived))
+        elif msg["kind"] == "prec_row":
+            tag = msg["precision"].replace("+", "_")
+            name = f"figp_{DATASET}_{msg['app']}_s{msg['shards']}_{tag}"
+            ratio = (msg["raw_bytes"] / msg["wire_bytes"]
+                     if msg["wire_bytes"] else float("nan"))
+            print(row(name, msg["epoch_time"],
+                      f"loss={msg['loss']:.3f}"
+                      f" dloss={msg['loss_delta']:+.4f}"
+                      f" wire={msg['wire_bytes']}"
+                      f" comp={ratio:.2f}x"))
         elif msg["kind"] == "plans":
             # replay the child's decisions into the parent's plan log so
             # the BENCH json reports them like every other section

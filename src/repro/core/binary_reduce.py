@@ -212,8 +212,17 @@ def gspmm(g: Graph, op_name: str, *,
                               ell=ell, tiles=tiles, runner=runner)
     # eager calls are fenced + timed under the op's plan-log key, so
     # drift_report can hold the cost model against reality
-    return _timed(spec.name,
-                  lambda: _execute(g, spec, lhs_data, rhs_data, plan))
+    out = _timed(spec.name,
+                 lambda: _execute(g, spec, lhs_data, rhs_data, plan))
+    # node outputs keep the feature operand's dtype: a bf16 feature
+    # against fp32 edge norms silently promotes the message stream to
+    # fp32 under JAX's type rules, which would upcast every layer of a
+    # half-precision model after its first aggregation
+    if (jnp.issubdtype(lhs_data.dtype, jnp.floating)
+            and jnp.issubdtype(out.dtype, jnp.floating)
+            and out.dtype != lhs_data.dtype):
+        out = out.astype(lhs_data.dtype)
+    return out
 
 
 # --------------------------------------------------------------------- #
@@ -453,12 +462,17 @@ def _gspmm_ring(g: Graph, spec: BRSpec, pg, lhs_data, rhs_data
     from .partition import ring_gspmm
 
     ctx = planner.active_ring()
+    # weights stay at ≥fp32: degree norms truncated to bf16 before the
+    # multiply lose precision the fp32 accumulators can't win back
+    wdt = (jnp.promote_types(lhs_data.dtype, jnp.float32)
+           if jnp.issubdtype(lhs_data.dtype, jnp.floating)
+           else lhs_data.dtype)
     if spec.op == "mul":
         w = rhs_data[:, 0]
     else:                       # copy
-        w = jnp.ones((g.n_edges,), lhs_data.dtype)
+        w = jnp.ones((g.n_edges,), wdt)
     if spec.reduce == "mean":
-        deg = jnp.maximum(g.in_degrees, 1).astype(lhs_data.dtype)
+        deg = jnp.maximum(g.in_degrees, 1).astype(wdt)
         dst_caller = jnp.take(g.dst, g.eid_inv)
         w = w / jnp.take(deg, dst_caller)
     out = ring_gspmm(pg, pg.scatter_nodes(lhs_data), pg.scatter_edges(w),

@@ -309,7 +309,8 @@ def block_gspmm(bg: BlockGraph, op_name: str, *,
             return _block_execute(bg, spec, lhs_data, rhs_data, s)
 
     chosen = planner.plan_block_gspmm(bg.signature, spec, d,
-                                      requested=strategy, runner=runner)
+                                      requested=strategy, runner=runner,
+                                      dtype=str(lhs_data.dtype))
 
     bwd_runner = None
     if (planner.get_mode() == "autotune" and bwd_strategy == "auto"
@@ -326,7 +327,8 @@ def block_gspmm(bg: BlockGraph, op_name: str, *,
     bwd = planner.plan_block_vjp(bg.signature, spec, d,
                                  requested=bwd_strategy,
                                  gather_available=bg.has_reverse,
-                                 runner=bwd_runner)
+                                 runner=bwd_runner,
+                                 dtype=str(lhs_data.dtype))
     # eager calls (serve fan-out, the sampled-train drift probe) are
     # fenced + timed under the block's plan-log key; in-trace calls
     # pass straight through

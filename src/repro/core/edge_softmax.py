@@ -216,7 +216,8 @@ def fused_attention(g: Graph, el: jnp.ndarray, er: jnp.ndarray,
     chosen = planner.plan_attention((g.n_src, g.n_dst, g.n_edges), H, F,
                                     requested=strategy,
                                     pallas_ok=pallas_ok,
-                                    padded_slots=padded_slots)
+                                    padded_slots=padded_slots,
+                                    dtype=str(z.dtype))
     if chosen == "ring":
         raise ValueError("strategy='ring' needs a PartitionedGraph — "
                          "use fused_attention_partitioned")
@@ -268,7 +269,7 @@ def fused_attention_partitioned(pg, el: jnp.ndarray, er: jnp.ndarray,
     F = z.shape[-1]
     n_edges = pg.n_shards * pg.n_shards * pg.eb
     planner.plan_attention((pg.n_pad, pg.n_pad, n_edges), H, F,
-                           requested="ring")
+                           requested="ring", dtype=str(z.dtype))
     logits = ring_edge_values(pg, el, er, mesh=mesh, axis=axis)
     logits = jnp.where(logits >= 0, logits, negative_slope * logits)
     alpha = bucket_softmax(pg, logits)

@@ -676,10 +676,12 @@ def hetero_block_gspmm(bg, rel: jnp.ndarray, u: jnp.ndarray,
     spec = parse_op("e_copy_add_v")
     d_out = int(w.shape[-1])
     chosen = planner.plan_block_gspmm(bg.signature, spec, d_out,
-                                      requested=strategy)
+                                      requested=strategy,
+                                      dtype=str(u.dtype))
     bwd = planner.plan_block_vjp(bg.signature, spec, d_out,
                                  requested=bwd_strategy,
-                                 gather_available=bg.has_reverse)
+                                 gather_available=bg.has_reverse,
+                                 dtype=str(u.dtype))
     if bwd == "gather":
         return _hetero_block_rev(chosen, bg, rel, u, w, norm)
     msg = _block_messages(bg, rel, u, w, norm)

@@ -46,13 +46,43 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from .graph import Graph
+from ..obs import metrics as _metrics
+from ..optim.compression import compress_payload, wire_bytes
 
 __all__ = ["PartitionStats", "PartitionedGraph", "build_partition",
            "ring_gspmm", "ring_edge_values", "bucket_softmax",
            "local_gspmm", "ring_gspmm_delayed", "ring_reference",
-           "PARTITION_MODES"]
+           "PARTITION_MODES", "COMM_MODES"]
 
 PARTITION_MODES = ("contiguous", "hash", "uniform")
+COMM_MODES = ("none", "int8")
+
+
+def _acc_dtype(dtype):
+    """Reduce accumulators never drop below fp32: bf16 features sum in
+    fp32 and only the final output is cast back (DESIGN.md §12)."""
+    if jnp.issubdtype(dtype, jnp.floating):
+        return jnp.promote_types(dtype, jnp.float32)
+    return dtype
+
+
+def _count_exchange(pg: "PartitionedGraph", x, comm: str) -> None:
+    """Account one full ring exchange in the obs metrics registry.
+
+    A ring pass moves every source block through S-1 hops: S·(S-1)
+    block-sends of ``rows × feat`` elements. ``raw_bytes`` is what the
+    uncompressed payload would weigh at ``x.dtype``; ``wire_bytes`` is
+    what actually travels under ``comm`` (int8 + per-block fp32
+    scales). Both counters bump together, so their ratio is the
+    measured compression factor regardless of call count.
+    """
+    if not _metrics.enabled() or pg.n_shards < 2:
+        return
+    elems = pg.rows * int(np.prod(x.shape[1:], dtype=np.int64))
+    raw, wire = wire_bytes(elems, jnp.dtype(x.dtype).itemsize, comm)
+    hops = pg.n_shards * (pg.n_shards - 1)
+    _metrics.counter("comm.ring.raw_bytes").inc(hops * raw)
+    _metrics.counter("comm.ring.wire_bytes").inc(hops * wire)
 
 
 # --------------------------------------------------------------------- #
@@ -240,8 +270,11 @@ def _stage_reduce(block, gather_idx, scatter_idx, mk, wb, out):
     scatter=dst); the transposed ring swaps the two index roles."""
     vals = jnp.take(block, gather_idx, axis=0)           # (eb, *feat)
     if wb is not None:
+        # the weight (degree norm / attention) stays at ITS dtype —
+        # fp32 norms must not be truncated to bf16 before the multiply
         wv = wb.reshape(wb.shape + (1,) * (vals.ndim - wb.ndim))
         vals = vals * wv
+    vals = vals.astype(out.dtype)
     mask = mk.reshape(mk.shape + (1,) * (vals.ndim - 1))
     vals = jnp.where(mask, vals, jnp.zeros((), vals.dtype))
     return out.at[scatter_idx].add(vals)
@@ -251,7 +284,8 @@ def _edge_dot(xg, cg, mk, head_rank):
     """Per-slot <x, ct> reduced over the trailing feature axes that the
     weight does NOT carry: (eb,) for scalar weights, (eb, H) for
     per-head weights on (H, F) features."""
-    prod = xg * cg                                        # (eb, *feat)
+    acc = _acc_dtype(jnp.promote_types(xg.dtype, cg.dtype))
+    prod = xg.astype(acc) * cg.astype(acc)                # (eb, *feat)
     axes = tuple(range(1 + head_rank, prod.ndim))
     dw = prod.sum(axis=axes) if axes else prod
     mask = mk.reshape(mk.shape + (1,) * (dw.ndim - 1))
@@ -282,13 +316,13 @@ def _ring_fwd_emu(pg: PartitionedGraph, x, w):
     xs = x.reshape((S, rows) + feat)
     outs = []
     for i in range(S):
-        out = jnp.zeros((rows,) + feat, x.dtype)
+        out = jnp.zeros((rows,) + feat, _acc_dtype(x.dtype))
         for j in range(S):
             out = _stage_reduce(xs[j], pg.src_local[i, j],
                                 pg.dst_local[i, j], pg.mask[i, j],
                                 w[i, j], out)
         outs.append(out)
-    return jnp.stack(outs).reshape((S * rows,) + feat)
+    return jnp.stack(outs).reshape((S * rows,) + feat).astype(x.dtype)
 
 
 def _ring_bwd_emu(pg: PartitionedGraph, x, w, ct):
@@ -299,7 +333,7 @@ def _ring_bwd_emu(pg: PartitionedGraph, x, w, ct):
     cts = ct.reshape((S, rows) + feat)
     dxs, dws = [], []
     for j in range(S):           # transposed: iterate SOURCE shards
-        dx = jnp.zeros((rows,) + feat, x.dtype)
+        dx = jnp.zeros((rows,) + feat, _acc_dtype(x.dtype))
         for i in range(S):       # gather at dst, scatter at src (swap)
             dx = _stage_reduce(cts[i], pg.dst_local[i, j],
                                pg.src_local[i, j], pg.mask[i, j],
@@ -330,7 +364,8 @@ def _ring_fwd_mesh(pg: PartitionedGraph, mesh, axis, x, w):
         me = jax.lax.axis_index(axis)
         block = xb[0]
         sl, dl, mk, wb = sl[0], dl[0], mk[0], wb[0]
-        out = _maybe_pvary(jnp.zeros((rows,) + feat, x.dtype), axis)
+        out = _maybe_pvary(jnp.zeros((rows,) + feat,
+                                     _acc_dtype(x.dtype)), axis)
 
         def stage(s, carry):
             out, block = carry
@@ -345,7 +380,7 @@ def _ring_fwd_mesh(pg: PartitionedGraph, mesh, axis, x, w):
             return out, nxt
 
         out, _ = jax.lax.fori_loop(0, S, stage, (out, block))
-        return out[None]
+        return out.astype(x.dtype)[None]
 
     bucket = P(axis, None, None)
     f = shard_map(local_fn, mesh=mesh,
@@ -377,7 +412,8 @@ def _ring_bwd_mesh(pg: PartitionedGraph, mesh, axis, x, w, ct):
         wrow = wb[0]                       # (S, eb[, H]) — my dst row
         sl, dl, mk = sl[0], dl[0], mk[0]   # buckets (me, :)
         slt, dlt, mkt = slt[0], dlt[0], mkt[0]   # buckets (:, me)
-        dx = _maybe_pvary(jnp.zeros((rows,) + feat, x.dtype), axis)
+        dx = _maybe_pvary(jnp.zeros((rows,) + feat,
+                                    _acc_dtype(x.dtype)), axis)
         dw = _maybe_pvary(jnp.zeros(wrow.shape, w.dtype), axis)
 
         def stage(s, carry):
@@ -418,20 +454,8 @@ def _ring_bwd_mesh(pg: PartitionedGraph, mesh, axis, x, w, ct):
     return dx.reshape((S * rows,) + feat).astype(x.dtype), dw
 
 
-def ring_gspmm(pg: PartitionedGraph, x: jnp.ndarray, w: jnp.ndarray, *,
-               mesh: Optional[Mesh] = None,
-               axis: str = "data") -> jnp.ndarray:
-    """Sharded weighted CR-sum: ``out[v] = Σ_{e=(u→v)} w_e · x[u]``.
-
-    ``x``: (n_pad, *feat) in padded layout (see
-    :meth:`PartitionedGraph.scatter_nodes`); ``w``: bucketed weights
-    (S, S, eb) scalar or (S, S, eb, H) per-head against (H, F) features
-    (see :meth:`~PartitionedGraph.scatter_edges`; pass bucketed ones for
-    plain CR-sum; fold 1/deg into ``w`` for mean). Returns (n_pad,
-    *feat) destination sums. Differentiable w.r.t. both ``x`` and ``w``
-    via the transposed ring; with ``mesh=None`` the same math (and the
-    same custom VJP) runs emulated on one device.
-    """
+def _ring_call(pg: PartitionedGraph, x, w, mesh, axis):
+    """The raw differentiable ring (custom transposed-ring VJP)."""
     if mesh is None:
         @jax.custom_vjp
         def f(x, w):
@@ -450,11 +474,52 @@ def ring_gspmm(pg: PartitionedGraph, x: jnp.ndarray, w: jnp.ndarray, *,
     return f(x, w)
 
 
+def ring_gspmm(pg: PartitionedGraph, x: jnp.ndarray, w: jnp.ndarray, *,
+               mesh: Optional[Mesh] = None, axis: str = "data",
+               comm: str = "none", residual: Optional[jnp.ndarray] = None):
+    """Sharded weighted CR-sum: ``out[v] = Σ_{e=(u→v)} w_e · x[u]``.
+
+    ``x``: (n_pad, *feat) in padded layout (see
+    :meth:`PartitionedGraph.scatter_nodes`); ``w``: bucketed weights
+    (S, S, eb) scalar or (S, S, eb, H) per-head against (H, F) features
+    (see :meth:`~PartitionedGraph.scatter_edges`; pass bucketed ones for
+    plain CR-sum; fold 1/deg into ``w`` for mean). Returns (n_pad,
+    *feat) destination sums. Differentiable w.r.t. both ``x`` and ``w``
+    via the transposed ring; with ``mesh=None`` the same math (and the
+    same custom VJP) runs emulated on one device.
+
+    ``comm="int8"`` puts the cross-shard payload on the compressed wire
+    (DESIGN.md §12): each source block is quantized ONCE at its owner —
+    blockwise int8 + per-256-value fp32 scale, with the error-feedback
+    ``residual`` (an (n_pad, *feat) fp32 array, required) folded in so
+    compression stays unbiased across steps — and the quantized block
+    is what circulates the ring. Owner-local (diagonal-bucket) edges
+    read the RAW features; only remote consumers see the dequantized
+    values. The straight-through estimator makes the wire transparent
+    to autodiff. Returns ``(out, new_residual)``.
+    """
+    if comm not in COMM_MODES:
+        raise ValueError(f"comm must be one of {COMM_MODES}: {comm!r}")
+    if comm == "none":
+        _count_exchange(pg, x, "none")
+        return _ring_call(pg, x, w, mesh, axis)
+    if residual is None:
+        raise ValueError('comm="int8" needs the error-feedback residual '
+                         "(init with jnp.zeros((n_pad, *feat), float32))")
+    y, new_residual = compress_payload(x, residual)
+    _count_exchange(pg, x, "int8")
+    out = (local_gspmm(pg, x, w)
+           + _ring_call(pg, y, offdiag_weights(pg, w), mesh, axis))
+    return out, new_residual
+
+
 def ring_reference(pg: PartitionedGraph, x: jnp.ndarray,
                    w: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Single-device oracle (same padded layout, plain loop, no VJP)."""
     if w is None:
-        w = jnp.where(pg.mask, 1.0, 0.0).astype(x.dtype)
+        # fp32 weights even for bf16 x: the norm/one weights must not be
+        # truncated to the feature dtype (the reduce casts at the end)
+        w = jnp.where(pg.mask, 1.0, 0.0)
     return _ring_fwd_emu(pg, x, w)
 
 
@@ -480,7 +545,7 @@ def _rev_fwd_emu(pg, el, er):
 
 def _rev_bwd_emu(pg, ct):
     S, rows, eb = pg.n_shards, pg.rows, pg.eb
-    dtype = ct.dtype
+    dtype = _acc_dtype(ct.dtype)
     feat = ct.shape[3:]
     dels, ders = [], []
     for j in range(S):
@@ -496,8 +561,8 @@ def _rev_bwd_emu(pg, ct):
             dr = _stage_reduce(ct[i, j], jnp.arange(eb),
                                pg.dst_local[i, j], pg.mask[i, j], None, dr)
         ders.append(dr)
-    d_el = jnp.stack(dels).reshape((S * rows,) + feat)
-    d_er = jnp.stack(ders).reshape((S * rows,) + feat)
+    d_el = jnp.stack(dels).reshape((S * rows,) + feat).astype(ct.dtype)
+    d_er = jnp.stack(ders).reshape((S * rows,) + feat).astype(ct.dtype)
     return d_el, d_er
 
 
@@ -543,7 +608,7 @@ def _rev_fwd_mesh(pg, mesh, axis, el, er):
 def _rev_bwd_mesh(pg, mesh, axis, ct):
     from jax.experimental.shard_map import shard_map
     S, rows, eb = pg.n_shards, pg.rows, pg.eb
-    dtype = ct.dtype
+    dtype = _acc_dtype(ct.dtype)
     feat = ct.shape[3:]
     slT = jnp.swapaxes(pg.src_local, 0, 1)
     mkT = jnp.swapaxes(pg.mask, 0, 1)
@@ -573,7 +638,7 @@ def _rev_bwd_mesh(pg, mesh, axis, ct):
             return d_el, nxt
 
         d_el, _ = jax.lax.fori_loop(0, S, stage, (d_el, ct_row))
-        return d_el[None], d_er[None]
+        return d_el.astype(ct.dtype)[None], d_er.astype(ct.dtype)[None]
 
     bucket = P(axis, None, None)
     cspec = P(axis, *([None] * (2 + len(feat))))
@@ -664,8 +729,10 @@ def local_gspmm(pg: PartitionedGraph, x: jnp.ndarray,
     wv = wd.reshape((-1,) + wd.shape[2:])
     wv = wv.reshape(wv.shape + (1,) * (vals.ndim - wv.ndim))
     mkr = mk.reshape((-1,) + (1,) * len(feat))
-    vals = jnp.where(mkr, vals * wv, jnp.zeros((), vals.dtype))
-    return jnp.zeros((pg.n_pad,) + feat, x.dtype).at[gdst].add(vals)
+    vals = (vals * wv).astype(_acc_dtype(x.dtype))
+    vals = jnp.where(mkr, vals, jnp.zeros((), vals.dtype))
+    acc = jnp.zeros((pg.n_pad,) + feat, _acc_dtype(x.dtype))
+    return acc.at[gdst].add(vals).astype(x.dtype)
 
 
 def offdiag_weights(pg: PartitionedGraph, w: jnp.ndarray) -> jnp.ndarray:
@@ -677,19 +744,40 @@ def offdiag_weights(pg: PartitionedGraph, w: jnp.ndarray) -> jnp.ndarray:
 
 def ring_gspmm_delayed(pg: PartitionedGraph, x: jnp.ndarray,
                        w: jnp.ndarray, stale: jnp.ndarray, refresh: bool,
-                       *, mesh: Optional[Mesh] = None, axis: str = "data"
-                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+                       *, mesh: Optional[Mesh] = None, axis: str = "data",
+                       comm: str = "none",
+                       residual: Optional[jnp.ndarray] = None):
     """Weighted CR with a delayed halo: ``out = local + remote`` where
     the remote partial (all cross-shard buckets) is recomputed only when
     ``refresh`` (a static Python bool) and otherwise reused from
     ``stale``. Gradients always flow through the local part; through
     the remote part only on refresh steps. Returns ``(out, remote)``
     with the returned remote detached — carry it as the next step's
-    ``stale``. A refresh step is numerically exact."""
+    ``stale``. A refresh step is numerically exact.
+
+    ``comm="int8"`` compresses the refresh exchange exactly like
+    :func:`ring_gspmm` (requires ``residual``; the local part still
+    reads raw features). Skipped-refresh steps move no bytes, so the
+    residual passes through untouched. Returns
+    ``(out, remote, new_residual)``.
+    """
+    if comm not in COMM_MODES:
+        raise ValueError(f"comm must be one of {COMM_MODES}: {comm!r}")
     loc = local_gspmm(pg, x, w)
+    if comm == "int8":
+        if residual is None:
+            raise ValueError('comm="int8" needs the error-feedback '
+                             "residual")
+        if refresh:
+            y, residual = compress_payload(x, residual)
+            _count_exchange(pg, x, "int8")
+            remote = _ring_call(pg, y, offdiag_weights(pg, w), mesh, axis)
+        else:
+            remote = jax.lax.stop_gradient(stale)
+        return loc + remote, jax.lax.stop_gradient(remote), residual
     if refresh:
-        remote = ring_gspmm(pg, x, offdiag_weights(pg, w),
-                            mesh=mesh, axis=axis)
+        _count_exchange(pg, x, "none")
+        remote = _ring_call(pg, x, offdiag_weights(pg, w), mesh, axis)
     else:
         remote = jax.lax.stop_gradient(stale)
     return loc + remote, jax.lax.stop_gradient(remote)

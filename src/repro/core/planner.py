@@ -47,6 +47,7 @@ from .tiling import (ELLClass, ELLPack, TilePack, build_ell,
 from ..obs import events as _obs_events
 from ..obs import metrics as _obs_metrics
 from ..obs.events import drift_report, plan_events  # noqa: F401 (re-export)
+from ..optim.compression import wire_bytes as _wire_bytes
 
 __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
            "compute_stats", "estimate_cost", "plan_gspmm", "supports",
@@ -357,28 +358,54 @@ _THROUGHPUT = {
             "onehot": 64.0, "pallas": 512.0, "ring": 0.5},
     "tpu": {"push": 8.0, "segment": 1.5, "ell": 0.8,
             "onehot": 0.5, "pallas": 0.25, "ring": 0.6},
+    # Half precision shifts the table unevenly: the streaming forms
+    # (blocked pull, ring stages, segment reduce) are memory-bound, so
+    # halving the element footprint buys them more than the
+    # scatter/dispatch-bound paths — the ell/segment break-even moves
+    # from pad_ratio ≈ 2.9 to ≈ 3.9 at bf16 (DESIGN.md §12).
+    "cpu:bf16": {"push": 5.5, "segment": 0.85, "ell": 0.22,
+                 "onehot": 64.0, "pallas": 512.0, "ring": 0.35},
+    "tpu:bf16": {"push": 7.0, "segment": 1.1, "ell": 0.5,
+                 "onehot": 0.35, "pallas": 0.15, "ring": 0.4},
 }
 # Fixed per-call overhead (dispatch + padding setup), in element-ops.
 _FIXED = {"push": 0.0, "segment": 0.0, "ell": 2e4,
           "onehot": 5e4, "pallas": 5e4, "ring": 1e5}
 _ELL_CLASS_OVERHEAD = 1.5e3     # per degree class: one segment combine
 _TILE_EDGE_BUDGET = 256         # eb — edge slots per tile bucket
-_RING_COMM = 0.3   # per element moved per ring stage (ppermute traffic)
+_RING_COMM = 0.3   # per fp32-equivalent element moved per ring stage
 _RING_DEFAULT_SHARDS = 8        # nominal S when no ring context is live
+
+
+def _throughput_row(backend: Optional[str], dtype) -> Dict[str, float]:
+    """Backend throughput row, refined by element dtype when a
+    half-precision row exists (``"<backend>:bf16"``)."""
+    backend = backend or jax.default_backend()
+    if dtype is not None and jnp.dtype(dtype) == jnp.dtype(jnp.bfloat16):
+        row = _THROUGHPUT.get(f"{backend}:bf16")
+        if row is None:
+            row = _THROUGHPUT.get("cpu:bf16")
+        return row
+    return _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])
 
 
 def estimate_cost(strategy: str, stats: GraphStats, d: int,
                   backend: Optional[str] = None,
-                  ring_stats=None) -> float:
+                  ring_stats=None, dtype=None,
+                  comm: Optional[str] = None) -> float:
     """Estimated execution cost of one gspmm call, in element-ops.
 
     ``ring_stats`` (a :class:`~repro.core.partition.PartitionStats`)
     refines the ``ring`` estimate with the real bucket padding; without
     it the estimate assumes ideal balance over the active (or nominal)
-    shard count.
+    shard count. ``dtype`` (operand element type, default fp32) selects
+    the per-precision throughput row and sizes the ring's communication
+    term in bytes; ``comm`` ("none"/"int8", default the active ring
+    context's wire mode) prices that term at the compressed payload —
+    so auto can flip toward ``ring`` exactly when compression makes the
+    exchange cheap enough.
     """
-    backend = backend or jax.default_backend()
-    tp = _THROUGHPUT.get(backend, _THROUGHPUT["cpu"])[strategy]
+    tp = _throughput_row(backend, dtype)[strategy]
     dd = max(int(d), 1)
     if strategy in ("push", "segment"):
         work = stats.n_edges * dd
@@ -397,8 +424,14 @@ def estimate_cost(strategy: str, stats: GraphStats, d: int,
             S = ctx.n_shards if ctx is not None else _RING_DEFAULT_SHARDS
             rows = -(-max(stats.n_dst, 1) // S)
             work = (stats.n_edges / S) * dd          # ideal balance
-        comm = _RING_COMM * (S - 1) * rows * dd
-        return tp * work + comm + _FIXED[strategy]
+        if comm is None:
+            comm = ctx.comm if ctx is not None else "none"
+        itemsize = jnp.dtype(dtype or jnp.float32).itemsize
+        _, wire = _wire_bytes(rows * dd, itemsize, comm)
+        # _RING_COMM is calibrated per fp32 element — normalize the
+        # wire payload back to fp32-equivalent elements
+        comm_cost = _RING_COMM * (S - 1) * (wire / 4.0)
+        return tp * work + comm_cost + _FIXED[strategy]
     else:  # onehot / pallas: padded tile-bucket slots (lower bound on T)
         n_buckets = max(1, -(-stats.n_edges // _TILE_EDGE_BUDGET))
         work = n_buckets * _TILE_EDGE_BUDGET * dd
@@ -413,10 +446,15 @@ def estimate_cost(strategy: str, stats: GraphStats, d: int,
 # --------------------------------------------------------------------- #
 @dataclasses.dataclass(frozen=True)
 class RingContext:
-    """An installed device mesh makes ``ring`` a planner candidate."""
+    """An installed device mesh makes ``ring`` a planner candidate.
+
+    ``comm`` declares the cross-shard wire mode ("none"/"int8") so the
+    cost model prices the exchange at the payload that actually moves.
+    """
     mesh: Any               # jax.sharding.Mesh
     axis: str = "data"
     mode: str = "contiguous"
+    comm: str = "none"
 
     @property
     def n_shards(self) -> int:
@@ -431,7 +469,8 @@ def active_ring() -> Optional[RingContext]:
 
 
 @contextlib.contextmanager
-def use_ring(mesh, axis: str = "data", mode: str = "contiguous"):
+def use_ring(mesh, axis: str = "data", mode: str = "contiguous",
+             comm: str = "none"):
     """Enable partitioned (ring) execution for ``gspmm`` while active.
 
     Without an active context — or when the mesh is gone — ``ring``
@@ -440,7 +479,7 @@ def use_ring(mesh, axis: str = "data", mode: str = "contiguous"):
     """
     global _RING_CTX
     prev = _RING_CTX
-    _RING_CTX = RingContext(mesh=mesh, axis=axis, mode=mode)
+    _RING_CTX = RingContext(mesh=mesh, axis=axis, mode=mode, comm=comm)
     try:
         yield _RING_CTX
     finally:
@@ -511,12 +550,13 @@ _WARNED: set = set()
 
 
 def _record(spec_name: str, requested: str, chosen: str,
-            predicted: Optional[float] = None) -> None:
+            predicted: Optional[float] = None,
+            dtype: Optional[str] = None) -> None:
     key = (spec_name, requested)
     _PLAN_LOG.setdefault(key, Counter())[chosen] += 1
     _LAST_PLAN[key] = chosen
     _obs_events.plan_event(spec_name, requested, chosen,
-                           predicted_cost=predicted)
+                           predicted_cost=predicted, dtype=dtype)
 
 
 def plan_log() -> Dict[Tuple[str, str], Dict[str, int]]:
@@ -666,10 +706,13 @@ def plan_gspmm(g: Graph, spec, lhs_data, rhs_data, *,
                    if ctx is not None and cache is not None else None)
             predicted = estimate_cost(chosen, stats, d,
                                       ring_stats=None if pgp is None
-                                      else pgp.stats)
+                                      else pgp.stats,
+                                      dtype=lhs_data.dtype)
         else:
-            predicted = estimate_cost(chosen, stats, d)
-    _record(spec.name, requested, chosen, predicted)
+            predicted = estimate_cost(chosen, stats, d,
+                                      dtype=lhs_data.dtype)
+    _record(spec.name, requested, chosen, predicted,
+            dtype=str(lhs_data.dtype))
     return plan
 
 
@@ -710,8 +753,8 @@ def _plan_auto(spec, lhs_data, rhs_data, stats, ok, cache, runner,
             pgp = cache.peek_partition(ctx.n_shards, ctx.mode)
             return estimate_cost(s, stats, d,
                                  ring_stats=None if pgp is None
-                                 else pgp.stats)
-        return estimate_cost(s, stats, d)
+                                 else pgp.stats, dtype=lhs_data.dtype)
+        return estimate_cost(s, stats, d, dtype=lhs_data.dtype)
 
     chosen = min(candidates, key=cost)
     return chosen, "cost"
@@ -759,7 +802,8 @@ def clear_block_plans() -> None:
 
 def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
                      requested: str = "auto",
-                     runner: Optional[Callable[[str], Any]] = None) -> str:
+                     runner: Optional[Callable[[str], Any]] = None,
+                     dtype: Optional[str] = None) -> str:
     """Pick the execution strategy for one block aggregation.
 
     ``signature`` is :attr:`BlockGraph.signature` — static padded shapes
@@ -779,7 +823,7 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
     from .blocks import block_supports  # local: blocks imports planner
 
     backend = jax.default_backend()
-    key = (signature, spec.name, int(d), requested, backend)
+    key = (signature, spec.name, int(d), requested, backend, dtype)
     log_name = f"block:{spec.name}"
     chosen = _BLOCK_PLANS.get(key)
     if chosen is None:
@@ -797,7 +841,8 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
                 stats = block_stats(*signature)
                 chosen = min(candidates,
                              key=lambda s: estimate_cost(s, stats, d,
-                                                         backend=backend))
+                                                         backend=backend,
+                                                         dtype=dtype))
                 # in autotune mode a traced call (no runner) can't
                 # measure — don't pin its cost-model stand-in, so a
                 # later EAGER call of the same signature still gets to
@@ -818,8 +863,8 @@ def plan_block_gspmm(signature: Tuple[int, int, int, int], spec, d: int,
     predicted = None
     if _obs_events.enabled() and chosen in ("push", "segment", "ell"):
         predicted = estimate_cost(chosen, block_stats(*signature), d,
-                                  backend=backend)
-    _record(log_name, requested, chosen, predicted)
+                                  backend=backend, dtype=dtype)
+    _record(log_name, requested, chosen, predicted, dtype=dtype)
     return chosen
 
 
@@ -888,7 +933,8 @@ def block_bwd_supports(strategy: str, spec) -> bool:
 
 def plan_block_vjp(signature: Tuple[int, int, int, int], spec, d: int,
                    requested: str = "auto", gather_available: bool = True,
-                   runner: Optional[Callable[[str], Any]] = None) -> str:
+                   runner: Optional[Callable[[str], Any]] = None,
+                   dtype: Optional[str] = None) -> str:
     """Pick the backward (differentiation) strategy for one block op.
 
     Shape-keyed and memoized exactly like :func:`plan_block_gspmm`
@@ -940,7 +986,7 @@ def plan_block_vjp(signature: Tuple[int, int, int, int], spec, d: int,
     predicted = None
     if _obs_events.enabled():
         predicted = _block_bwd_cost(chosen, signature, d, backend)
-    _record(log_name, requested, chosen, predicted)
+    _record(log_name, requested, chosen, predicted, dtype=dtype)
     return chosen
 
 
@@ -1187,7 +1233,8 @@ def plan_sddmm(signature: Tuple[int, int, int], spec, d: int,
     predicted = None
     if _obs_events.enabled():
         predicted = _sddmm_cost(chosen, signature[2], d, backend)
-    _record(log_name, requested, chosen, predicted)
+    _record(log_name, requested, chosen, predicted,
+            dtype=None if lhs_data is None else str(lhs_data.dtype))
     return chosen
 
 
@@ -1229,7 +1276,8 @@ def _attn_cost(strategy: str, n_edges: int, hf: int, backend: str,
 
 def plan_attention(signature: Tuple[int, int, int], heads: int, feat: int,
                    requested: str = "auto", pallas_ok: bool = False,
-                   padded_slots: Optional[int] = None) -> str:
+                   padded_slots: Optional[int] = None,
+                   dtype: Optional[str] = None) -> str:
     """Pick the fused-attention execution form; logged ``attn:fused``.
 
     ``signature`` = (n_src, n_dst, n_edges); ``pallas_ok`` — whether
@@ -1263,7 +1311,7 @@ def plan_attention(signature: Tuple[int, int, int], heads: int, feat: int,
         hf = max(int(heads), 1) * max(int(feat), 1)
         predicted = _attn_cost(chosen, signature[2], hf, backend,
                                padded_slots)
-    _record("attn:fused", requested, chosen, predicted)
+    _record("attn:fused", requested, chosen, predicted, dtype=dtype)
     return chosen
 
 

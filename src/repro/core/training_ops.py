@@ -65,7 +65,15 @@ def _pull_weighted(g: Graph, pack: ELLPack, x, w):
         ws = jnp.take(w, cls.chunk_eids, axis=0)          # (C, W, 1)
         return vals * ws
 
-    return S.pull_ell_reduce(pack, msg_fn, "sum", deg=g.in_degrees)
+    out = S.pull_ell_reduce(pack, msg_fn, "sum", deg=g.in_degrees)
+    # bf16 x against fp32 norm weights promotes the message stream (and
+    # thus the reduce) to fp32 — keep that accumulation, but hand back
+    # the feature dtype so half-precision forwards stay half precision
+    if (jnp.issubdtype(x.dtype, jnp.floating)
+            and jnp.issubdtype(out.dtype, jnp.floating)
+            and out.dtype != x.dtype):
+        out = out.astype(x.dtype)
+    return out
 
 
 @partial(jax.custom_vjp, nondiff_argnums=())

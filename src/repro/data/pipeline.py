@@ -124,7 +124,8 @@ class ServeRequest:
     latency benchmark split queueing delay from compute.
     """
 
-    __slots__ = ("rid", "ids", "t_submit", "_event", "_result", "_error")
+    __slots__ = ("rid", "ids", "t_submit", "_event", "_result", "_error",
+                 "_lock")
 
     def __init__(self, rid: int, ids: np.ndarray):
         self.rid = rid
@@ -133,14 +134,26 @@ class ServeRequest:
         self._event = threading.Event()
         self._result = None
         self._error: Optional[BaseException] = None
+        self._lock = threading.Lock()
 
-    def set_result(self, value) -> None:
-        self._result = value
-        self._event.set()
+    def set_result(self, value) -> bool:
+        """Resolve the future — first caller wins (the serving loop and
+        a closing queue may race to settle the same request; the loser
+        is a no-op, never an overwrite). Returns whether this call won."""
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._result = value
+            self._event.set()
+            return True
 
-    def set_error(self, err: BaseException) -> None:
-        self._error = err
-        self._event.set()
+    def set_error(self, err: BaseException) -> bool:
+        with self._lock:
+            if self._event.is_set():
+                return False
+            self._error = err
+            self._event.set()
+            return True
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -183,10 +196,35 @@ class RequestQueue:
         self._q.put(req)
         return req
 
-    def close(self) -> None:
+    def close(self, cancel_pending: bool = False) -> None:
         """No more submissions; pending requests still drain, then the
-        serving loop's iteration ends."""
+        serving loop's iteration ends.
+
+        With ``cancel_pending=True`` queued-but-unserved requests are
+        resolved immediately with a "queue closed" error instead of
+        drained — their blocked ``result()`` callers wake up right away
+        (set_result/set_error are first-wins, so a request the loop
+        already served is untouched).
+        """
         self._closed.set()
+        self._q.put(_DONE)
+        if cancel_pending:
+            self._drain_error()
+
+    def _drain_error(self) -> None:
+        """Error out every queued request and leave one ``_DONE`` behind
+        so iteration keeps terminating. Without this, a request that
+        raced into the queue behind the shutdown sentinel would never be
+        resolved and its ``result()`` caller would hang forever."""
+        while True:
+            try:
+                item = self._q.get_nowait()
+            except queue.Empty:
+                break
+            if item is _DONE:
+                continue
+            item.set_error(RuntimeError(
+                f"request {item.rid} dropped: queue closed"))
         self._q.put(_DONE)
 
     def __iter__(self):
@@ -196,7 +234,10 @@ class RequestQueue:
         # block for the window's first request (or shutdown)
         first = self._q.get()
         if first is _DONE:
-            self._q.put(_DONE)      # keep later next() terminating too
+            # iteration is over: anything still queued (submissions that
+            # raced in behind the sentinel) will never be served — fail
+            # their futures instead of leaving requesters blocked
+            self._drain_error()     # re-queues _DONE for later next()
             raise StopIteration
         window = [first]
         n = len(first.ids)

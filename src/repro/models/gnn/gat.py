@@ -155,7 +155,8 @@ def forward_blocks(params: Dict, blocks, x: jnp.ndarray, *,
 
 def forward_partitioned(params: Dict, pb: PartitionedBundle,
                         x: jnp.ndarray, *, halo=None, refresh: bool = True,
-                        train: bool = False, rng=None, drop: float = 0.4):
+                        comm_state=None, train: bool = False, rng=None,
+                        drop: float = 0.4):
     """Partitioned full-graph GAT (always exact — attention weights are
     parameter-dependent, so a stale remote partial has no DistGNN-style
     formulation; delayed halos are a GCN/SAGE knob).
@@ -165,10 +166,20 @@ def forward_partitioned(params: Dict, pb: PartitionedBundle,
     destination locally (every dst bucket is owner-resident), and a
     second ring pass does the α-weighted aggregation with per-head
     weights.
+
+    int8-compressed exchanges (``comm_state``) are a GCN/SAGE knob too:
+    GAT's exchanges carry pre-softmax logits whose quantization error
+    amplifies through exp(), and the two-ring fused pass has no single
+    payload for error feedback to track (DESIGN.md §12). Train GAT in
+    bf16 with uncompressed rings instead.
     """
     if halo is not None:
         raise ValueError("GAT has no delayed-halo mode (attention "
                          "weights are parameter-dependent)")
+    if comm_state is not None:
+        raise ValueError("GAT has no compressed-comm mode (the fused "
+                         "attention rings exchange pre-softmax logits; "
+                         "see DESIGN.md §12)")
     pg = pb.pg
     h = x
     n_layers = len(params["layers"])

@@ -82,9 +82,19 @@ def init_halo(params: Dict, pg):
                  for lyr in params["layers"])
 
 
+def init_comm(params: Dict, pg):
+    """Zero error-feedback residual for int8-compressed ring exchanges:
+    one fp32 (n_pad, d_out) array per layer — the residual lives at the
+    exchange payload's shape (GCN exchanges the post-linear features).
+    See DESIGN.md §12."""
+    return tuple(jnp.zeros((pg.n_pad, lyr["w"].shape[1]), jnp.float32)
+                 for lyr in params["layers"])
+
+
 def forward_partitioned(params: Dict, pb: PartitionedBundle,
                         x: jnp.ndarray, *, halo=None, refresh: bool = True,
-                        train: bool = False, rng=None, drop: float = 0.5):
+                        comm_state=None, train: bool = False, rng=None,
+                        drop: float = 0.5):
     """Full-graph forward on a vertex-partitioned graph (DESIGN.md §6).
 
     ``x``: (n_pad, d) padded node layout (``pg.scatter_nodes``). With
@@ -92,10 +102,17 @@ def forward_partitioned(params: Dict, pb: PartitionedBundle,
     aggregates are recomputed only when ``refresh`` and otherwise
     reused stale — DistGNN-style delayed halos. Returns
     ``(logits_pad, halo_out)``.
+
+    With ``comm_state`` (a tuple from :func:`init_comm`) every refreshed
+    cross-shard exchange quantizes its payload to int8 with per-block
+    scales and error feedback (DESIGN.md §12); the return grows to
+    ``(logits_pad, halo_out, comm_out)``.
     """
     pg = pb.pg
     h = x
     halo_out = []
+    comm_out = []
+    comm = "none" if comm_state is None else "int8"
     n_layers = len(params["layers"])
     for i, lyr in enumerate(params["layers"]):
         if train and rng is not None:
@@ -103,15 +120,30 @@ def forward_partitioned(params: Dict, pb: PartitionedBundle,
             h = dropout(sub, h, drop, train)
         h = linear_apply(lyr, h)
         if halo is None:
-            h = ring_gspmm(pg, h, pb.gcn_w, mesh=pb.mesh, axis=pb.axis)
+            if comm_state is None:
+                h = ring_gspmm(pg, h, pb.gcn_w, mesh=pb.mesh, axis=pb.axis)
+            else:
+                h, res = ring_gspmm(pg, h, pb.gcn_w, mesh=pb.mesh,
+                                    axis=pb.axis, comm="int8",
+                                    residual=comm_state[i])
+                comm_out.append(res)
         else:
-            h, stale = ring_gspmm_delayed(pg, h, pb.gcn_w, halo[i],
-                                          refresh, mesh=pb.mesh,
-                                          axis=pb.axis)
+            if comm_state is None:
+                h, stale = ring_gspmm_delayed(pg, h, pb.gcn_w, halo[i],
+                                              refresh, mesh=pb.mesh,
+                                              axis=pb.axis)
+            else:
+                h, stale, res = ring_gspmm_delayed(
+                    pg, h, pb.gcn_w, halo[i], refresh, mesh=pb.mesh,
+                    axis=pb.axis, comm="int8", residual=comm_state[i])
+                comm_out.append(res)
             halo_out.append(stale)
         if i < n_layers - 1:
             h = jax.nn.relu(h)
-    return h, tuple(halo_out) if halo is not None else None
+    halo_ret = tuple(halo_out) if halo is not None else None
+    if comm_state is None:
+        return h, halo_ret
+    return h, halo_ret, tuple(comm_out)
 
 
 def infer(params: Dict, bundle: GraphBundle, x: jnp.ndarray, *,

@@ -78,31 +78,60 @@ def init_halo(params: Dict, pg):
                  for lyr in params["layers"])
 
 
+def init_comm(params: Dict, pg):
+    """Zero error-feedback residual for int8-compressed ring exchanges:
+    fp32, at the exchange payload's shape — SAGE exchanges the layer
+    INPUT (width w.shape[0] // 2). See DESIGN.md §12."""
+    return tuple(jnp.zeros((pg.n_pad, lyr["w"].shape[0] // 2), jnp.float32)
+                 for lyr in params["layers"])
+
+
 def forward_partitioned(params: Dict, pb: PartitionedBundle,
                         x: jnp.ndarray, *, halo=None, refresh: bool = True,
-                        train: bool = False, rng=None, drop: float = 0.5):
+                        comm_state=None, train: bool = False, rng=None,
+                        drop: float = 0.5):
     """Partitioned full-graph forward: the neighbor mean is a weighted
     ring CR (1/deg folded into ``pb.mean_w``); the self term needs no
-    communication. Optional DistGNN-style delayed halo as in GCN."""
+    communication. Optional DistGNN-style delayed halo as in GCN, and
+    optional int8-compressed exchanges via ``comm_state`` (a tuple from
+    :func:`init_comm`) — the return then grows to
+    ``(logits_pad, halo_out, comm_out)``."""
     pg = pb.pg
     h = x
     halo_out = []
+    comm_out = []
     n_layers = len(params["layers"])
     for i, lyr in enumerate(params["layers"]):
         if train and rng is not None:
             rng, sub = jax.random.split(rng)
             h = dropout(sub, h, drop, train)
         if halo is None:
-            hn = ring_gspmm(pg, h, pb.mean_w, mesh=pb.mesh, axis=pb.axis)
+            if comm_state is None:
+                hn = ring_gspmm(pg, h, pb.mean_w, mesh=pb.mesh,
+                                axis=pb.axis)
+            else:
+                hn, res = ring_gspmm(pg, h, pb.mean_w, mesh=pb.mesh,
+                                     axis=pb.axis, comm="int8",
+                                     residual=comm_state[i])
+                comm_out.append(res)
         else:
-            hn, stale = ring_gspmm_delayed(pg, h, pb.mean_w, halo[i],
-                                           refresh, mesh=pb.mesh,
-                                           axis=pb.axis)
+            if comm_state is None:
+                hn, stale = ring_gspmm_delayed(pg, h, pb.mean_w, halo[i],
+                                               refresh, mesh=pb.mesh,
+                                               axis=pb.axis)
+            else:
+                hn, stale, res = ring_gspmm_delayed(
+                    pg, h, pb.mean_w, halo[i], refresh, mesh=pb.mesh,
+                    axis=pb.axis, comm="int8", residual=comm_state[i])
+                comm_out.append(res)
             halo_out.append(stale)
         h = linear_apply(lyr, jnp.concatenate([h, hn], axis=-1))
         if i < n_layers - 1:
             h = jax.nn.relu(h)
-    return h, tuple(halo_out) if halo is not None else None
+    halo_ret = tuple(halo_out) if halo is not None else None
+    if comm_state is None:
+        return h, halo_ret
+    return h, halo_ret, tuple(comm_out)
 
 
 def forward_sampled(params: Dict, blocks, feats_fn, *,

@@ -32,22 +32,40 @@ from ...data.sampler import NeighborSampler
 from ...obs import events as _obs_events
 from ...obs.signatures import SignatureTracker
 from ...obs.spans import span as _span
-from ...optim import adamw, apply_updates, clip_by_global_norm
+from ...optim import (adamw, apply_updates, cast_logits, cast_tree,
+                      clip_by_global_norm, Precision)
 from ...substrate.nn import cross_entropy_loss, accuracy
 from .common import (block_features, make_partitioned_bundle,
                      pad_features, shard_partitioned)
 
 
+def _resolve_precision(precision) -> Precision:
+    """Accept None (fp32), a name ("fp32"/"bf16"), or a Precision."""
+    if precision is None:
+        return Precision.fp32()
+    if isinstance(precision, str):
+        return Precision.parse(precision)
+    return precision
+
+
 def make_train_step(forward_fn: Callable, strategy: str, lr: float = 1e-2,
-                    weight_decay: float = 5e-4, clip: float = 5.0):
+                    weight_decay: float = 5e-4, clip: float = 5.0,
+                    precision=None):
+    """Mixed precision (DESIGN.md §12): parameters and optimizer moments
+    stay fp32 master copies; the forward runs on ``precision.compute``
+    casts, the loss is always taken on fp32 logits, and the cast's VJP
+    hands fp32 gradients back to AdamW — SplitSGD-style."""
+    precision = _resolve_precision(precision)
     opt_init, opt_update = adamw(lr, weight_decay=weight_decay)
 
     @partial(jax.jit, static_argnames=())
     def step(params, opt_state, step_i, bundle, x, labels, mask, rng):
         def loss_fn(p):
-            logits = forward_fn(p, bundle, x, strategy=strategy,
+            pc = cast_tree(p, precision.compute)
+            xc = cast_tree(x, precision.compute)
+            logits = forward_fn(pc, bundle, xc, strategy=strategy,
                                 train=True, rng=rng)
-            return cross_entropy_loss(logits, labels, mask)
+            return cross_entropy_loss(cast_logits(logits), labels, mask)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
         grads, _ = clip_by_global_norm(grads, clip)
@@ -61,9 +79,11 @@ def make_train_step(forward_fn: Callable, strategy: str, lr: float = 1e-2,
 def train_full_graph(forward_fn: Callable, params: Dict, bundle, x,
                      labels, train_mask, *, strategy: str = "auto",
                      epochs: int = 10, lr: float = 1e-2, seed: int = 0,
-                     val_mask=None) -> Tuple[Dict, Dict]:
+                     val_mask=None, precision=None) -> Tuple[Dict, Dict]:
     """Returns (params, history) with per-epoch times and losses."""
-    opt_init, step = make_train_step(forward_fn, strategy, lr=lr)
+    precision = _resolve_precision(precision)
+    opt_init, step = make_train_step(forward_fn, strategy, lr=lr,
+                                     precision=precision)
     opt_state = opt_init(params)
     x = jnp.asarray(x)
     labels = jnp.asarray(labels)
@@ -96,7 +116,8 @@ def train_full_graph(forward_fn: Callable, params: Dict, bundle, x,
 def make_partitioned_train_step(forward_part_fn: Callable,
                                 lr: float = 1e-2,
                                 weight_decay: float = 5e-4,
-                                clip: float = 5.0, drop: float = 0.0):
+                                clip: float = 5.0, drop: float = 0.0,
+                                precision=None):
     """One jitted step over padded sharded node arrays.
 
     ``forward_part_fn(params, pb, x, halo=..., refresh=..., ...)``
@@ -106,24 +127,44 @@ def make_partitioned_train_step(forward_part_fn: Callable,
     GSPMD emit the gradient all-reduce on its own. ``refresh`` is
     static: exact steps and stale-halo steps are two compilations of
     the same function.
+
+    Mixed precision works as in :func:`make_train_step` (fp32 masters,
+    compute-dtype casts inside the loss, fp32 logits). When
+    ``precision.comm == "int8"`` the step carries the per-layer
+    error-feedback residual ``comm`` (from the model's ``init_comm``)
+    through the train state: the forward is called with
+    ``comm_state=comm`` and its third return becomes next step's
+    residual. ``comm=None`` runs uncompressed exchanges; the step
+    returns ``(params, opt_state, loss, halo_out, comm_out)`` either
+    way (``comm_out`` mirrors ``comm``'s None-ness).
     """
+    precision = _resolve_precision(precision)
     opt_init, opt_update = adamw(lr, weight_decay=weight_decay)
 
     @partial(jax.jit, static_argnames=("refresh",))
-    def step(params, opt_state, step_i, pb, xp, yp, mp, halo, rng,
+    def step(params, opt_state, step_i, pb, xp, yp, mp, halo, comm, rng,
              refresh=True):
         def loss_fn(p):
-            logits, halo_out = forward_part_fn(
-                p, pb, xp, halo=halo, refresh=refresh,
-                train=True, rng=rng, drop=drop)
-            return cross_entropy_loss(logits, yp, mp), halo_out
+            pc = cast_tree(p, precision.compute)
+            xc = cast_tree(xp, precision.compute)
+            if comm is None:
+                logits, halo_out = forward_part_fn(
+                    pc, pb, xc, halo=halo, refresh=refresh,
+                    train=True, rng=rng, drop=drop)
+                comm_out = None
+            else:
+                logits, halo_out, comm_out = forward_part_fn(
+                    pc, pb, xc, halo=halo, refresh=refresh,
+                    comm_state=comm, train=True, rng=rng, drop=drop)
+            return (cross_entropy_loss(cast_logits(logits), yp, mp),
+                    (halo_out, comm_out))
 
-        (loss, halo_out), grads = jax.value_and_grad(
+        (loss, (halo_out, comm_out)), grads = jax.value_and_grad(
             loss_fn, has_aux=True)(params)
         grads, _ = clip_by_global_norm(grads, clip)
         ups, opt_state = opt_update(grads, opt_state, params, step_i)
         params = apply_updates(params, ups)
-        return params, opt_state, loss, halo_out
+        return params, opt_state, loss, halo_out, comm_out
 
     return opt_init, step
 
@@ -134,7 +175,9 @@ def train_partitioned(forward_part_fn: Callable, params: Dict, g, x,
                       halo_staleness: int = 0, epochs: int = 10,
                       lr: float = 1e-2, weight_decay: float = 5e-4,
                       drop: float = 0.0, seed: int = 0, val_mask=None,
-                      init_halo_fn: Optional[Callable] = None
+                      init_halo_fn: Optional[Callable] = None,
+                      precision=None,
+                      init_comm_fn: Optional[Callable] = None
                       ) -> Tuple[Dict, Dict]:
     """Full-graph training across ``n_shards`` vertex shards.
 
@@ -149,7 +192,15 @@ def train_partitioned(forward_part_fn: Callable, params: Dict, g, x,
     stale in between (DistGNN-style; needs ``init_halo_fn``, e.g.
     ``gcn.init_halo``). Returns (params, history) with per-epoch wall
     times, losses, and which epochs refreshed.
+
+    ``precision`` ("fp32"/"bf16" or a :class:`~repro.optim.Precision`)
+    selects the compute dtype (masters stay fp32) and, via
+    ``precision.comm == "int8"``, per-block-scaled int8 ring exchanges
+    with error feedback — which needs ``init_comm_fn`` (e.g.
+    ``gcn.init_comm``) to seed the per-layer residual carried in the
+    train state (DESIGN.md §12).
     """
+    precision = _resolve_precision(precision)
     pb = make_partitioned_bundle(g, n_shards, mesh=mesh, axis=axis,
                                  mode=mode)
     pg = pb.pg
@@ -158,8 +209,9 @@ def train_partitioned(forward_part_fn: Callable, params: Dict, g, x,
     from ...core import planner as _planner
     _planner._record(
         "partitioned:train", "auto",
-        f"ring:s{n_shards}:{mode}" if mesh is not None
-        else f"ring-emulated:s{n_shards}:{mode}")
+        (f"ring:s{n_shards}:{mode}" if mesh is not None
+         else f"ring-emulated:s{n_shards}:{mode}") + f":{precision.tag()}",
+        dtype=str(jnp.dtype(precision.compute)))
     x = jnp.asarray(np.asarray(x, np.float32))
     yp = pg.scatter_nodes(jnp.asarray(np.asarray(labels, np.int32)))
     mp = pg.scatter_nodes(jnp.asarray(np.asarray(train_mask, bool)))
@@ -172,9 +224,15 @@ def train_partitioned(forward_part_fn: Callable, params: Dict, g, x,
         raise ValueError("halo_staleness > 0 needs init_halo_fn "
                          "(e.g. gcn.init_halo)")
     halo = init_halo_fn(params, pg) if delayed else None
+    if precision.comm == "int8" and init_comm_fn is None:
+        raise ValueError('precision.comm == "int8" needs init_comm_fn '
+                         "(e.g. gcn.init_comm)")
+    comm = (init_comm_fn(params, pg)
+            if precision.comm == "int8" else None)
 
     opt_init, step = make_partitioned_train_step(
-        forward_part_fn, lr=lr, weight_decay=weight_decay, drop=drop)
+        forward_part_fn, lr=lr, weight_decay=weight_decay, drop=drop,
+        precision=precision)
     opt_state = opt_init(params)
     if mesh is not None:
         pb, xp, yp, mp = shard_partitioned(pb, xp, yp, mp)
@@ -184,26 +242,31 @@ def train_partitioned(forward_part_fn: Callable, params: Dict, g, x,
         opt_state = jax.device_put(opt_state, rep)
         if delayed:
             halo = shard_partitioned(pb, *halo)[1:]
+        if comm is not None:
+            comm = shard_partitioned(pb, *comm)[1:]
     rng = jax.random.PRNGKey(seed)
 
     @jax.jit
     def eval_logits(params, pb, xp):
-        return forward_part_fn(params, pb, xp)[0]
+        pc = cast_tree(params, precision.compute)
+        xc = cast_tree(xp, precision.compute)
+        return cast_logits(forward_part_fn(pc, pb, xc)[0])
 
     history = {"loss": [], "epoch_time": [], "val_acc": [],
                "refreshed": []}
     # warmup: compile both refresh variants, discard the updates
-    step(params, opt_state, 0, pb, xp, yp, mp, halo, rng, refresh=True)
+    step(params, opt_state, 0, pb, xp, yp, mp, halo, comm, rng,
+         refresh=True)
     if delayed:
-        step(params, opt_state, 0, pb, xp, yp, mp, halo, rng,
+        step(params, opt_state, 0, pb, xp, yp, mp, halo, comm, rng,
              refresh=False)
 
     for e in range(epochs):
         refresh = (not delayed) or (e % halo_staleness == 0)
         rng, sub = jax.random.split(rng)
         t0 = time.perf_counter()
-        params, opt_state, loss, halo = step(
-            params, opt_state, e, pb, xp, yp, mp, halo, sub,
+        params, opt_state, loss, halo, comm = step(
+            params, opt_state, e, pb, xp, yp, mp, halo, comm, sub,
             refresh=refresh)
         jax.block_until_ready(loss)
         history["epoch_time"].append(time.perf_counter() - t0)
@@ -221,7 +284,7 @@ def train_partitioned(forward_part_fn: Callable, params: Dict, g, x,
 def make_sampled_train_step(forward_blocks_fn: Callable, strategy: str,
                             bwd_strategy: str = "auto",
                             lr: float = 1e-2, weight_decay: float = 5e-4,
-                            clip: float = 5.0):
+                            clip: float = 5.0, precision=None):
     """One jitted step over a :class:`~repro.data.MiniBatch` pytree.
 
     The minibatch's static aux (padded sizes + fanouts) keys the jit
@@ -231,17 +294,22 @@ def make_sampled_train_step(forward_blocks_fn: Callable, strategy: str,
     ``bwd_strategy`` selects the block differentiation path (DESIGN.md
     §7): 'auto' (default) lets the planner route ∂x through the
     reverse-table gather VJP, 'scatter' pins the autodiff baseline.
+    Mixed precision as in :func:`make_train_step` (DESIGN.md §12).
     """
+    precision = _resolve_precision(precision)
     opt_init, opt_update = adamw(lr, weight_decay=weight_decay)
 
     @jax.jit
     def step(params, opt_state, step_i, mb, feats_pad, rng):
         def loss_fn(p):
-            x = block_features(feats_pad, mb.input_ids)
-            logits = forward_blocks_fn(p, mb.blocks, x, strategy=strategy,
+            pc = cast_tree(p, precision.compute)
+            x = cast_tree(block_features(feats_pad, mb.input_ids),
+                          precision.compute)
+            logits = forward_blocks_fn(pc, mb.blocks, x, strategy=strategy,
                                        bwd_strategy=bwd_strategy,
                                        train=True, rng=rng)
-            return cross_entropy_loss(logits, mb.labels, mb.label_mask)
+            return cross_entropy_loss(cast_logits(logits), mb.labels,
+                                      mb.label_mask)
 
         loss, grads = jax.value_and_grad(loss_fn)(params)
         grads, _ = clip_by_global_norm(grads, clip)
@@ -287,8 +355,8 @@ def train_sampled(forward_blocks_fn: Callable, params: Dict, g, feats,
                   weight_decay: float = 5e-4, seed: int = 0,
                   prefetch_depth: int = 2, drop_last: bool = False,
                   sampler: Optional[NeighborSampler] = None,
-                  max_batches: Optional[int] = None
-                  ) -> Tuple[Dict, Dict]:
+                  max_batches: Optional[int] = None,
+                  precision=None) -> Tuple[Dict, Dict]:
     """End-to-end minibatch training: sample (host, prefetched) → one
     jitted step (device) per batch.
 
@@ -301,7 +369,8 @@ def train_sampled(forward_blocks_fn: Callable, params: Dict, g, feats,
     train_ids = np.asarray(train_ids)
     opt_init, step = make_sampled_train_step(
         forward_blocks_fn, strategy, bwd_strategy=bwd_strategy,
-        lr=lr, weight_decay=weight_decay)
+        lr=lr, weight_decay=weight_decay,
+        precision=_resolve_precision(precision))
     opt_state = opt_init(params)
     feats_pad = pad_features(feats)
     if sampler is None:

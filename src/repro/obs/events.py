@@ -37,16 +37,16 @@ __all__ = ["PLAN_EVENT_FIELDS", "DRIFT_FIELDS", "plan_event",
 PLAN_EVENT_FIELDS = (
     "op", "family", "requested", "chosen", "count",
     "predicted_cost", "measured_calls", "measured_total_s",
-    "measured_mean_s",
+    "measured_mean_s", "dtype",
 )
 DRIFT_FIELDS = (
     "op", "family", "requested", "chosen", "predicted_cost",
     "measured_calls", "measured_mean_s", "family_scale",
-    "ratio", "drifted",
+    "ratio", "drifted", "dtype",
 )
 
 _LOCK = threading.Lock()
-# (op, requested, chosen) -> {"count": int, "predicted_cost": float|None}
+# (op, requested, chosen, dtype) -> {"count", "predicted_cost"}
 _PLANS = {}
 # op -> {"calls": int, "total_s": float, "min_s": float, "max_s": float}
 _MEASURED = {}
@@ -64,14 +64,18 @@ def family_of(op):
     return "gspmm"
 
 
-def plan_event(op, requested, chosen, predicted_cost=None):
+def plan_event(op, requested, chosen, predicted_cost=None, dtype=None):
     """Record one planner decision row. ``predicted_cost`` is the cost
     model's estimate for the *chosen* strategy (relative element-ops);
     pass None when the site has no cost model input (e.g. forced
-    strategies without graph stats)."""
+    strategies without graph stats). ``dtype`` is the operand element
+    type the decision was made for (a string, e.g. "bfloat16"), or None
+    at sites with no operand in hand — rows are keyed on it, so the
+    same op planned at two precisions yields two rows."""
     if not enabled():
         return
-    key = (str(op), str(requested), str(chosen))
+    key = (str(op), str(requested), str(chosen),
+           None if dtype is None else str(dtype))
     with _LOCK:
         row = _PLANS.get(key)
         if row is None:
@@ -121,7 +125,12 @@ def plan_events():
         plans = {k: dict(v) for k, v in _PLANS.items()}
         measured = {k: dict(v) for k, v in _MEASURED.items()}
     rows = []
-    for (op, requested, chosen), p in sorted(plans.items()):
+    def sort_key(k):
+        op, requested, chosen, dtype = k
+        return (op, requested, chosen, dtype or "")
+
+    for (op, requested, chosen, dtype) in sorted(plans, key=sort_key):
+        p = plans[(op, requested, chosen, dtype)]
         m = measured.get(op)
         rows.append({
             "op": op,
@@ -133,6 +142,7 @@ def plan_events():
             "measured_calls": m["calls"] if m else 0,
             "measured_total_s": m["total_s"] if m else None,
             "measured_mean_s": (m["total_s"] / m["calls"]) if m else None,
+            "dtype": dtype,
         })
     return rows
 
@@ -157,13 +167,13 @@ def drift_report(threshold=4.0):
     scales = {}
     by_family = {}
     for r in rows:
-        by_family.setdefault(r["family"], []).append(
+        by_family.setdefault((r["family"], r["dtype"]), []).append(
             r["measured_mean_s"] / r["predicted_cost"])
     for fam, ratios in by_family.items():
         scales[fam] = _metrics.percentile_nearest_rank(ratios, 50)
     out = []
     for r in rows:
-        scale = scales[r["family"]]
+        scale = scales[(r["family"], r["dtype"])]
         raw = r["measured_mean_s"] / r["predicted_cost"]
         ratio = raw / scale if scale > 0 else None
         drifted = (ratio is not None
@@ -179,6 +189,7 @@ def drift_report(threshold=4.0):
             "family_scale": scale,
             "ratio": ratio,
             "drifted": drifted,
+            "dtype": r["dtype"],
         })
     out.sort(key=lambda r: -(r["ratio"] or 0))
     return out

@@ -3,12 +3,16 @@ from .optimizers import (OptState, adamw, sgd, clip_by_global_norm,
                          apply_updates, global_norm)
 from .schedules import constant, warmup_cosine, warmup_linear
 from .compression import (int8_compress, int8_decompress,
-                          compressed_allreduce_terms, ErrorFeedbackState,
+                          compressed_allreduce_terms, compress_payload,
+                          wire_bytes, ErrorFeedbackState,
                           init_error_feedback, quantize_with_feedback)
+from .precision import Precision, cast_tree, cast_logits
 
 __all__ = [
     "OptState", "adamw", "sgd", "clip_by_global_norm", "apply_updates",
     "global_norm", "constant", "warmup_cosine", "warmup_linear",
     "int8_compress", "int8_decompress", "compressed_allreduce_terms",
+    "compress_payload", "wire_bytes",
     "ErrorFeedbackState", "init_error_feedback", "quantize_with_feedback",
+    "Precision", "cast_tree", "cast_logits",
 ]

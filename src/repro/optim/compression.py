@@ -57,13 +57,41 @@ def quantize_with_feedback(g: jnp.ndarray, residual: jnp.ndarray
     return q, scale, target - deq
 
 
+def compress_payload(x: jnp.ndarray, residual: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Straight-through int8 wire emulation for a differentiable payload.
+
+    Returns ``(y, new_residual)`` where ``y`` carries the dequantized
+    int8 values of ``x + residual`` in the forward pass but the
+    *identity* adjoint in the backward pass (round/clip have useless
+    gradients), and ``new_residual`` is the error-feedback carry —
+    stop-gradiented so it can live in the train state without autodiff
+    chasing it across steps.
+    """
+    target = x.astype(jnp.float32) + residual
+    q, scale = int8_compress(target)
+    deq = int8_decompress(q, scale, x.shape, jnp.float32)
+    y = x + jax.lax.stop_gradient(deq.astype(x.dtype) - x)
+    return y, jax.lax.stop_gradient(target - deq)
+
+
+def wire_bytes(n: int, itemsize: int, comm: str) -> Tuple[int, int]:
+    """(raw_bytes, wire_bytes) for ``n`` elements of ``itemsize`` under
+    comm mode ``comm`` — the accounting the obs counters and the planner
+    comm term share."""
+    raw = n * itemsize
+    if comm == "int8":
+        return raw, n * 1 + (-(-n // BLOCK)) * 4
+    return raw, raw
+
+
 def compressed_allreduce_terms(params) -> Tuple[int, int]:
     """(raw_bytes, compressed_bytes) for a full-gradient all-reduce."""
     raw = 0
     comp = 0
     for p in jax.tree_util.tree_leaves(params):
         n = p.size
-        raw += n * 4
+        raw += n * p.dtype.itemsize
         blocks = -(-n // BLOCK)
         comp += n * 1 + blocks * 4
     return raw, comp

@@ -1,0 +1,81 @@
+"""Precision policy for training (DESIGN.md §12).
+
+One small config object decides three things, independently:
+
+  * ``compute``  — the dtype the forward/backward runs in. Parameters
+    stay fp32 *master weights* (SplitSGD-style: optimizer moments and
+    updates are fp32; only the copy used inside the loss is cast), so
+    bf16 training changes the arithmetic of the model, never the
+    update rule.
+  * ``accum``    — the dtype reductions accumulate in. Aggregation
+    norm weights and segment-reduce accumulators stay here (fp32)
+    regardless of ``compute``; see core/partition.py.
+  * ``comm``     — the wire format of cross-shard exchanges in the
+    partitioned path: ``"none"`` ships raw features, ``"int8"`` ships
+    blockwise int8 + per-block fp32 scales with an error-feedback
+    residual carried in the train state (optim/compression.py).
+
+``Precision.fp32()`` is the do-nothing default: every train loop
+threads a policy, but at fp32/none the step is bit-identical to the
+pre-policy code.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Precision", "cast_tree", "cast_logits"]
+
+_COMM_MODES = ("none", "int8")
+
+
+class Precision(NamedTuple):
+    """compute/accumulation dtypes + comm compression mode."""
+    compute: Any = jnp.float32
+    accum: Any = jnp.float32
+    comm: str = "none"
+
+    @classmethod
+    def fp32(cls) -> "Precision":
+        return cls()
+
+    @classmethod
+    def bf16(cls, comm: str = "none") -> "Precision":
+        return cls(compute=jnp.bfloat16, accum=jnp.float32, comm=comm)
+
+    @classmethod
+    def parse(cls, name: str, comm: str = "none") -> "Precision":
+        if comm not in _COMM_MODES:
+            raise ValueError(f"comm must be one of {_COMM_MODES}: {comm!r}")
+        if name == "fp32":
+            return cls(comm=comm)
+        if name == "bf16":
+            return cls.bf16(comm=comm)
+        raise ValueError(f"unknown precision preset: {name!r}")
+
+    @property
+    def mixed(self) -> bool:
+        return jnp.dtype(self.compute) != jnp.dtype(jnp.float32)
+
+    def tag(self) -> str:
+        """Short label for plan rows / bench json ("bf16+int8")."""
+        p = jnp.dtype(self.compute).name.replace("float32", "fp32") \
+            .replace("bfloat16", "bf16")
+        return p if self.comm == "none" else f"{p}+{self.comm}"
+
+
+def cast_tree(tree, dtype):
+    """Cast every floating leaf of a pytree to ``dtype`` (ints pass)."""
+    def cast(p):
+        if jnp.issubdtype(jnp.asarray(p).dtype, jnp.floating):
+            return jnp.asarray(p).astype(dtype)
+        return p
+    return jax.tree.map(cast, tree)
+
+
+def cast_logits(logits):
+    """Loss inputs always go back to fp32: softmax/CE in bf16 loses
+    enough mantissa to visibly bend the loss trajectory."""
+    return logits.astype(jnp.float32)

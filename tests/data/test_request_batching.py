@@ -13,6 +13,7 @@ from repro.core.blocks import serve_block_signature
 from repro.core.serving import MicroBatcher
 from repro.data import (NeighborSampler, RequestQueue, SignatureTracker,
                         prefetch)
+from repro.data.pipeline import ServeRequest
 from repro.data.synthetic import rmat_graph
 
 
@@ -169,3 +170,53 @@ def test_request_queue_window_caps_at_max_nodes():
     w1 = next(iter(rq))
     assert sum(len(r.ids) for r in w1) >= 4
     assert len(w1) < 4
+
+
+def test_request_future_first_resolution_wins():
+    rq = RequestQueue(max_wait=0.001)
+    r = rq.submit([1])
+    assert r.set_result("served") is True
+    # a late close-time error must not clobber the delivered result
+    assert r.set_error(RuntimeError("queue closed")) is False
+    assert r.result(timeout=1) == "served"
+    r2 = rq.submit([2])
+    assert r2.set_error(RuntimeError("queue closed")) is True
+    assert r2.set_result("late") is False
+    with pytest.raises(RuntimeError, match="queue closed"):
+        r2.result(timeout=1)
+
+
+def test_request_queue_close_cancel_pending_resolves_futures():
+    """Regression: close() used to leave queued-but-unserved requests
+    with unresolved futures — a blocked result() call hung forever."""
+    rq = RequestQueue(max_wait=0.001)
+    reqs = [rq.submit([i]) for i in range(3)]
+    rq.close(cancel_pending=True)
+    for r in reqs:
+        assert r.done()
+        with pytest.raises(RuntimeError, match="queue closed"):
+            r.result(timeout=1)
+    assert next(iter(rq), None) is None     # still exhausted
+
+
+def test_request_queue_shutdown_errors_raced_in_requests():
+    """A request that lands in the queue behind the shutdown sentinel is
+    resolved with the close error once iteration ends — not abandoned
+    with its requester blocked in result() forever."""
+    rq = RequestQueue(max_wait=0.001)
+    rq.close()
+    straggler = ServeRequest(999, np.asarray([2], np.int64))
+    rq._q.put(straggler)                    # simulate the submit race
+    assert list(rq) == []                   # iteration just ends ...
+    assert straggler.done()                 # ... but the future resolves
+    with pytest.raises(RuntimeError, match="queue closed"):
+        straggler.result(timeout=1)
+
+
+def test_request_queue_close_after_serving_is_noop_for_done_requests():
+    rq = RequestQueue(max_wait=0.001)
+    r = rq.submit([1])
+    (w,) = [next(iter(rq))]
+    w[0].set_result("ok")
+    rq.close(cancel_pending=True)
+    assert r.result(timeout=1) == "ok"

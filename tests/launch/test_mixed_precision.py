@@ -1,0 +1,251 @@
+"""Mixed-precision training + int8-compressed ring exchanges.
+
+Covers the DESIGN.md §12 acceptance surface: bf16 compute with fp32
+master weights matches the fp32 loss trajectory on all three GNN apps,
+the 4-shard emulated ring moves ≥3x fewer bytes under ``comm="int8"``
+(measured through the obs metrics registry, not asserted from the
+format), compressed exchanges stay accurate + differentiable through
+the straight-through estimator, and the planner's cost model makes at
+least one auto decision differently at bf16 than at fp32.
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import planner
+from repro.core.graph import from_coo
+from repro.core.partition import ring_gspmm, ring_reference
+from repro.models.gnn import gcn, sage, gat
+from repro.models.gnn.common import make_bundle
+from repro.models.gnn.train import train_full_graph, train_partitioned
+from repro.obs import metrics as M
+from repro.optim import Precision
+from tests.conftest import run_multidevice
+
+
+def _graph(seed=0, n=80, m=400):
+    rng = np.random.default_rng(seed)
+    g = from_coo(rng.integers(0, n, m), rng.integers(0, n, m),
+                 n_src=n, n_dst=n)
+    x = rng.standard_normal((n, 16)).astype(np.float32)
+    y = rng.integers(0, 4, n).astype(np.int32)
+    return g, x, y, np.ones(n, bool)
+
+
+# ------------------------------------------------------------------ #
+# bf16 + fp32 masters track fp32 (all three apps, full graph)
+# ------------------------------------------------------------------ #
+@pytest.mark.parametrize("app,forward,init", [
+    ("gcn", gcn.forward, lambda k, d, c: gcn.init(k, d, 8, c)),
+    ("sage", sage.forward, lambda k, d, c: sage.init(k, d, 8, c)),
+    ("gat", gat.forward, lambda k, d, c: gat.init(k, d, 8, c, n_heads=2)),
+])
+def test_bf16_final_loss_matches_fp32(app, forward, init):
+    g, x, y, mask = _graph()
+    bundle = make_bundle(g)
+    params = init(jax.random.PRNGKey(0), x.shape[1], 4)
+    _, h32 = train_full_graph(forward, params, bundle, x, y, mask,
+                              epochs=6, precision="fp32")
+    _, h16 = train_full_graph(forward, params, bundle, x, y, mask,
+                              epochs=6, precision="bf16")
+    # documented tolerance (DESIGN.md §12): 2e-2 final-loss delta
+    assert abs(h32["loss"][-1] - h16["loss"][-1]) < 2e-2, (app, h32, h16)
+    if app != "gat":    # GAT's dropout-heavy trajectory is non-monotone
+        assert h16["loss"][-1] < h16["loss"][0]
+
+
+# ------------------------------------------------------------------ #
+# compressed ring exchange: bytes, accuracy, gradients
+# ------------------------------------------------------------------ #
+def test_int8_ring_exchange_bytes_shrink_3x():
+    """The acceptance gate: 4-shard emulated ring, fp32 features,
+    wire bytes measured by the metrics registry shrink ≥3x."""
+    g, x, _, _ = _graph(n=96, m=600)
+    pg = planner.get_plan_cache(g).partition(4, "contiguous")
+    xp = pg.scatter_nodes(jnp.asarray(x))
+    w = jnp.where(pg.mask, 1.0, 0.0)
+    resid = jnp.zeros_like(xp)
+    prev = M.set_enabled(True)
+    try:
+        M.reset_metrics()
+        out, _ = ring_gspmm(pg, xp, w, comm="int8", residual=resid)
+        jax.block_until_ready(out)
+        snap = M.snapshot()
+    finally:
+        M.set_enabled(prev)
+    raw = snap["comm.ring.raw_bytes"]["value"]
+    wire = snap["comm.ring.wire_bytes"]["value"]
+    assert raw > 0 and wire > 0
+    assert raw / wire >= 3.0, (raw, wire)
+
+
+def test_int8_ring_output_close_and_ef_converges():
+    """One compressed exchange is already <2% off; with the error
+    feedback carried across calls the bias washes out."""
+    g, x, _, _ = _graph(n=96, m=600)
+    pg = planner.get_plan_cache(g).partition(4, "contiguous")
+    xp = pg.scatter_nodes(jnp.asarray(x))
+    w = jnp.where(pg.mask, 1.0, 0.0)
+    ref = ring_reference(pg, xp, w)
+    resid = jnp.zeros_like(xp)
+    out, resid = ring_gspmm(pg, xp, w, comm="int8", residual=resid)
+    denom = float(jnp.linalg.norm(ref)) or 1.0
+    assert float(jnp.linalg.norm(out - ref)) / denom < 0.02
+    # second exchange of the SAME payload: EF corrects last step's error
+    out2, resid = ring_gspmm(pg, xp, w, comm="int8", residual=resid)
+    avg = (out + out2) / 2
+    assert (float(jnp.linalg.norm(avg - ref)) / denom
+            < float(jnp.linalg.norm(out - ref)) / denom + 1e-6)
+    assert bool(jnp.all(jnp.isfinite(resid)))
+
+
+def test_int8_ring_gradients_flow_straight_through():
+    g, x, _, _ = _graph(n=64, m=300)
+    pg = planner.get_plan_cache(g).partition(2, "contiguous")
+    xp = pg.scatter_nodes(jnp.asarray(x))
+    w = jnp.where(pg.mask, 1.0, 0.0)
+    resid = jnp.zeros_like(xp)
+
+    def f(z):
+        out, _ = ring_gspmm(pg, z, w, comm="int8", residual=resid)
+        return jnp.sum(out ** 2)
+
+    def f_ref(z):
+        return jnp.sum(ring_reference(pg, z, w) ** 2)
+
+    gq = jax.grad(f)(xp)
+    gr = jax.grad(f_ref)(xp)
+    assert bool(jnp.all(jnp.isfinite(gq)))
+    # straight-through: the quantizer is identity to autodiff, so the
+    # gradient matches the uncompressed ring's to quantization error
+    denom = float(jnp.linalg.norm(gr)) or 1.0
+    assert float(jnp.linalg.norm(gq - gr)) / denom < 0.05
+
+
+# ------------------------------------------------------------------ #
+# partitioned training end-to-end under precision x compression
+# ------------------------------------------------------------------ #
+def test_partitioned_bf16_int8_trains_and_matches_fp32():
+    g, x, y, mask = _graph()
+    params = gcn.init(jax.random.PRNGKey(0), x.shape[1], 8, 4)
+    _, h32 = train_partitioned(gcn.forward_partitioned, params, g, x, y,
+                               mask, n_shards=4, epochs=5,
+                               precision="fp32")
+    _, hq = train_partitioned(
+        gcn.forward_partitioned, params, g, x, y, mask, n_shards=4,
+        epochs=5, precision=Precision.parse("bf16", comm="int8"),
+        init_comm_fn=gcn.init_comm)
+    assert abs(h32["loss"][-1] - hq["loss"][-1]) < 2e-2, (h32, hq)
+    assert hq["loss"][-1] < hq["loss"][0]
+
+
+def test_partitioned_int8_needs_init_comm_fn():
+    g, x, y, mask = _graph()
+    params = gcn.init(jax.random.PRNGKey(0), x.shape[1], 8, 4)
+    with pytest.raises(ValueError, match="init_comm_fn"):
+        train_partitioned(gcn.forward_partitioned, params, g, x, y, mask,
+                          n_shards=2, epochs=1,
+                          precision=Precision.parse("bf16", comm="int8"))
+
+
+def test_gat_partitioned_rejects_comm_state():
+    g, x, y, mask = _graph()
+    params = gat.init(jax.random.PRNGKey(0), x.shape[1], 8, 4, n_heads=2)
+    pg = planner.get_plan_cache(g).partition(2, "contiguous")
+    from repro.models.gnn.common import make_partitioned_bundle
+    pb = make_partitioned_bundle(g, 2)
+    with pytest.raises(ValueError, match="compressed-comm"):
+        gat.forward_partitioned(params, pb, pg.scatter_nodes(jnp.asarray(x)),
+                                comm_state=())
+
+
+# ------------------------------------------------------------------ #
+# dtype-aware planning
+# ------------------------------------------------------------------ #
+def test_planner_auto_flips_with_dtype():
+    """On a pad_ratio ≈ 3.2 shape the ell/segment break-even sits
+    between the fp32 (≈2.9) and bf16 (≈3.9) thresholds: auto picks
+    segment at fp32 and blocked-pull ell at bf16."""
+    stats = planner.GraphStats(
+        n_src=20000, n_dst=20000, n_edges=200000, avg_in_deg=10.0,
+        max_in_deg=640, skew=64.0, ell_padded_slots=640000,
+        ell_n_classes=4, pad_ratio=3.2)
+    d = 64
+    c32 = {s: planner.estimate_cost(s, stats, d, backend="cpu",
+                                    dtype=jnp.float32)
+           for s in ("segment", "ell")}
+    c16 = {s: planner.estimate_cost(s, stats, d, backend="cpu",
+                                    dtype=jnp.bfloat16)
+           for s in ("segment", "ell")}
+    assert min(c32, key=c32.get) == "segment", c32
+    assert min(c16, key=c16.get) == "ell", c16
+
+
+def test_ring_comm_term_priced_at_wire_bytes():
+    """int8 wire pricing lowers the ring estimate for fp32 payloads —
+    the compression term, not the throughput row, moves the cost."""
+    stats = planner.GraphStats(
+        n_src=20000, n_dst=20000, n_edges=200000, avg_in_deg=10.0,
+        max_in_deg=640, skew=64.0, ell_padded_slots=640000,
+        ell_n_classes=4, pad_ratio=3.2)
+    raw = planner.estimate_cost("ring", stats, 64, backend="cpu",
+                                dtype=jnp.float32, comm="none")
+    comp = planner.estimate_cost("ring", stats, 64, backend="cpu",
+                                 dtype=jnp.float32, comm="int8")
+    assert comp < raw
+
+
+def test_plan_events_record_dtype_end_to_end():
+    from repro.core import gspmm
+    from repro.obs import events as obs
+    obs.clear_events()
+    try:
+        g, x, _, _ = _graph(seed=7)
+        out = gspmm(g, "u_copy_add_v", u=jnp.asarray(x, jnp.bfloat16))
+        jax.block_until_ready(out)
+        assert out.dtype == jnp.bfloat16    # no silent promotion back
+        rows = [r for r in obs.plan_events() if r["op"] == "u_copy_add_v"]
+        assert any(r["dtype"] == "bfloat16" for r in rows), rows
+    finally:
+        obs.clear_events()
+
+
+# ------------------------------------------------------------------ #
+# the CI leg: 2-shard emulated mesh, bf16 + int8, loss decreases
+# ------------------------------------------------------------------ #
+_MESH_PROG = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.graph import from_coo
+from repro.models.gnn import gcn
+from repro.models.gnn.train import train_partitioned
+from repro.launch.mesh import make_mesh
+from repro.optim import Precision
+
+rng = np.random.default_rng(0)
+n, m, d, c = 80, 400, 16, 4
+g = from_coo(rng.integers(0, n, m), rng.integers(0, n, m), n_src=n, n_dst=n)
+x = rng.standard_normal((n, d)).astype(np.float32)
+y = rng.integers(0, c, n).astype(np.int32)
+mask = np.ones(n, bool)
+mesh = make_mesh((2,), ("data",))
+params = gcn.init(jax.random.PRNGKey(0), d, 8, c)
+params, hist = train_partitioned(
+    gcn.forward_partitioned, params, g, x, y, mask, n_shards=2,
+    mesh=mesh, epochs=4, precision=Precision.parse("bf16", comm="int8"),
+    init_comm_fn=gcn.init_comm)
+losses = hist["loss"]
+assert all(np.isfinite(losses)), losses
+assert losses[-1] < losses[0], losses
+flat, _ = jax.tree_util.tree_flatten(params)
+assert all(bool(jnp.all(jnp.isfinite(p))) for p in flat)
+print("MESH_BF16_INT8_OK", losses[0], losses[-1])
+"""
+
+
+def test_mesh_bf16_int8_train_leg():
+    r = run_multidevice(_MESH_PROG)
+    assert r.returncode == 0, r.stderr[-3000:]
+    assert "MESH_BF16_INT8_OK" in r.stdout

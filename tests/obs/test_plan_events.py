@@ -28,14 +28,14 @@ def test_plan_event_fields_golden():
     assert obs.PLAN_EVENT_FIELDS == (
         "op", "family", "requested", "chosen", "count",
         "predicted_cost", "measured_calls", "measured_total_s",
-        "measured_mean_s")
+        "measured_mean_s", "dtype")
 
 
 def test_drift_fields_golden():
     assert obs.DRIFT_FIELDS == (
         "op", "family", "requested", "chosen", "predicted_cost",
         "measured_calls", "measured_mean_s", "family_scale", "ratio",
-        "drifted")
+        "drifted", "dtype")
 
 
 def test_plan_event_rows_have_exact_keys():
@@ -58,6 +58,34 @@ def test_drift_rows_have_exact_keys():
     rows = planner.drift_report()
     assert len(rows) == 1
     assert tuple(rows[0].keys()) == obs.DRIFT_FIELDS
+
+
+def test_plan_event_keyed_by_dtype():
+    # same (op, requested, chosen) at two dtypes → two rows, not one
+    obs.plan_event("block:u_copy_add_v", "auto", "segment",
+                   predicted_cost=10.0, dtype="float32")
+    obs.plan_event("block:u_copy_add_v", "auto", "segment",
+                   predicted_cost=10.0, dtype="bfloat16")
+    rows = obs.plan_events()
+    assert len(rows) == 2
+    assert {r["dtype"] for r in rows} == {"float32", "bfloat16"}
+    assert all(r["count"] == 1 for r in rows)
+
+
+def test_drift_scale_fit_per_family_dtype():
+    # one family, two dtypes, 100x apart in time-per-cost: a shared
+    # family scale would flag every row as drifted; per-(family, dtype)
+    # scales fit each group on its own and flag none
+    for i, cost in enumerate((10.0, 20.0, 40.0)):
+        obs.plan_event(f"fam:f32op{i}", "auto", "a", predicted_cost=cost,
+                       dtype="float32")
+        obs.measured_event(f"fam:f32op{i}", cost * 1e-3)
+        obs.plan_event(f"fam:b16op{i}", "auto", "a", predicted_cost=cost,
+                       dtype="bfloat16")
+        obs.measured_event(f"fam:b16op{i}", cost * 1e-1)
+    rows = planner.drift_report(threshold=4.0)
+    assert len(rows) == 6
+    assert not any(r["drifted"] for r in rows)
 
 
 def test_family_of():
