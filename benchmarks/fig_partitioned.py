@@ -29,9 +29,17 @@ import sys
 
 import numpy as np
 
-from .common import row
+from .common import row, time_fn
 
 QUICK = bool(int(os.environ.get("REPRO_BENCH_QUICK", "0")))
+
+# power-law (R-MAT) ragged-ring leg: hash placement is the scalable
+# mode for skewed graphs (DistGNN-style random placement), and also the
+# worst case for max-width bucket padding — one hub-heavy bucket sets
+# the global eb all S² buckets pad to, so this is where the per-bucket
+# eb[i,j] widths decide the pad+wire bill
+POWERLAW_SHAPE = (11, 12_000) if QUICK else (13, 60_000)
+POWERLAW_SHARDS = 8
 
 if QUICK:
     DATASET = "tiny"
@@ -159,8 +167,75 @@ def _baseline(dataset: str, apps, epochs: int) -> dict:
     return base
 
 
+def powerlaw_ring_rows() -> None:
+    """Ragged ring buckets on a power-law graph (emulated, 8 shards).
+
+    Reports the dense (max-width ``eb``) vs ragged (per-bucket
+    ``eb[i,j]`` diagonal schedule) pad-slot and pad+wire byte bills,
+    the emulated ring fwd+bwd wall time, and the gradient gap vs the
+    single-device reference. Runs parent-side: the emulated ring shares
+    the bucket math and transposed-ring VJP with the mesh path, so no
+    device emulation subprocess is needed.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import from_coo, gspmm
+    from repro.core.partition import build_partition, ring_gspmm
+    from repro.data import rmat_graph
+
+    n_log2, nnz = POWERLAW_SHAPE
+    S = POWERLAW_SHARDS
+    src, dst, n = rmat_graph(n_log2, nnz, seed=13)
+    g = from_coo(src, dst, n_src=n, n_dst=n)
+    pg = build_partition(g, S, "hash")
+    st = pg.stats
+    tag = f"figp_powerlaw_s{S}"
+
+    F = 8
+    dense_slots = S * S * st.eb
+    stages = st.ragged_stages if st.ragged_stages >= 0 else S - 1
+    # wire: S·stages block-sends of rows×F fp32; pad: slots beyond the
+    # real edges, each touching an F-wide feature row (same units both
+    # sides, so the cut is layout-only)
+    wire_d = S * (S - 1) * pg.rows * F * 4
+    wire_r = S * stages * pg.rows * F * 4
+    pad_d = (dense_slots - g.n_edges) * F * 4
+    pad_r = (st.ragged_slots - g.n_edges) * F * 4
+    print(row(f"{tag}_pad_dense", 0.0,
+              f"slots={dense_slots} edges={g.n_edges} "
+              f"padwire_bytes={pad_d + wire_d}"))
+    print(row(f"{tag}_pad_ragged", 0.0,
+              f"slots={st.ragged_slots} stages={stages} "
+              f"padwire_bytes={pad_r + wire_r} "
+              f"cut={(pad_d + wire_d) / max(pad_r + wire_r, 1):.2f}x"))
+
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(size=(g.n_src, F)).astype(np.float32))
+    w = pg.scatter_edges(jnp.ones((g.n_edges,), jnp.float32))
+
+    def ring_loss(x):
+        out = pg.gather_nodes(ring_gspmm(pg, pg.scatter_nodes(x), w))
+        return jnp.sum(out ** 2)
+
+    def ref_loss(x):
+        return jnp.sum(gspmm(g, "u_copy_add_v", u=x,
+                             strategy="segment") ** 2)
+
+    gr = jax.grad(ring_loss)(x)
+    gf = jax.grad(ref_loss)(x)
+    # hub gradients reach O(1e3), so the honest parity number is the
+    # relative gap (absolute diff is pure fp32 reduction-order noise)
+    gdiff = float(jnp.max(jnp.abs(gr - gf)))
+    grel = gdiff / max(float(jnp.max(jnp.abs(gf))), 1e-12)
+    t = time_fn(jax.jit(jax.grad(ring_loss)), x, iters=3)
+    print(row(f"{tag}_ring_fwdbwd", t,
+              f"edges={g.n_edges} grad_reldiff={grel:.1e}"))
+
+
 def main() -> None:
     base = _baseline(DATASET, APPS, EPOCHS)
+    powerlaw_ring_rows()
     cfg = {"dataset": DATASET, "shards": list(SHARDS), "apps": list(APPS),
            "epochs": EPOCHS, "halo": list(HALO)}
     env = dict(os.environ)

@@ -66,7 +66,13 @@ def main() -> None:
     import importlib
 
     from repro.core import planner
+    from repro import obs
     from . import common
+
+    # the JSON contract includes the metrics snapshot (pad-ratio gauges,
+    # comm counters) — force telemetry on so BENCH_*.json always carries
+    # it even under REPRO_TELEMETRY=0 environments
+    obs.set_enabled(True)
 
     for key, modname in sections.items():
         if args.only and key != args.only:

@@ -113,12 +113,14 @@ def _attention_alpha(g: Graph, el, er, slope):
     return alpha, m_raw
 
 
-def _attention_execute(g: Graph, el, er, z, slope, chosen):
+def _attention_execute(g: Graph, pack, el, er, z, slope, chosen):
     if chosen == "pallas":
         from ..kernels.edge_softmax.ops import \
             fused_attention as attention_pallas
 
-        return attention_pallas(g, el, er, z, slope=slope)
+        # the ragged pack is resolved OUTSIDE the custom_vjp boundary
+        # (g is a tracer in here; plan caches key on concrete graphs)
+        return attention_pallas(g, el, er, z, slope=slope, ell=pack)
     alpha, _ = _attention_alpha(g, el, er, slope)
     msg = alpha[..., None] * jnp.take(z, g.src, axis=0)  # (E, H, F)
     return jax.ops.segment_sum(msg, g.dst, num_segments=g.n_dst,
@@ -155,21 +157,71 @@ def _attention_grads(g: Graph, el, er, z, slope, ct):
             dz.astype(z.dtype))
 
 
+def _attention_grads_ragged(pack, el, er, z, slope, ct):
+    """Adjoints recomputed on the RAGGED ELL stripes: per-class masked
+    max/sum over the width axis replaces the whole segment-reduce chain,
+    so the backward rides the same pad-tax-free layout as the pallas
+    forward. Pad slots carry α = 0 exactly (masked exp), so the src-side
+    scatter-adds can index ``chunk_cols`` directly — pads add zeros.
+    ∂z and ∂el ride ONE scatter with an (H, F+1) payload: on CPU the
+    scatter's per-index overhead dominates its bandwidth, so fusing the
+    two source-side adds beats two passes."""
+    F = z.shape[-1]
+    acc = jnp.zeros(z.shape[:-1] + (F + 1,),
+                    jnp.promote_types(z.dtype, ct.dtype))
+    d_er = jnp.zeros_like(er)
+    one = jnp.ones((), el.dtype)
+    sl = jnp.asarray(slope, el.dtype)
+    for cls in pack.classes:
+        cols, mask, row = cls.chunk_cols, cls.chunk_mask, cls.chunk_row
+        el_t = jnp.take(el, cols, axis=0)                  # (C, W, H)
+        er_t = jnp.take(er, row, axis=0)[:, None]          # (C, 1, H)
+        m_raw = el_t + er_t
+        m = jnp.where(m_raw >= 0, m_raw, sl * m_raw)
+        mk = mask[..., None]
+        mm = jnp.where(mk, m, jnp.asarray(-jnp.inf, m.dtype))
+        mx = jnp.max(mm, axis=1, keepdims=True)            # (C, 1, H)
+        mx = jnp.where(jnp.isfinite(mx), mx, jnp.zeros((), m.dtype))
+        ex = jnp.where(mk, jnp.exp(m - mx), jnp.zeros((), m.dtype))
+        zs = jnp.sum(ex, axis=1, keepdims=True)
+        alpha = ex / jnp.maximum(zs, 1e-38)                # (C, W, H)
+
+        ct_t = jnp.take(ct, row, axis=0)                   # (C, H, F)
+        z_t = jnp.take(z, cols, axis=0)                    # (C, W, H, F)
+        g_alpha = jnp.einsum("chf,cwhf->cwh", ct_t, z_t)
+        s_dot = jnp.sum(alpha * g_alpha, axis=1, keepdims=True)
+        g_m = alpha * (g_alpha - s_dot)
+        g_m = g_m * jnp.where(m_raw >= 0, one, sl)
+
+        # rows are disjoint across classes → pure row update; src-side
+        # slots repeat → scatter-add (pads contribute exact zeros)
+        d_er = d_er.at[row].add(jnp.sum(g_m, axis=1).astype(er.dtype))
+        payload = jnp.concatenate(
+            [alpha[..., None] * ct_t[:, None], g_m[..., None]], axis=-1)
+        acc = acc.at[cols].add(payload.astype(acc.dtype))
+    return (acc[..., F].astype(el.dtype), d_er,
+            acc[..., :F].astype(z.dtype))
+
+
 @partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _attention_rev(chosen: str, slope: float, g: Graph, el, er, z):
+def _attention_rev(chosen: str, slope: float, g: Graph, pack, el, er, z):
     """``_attention_execute`` with the scatter-free manual backward."""
-    return _attention_execute(g, el, er, z, slope, chosen)
+    return _attention_execute(g, pack, el, er, z, slope, chosen)
 
 
-def _attention_rev_fwd(chosen, slope, g, el, er, z):
-    out = _attention_execute(g, el, er, z, slope, chosen)
-    return out, (g, el, er, z)
+def _attention_rev_fwd(chosen, slope, g, pack, el, er, z):
+    out = _attention_execute(g, pack, el, er, z, slope, chosen)
+    return out, (g, pack, el, er, z)
 
 
 def _attention_rev_bwd(chosen, slope, res, ct):
-    g, el, er, z = res
-    d_el, d_er, dz = _attention_grads(g, el, er, z, slope, ct)
-    return None, d_el, d_er, dz
+    g, pack, el, er, z = res
+    if chosen == "pallas" and pack is not None:
+        d_el, d_er, dz = _attention_grads_ragged(pack, el, er, z,
+                                                 slope, ct)
+    else:
+        d_el, d_er, dz = _attention_grads(g, el, er, z, slope, ct)
+    return None, None, d_el, d_er, dz
 
 
 _attention_rev.defvjp(_attention_rev_fwd, _attention_rev_bwd)
@@ -189,8 +241,9 @@ def fused_attention(g: Graph, el: jnp.ndarray, er: jnp.ndarray,
     materialized as a caller-order HBM tensor, and the custom VJP routes
     ∂el/∂z through the graph's free src-sorted view with sorted segment
     reduces (no scatter). ``strategy``: 'auto' | 'fused' (canonical jnp)
-    | 'pallas' (row-complete ELL megakernel) | 'ring' is reserved for
-    the partitioned form. Logged as ``attn:fused``.
+    | 'pallas' (ragged row-complete ELL megakernel — one stripe grid
+    per degree class) | 'ring' is reserved for the partitioned form.
+    Logged as ``attn:fused``.
     """
     squeeze = el.ndim == 1
     if squeeze:
@@ -211,7 +264,11 @@ def fused_attention(g: Graph, el: jnp.ndarray, er: jnp.ndarray,
         max_deg = int(deg.max()) if deg.size else 0
         if max_deg > 0:
             pallas_ok = True
-            padded_slots = int((deg > 0).sum()) * max_deg
+            # per-class slot estimate of the RAGGED row-complete pack —
+            # the same formula the cost model's pallas row prices, so
+            # the gate can no longer veto the megakernel with the
+            # max_degree × n_rows envelope on power-law degree tails
+            padded_slots, _ = planner.ell_rowcomplete_padding(deg)
 
     chosen = planner.plan_attention((g.n_src, g.n_dst, g.n_edges), H, F,
                                     requested=strategy,
@@ -223,14 +280,30 @@ def fused_attention(g: Graph, el: jnp.ndarray, er: jnp.ndarray,
                          "use fused_attention_partitioned")
 
     slope = float(negative_slope)
+    pack = None
+    if chosen == "pallas":
+        # resolve the ragged pack while g is still concrete (inside the
+        # custom_vjp g's arrays are tracers and cache lookup is
+        # impossible); requesting pallas on a traced graph raises the
+        # plan cache's own "pass the cache in explicitly" error. Build
+        # only OUTSIDE an active trace — np→jnp conversions inside one
+        # would leak trace-bound arrays into the process-wide memo —
+        # else peek, demoting to the canonical jnp pipeline when the
+        # pack was never prebuilt (same idiom as hetero's skew packs)
+        cache = planner.get_plan_cache(g)
+        pack = (cache.ell_ragged() if jax.core.trace_state_clean()
+                else cache.peek("ell_ragged"))
+        if pack is None:
+            chosen = "fused"
     # eager calls are fenced + timed under the attention plan-log key
     if jnp.issubdtype(z.dtype, jnp.floating):
         out = _timed("attn:fused",
-                     lambda: _attention_rev(chosen, slope, g, el, er, z))
+                     lambda: _attention_rev(chosen, slope, g, pack,
+                                            el, er, z))
     else:
         out = _timed("attn:fused",
-                     lambda: _attention_execute(g, el, er, z, slope,
-                                                chosen))
+                     lambda: _attention_execute(g, pack, el, er, z,
+                                                slope, chosen))
     return out[:, 0, :] if squeeze else out
 
 

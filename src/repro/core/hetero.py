@@ -311,6 +311,34 @@ def _reduce_fused(rg: RelGraph, msg, reduce: str,
                                     plan)
                     out = part if out is None else out + part
                 return out
+        elif base in ("max", "min"):
+            classes = _skew_classes(rg)
+            if classes is not None:
+                # extrema version of the skew-class pull: per-class RAW
+                # reductions (±inf kept on per-class-empty rows so a
+                # zero fill can't clobber another class's negative
+                # extremum), combined with the extremum, finalized once
+                comb = jnp.maximum if base == "max" else jnp.minimum
+                seg = (jax.ops.segment_max if base == "max"
+                       else jax.ops.segment_min)
+                out = None
+                for cg, slots in classes:
+                    sub = jnp.take(msg, slots, axis=0)  # class caller
+                    pack = planner.get_plan_cache(cg).peek("ell")
+                    if pack is not None:
+                        part = S.pull_ell_reduce(
+                            pack,
+                            lambda cls, sub=sub: jnp.take(
+                                sub, cls.chunk_eids, axis=0),
+                            base, raw=True)
+                    else:               # in-trace, pack never built
+                        part = seg(jnp.take(sub, cg.eid, axis=0),
+                                   cg.dst, num_segments=cg.n_dst,
+                                   indices_are_sorted=True)
+                    out = part if out is None else comb(out, part)
+                out = jnp.where(jnp.isfinite(out), out,
+                                jnp.zeros((), out.dtype))
+                return S.finalize_empty_rows(out, g.in_degrees, base)
         # peek only: hetero_gspmm guarantees the pack was built (on an
         # eager call) before routing here — building now could run
         # inside a trace and leak
@@ -585,9 +613,9 @@ def hetero_gspmm(rg: RelGraph, u: jnp.ndarray, *,
 
     ``strategy``: 'auto' (planner, logged ``hetero:<op>``), 'fused',
     'loop' (per-relation baseline), 'ell' (fused messages + the fused
-    graph's blocked pull; under material relation-size skew the sum
-    form splits into per-size-class packs), or any plain gspmm
-    strategy name — which
+    graph's blocked pull; under material relation-size skew the
+    sum/max/min forms split into per-size-class packs), or any plain
+    gspmm strategy name — which
     pins the per-relation loop with that inner reduce ('push' is the
     fig2 baseline; the rest run the loop's segment form).
     """

@@ -69,20 +69,29 @@ def _acc_dtype(dtype):
 def _count_exchange(pg: "PartitionedGraph", x, comm: str) -> None:
     """Account one full ring exchange in the obs metrics registry.
 
-    A ring pass moves every source block through S-1 hops: S·(S-1)
-    block-sends of ``rows × feat`` elements. ``raw_bytes`` is what the
-    uncompressed payload would weigh at ``x.dtype``; ``wire_bytes`` is
-    what actually travels under ``comm`` (int8 + per-block fp32
-    scales). Both counters bump together, so their ratio is the
-    measured compression factor regardless of call count.
+    A ring pass moves every source block through ``ragged_stages`` hops
+    (at most S-1; trailing all-empty bucket diagonals are never
+    rotated): S·stages block-sends of ``rows × feat`` elements.
+    ``raw_bytes`` is what the uncompressed payload would weigh at
+    ``x.dtype``; ``wire_bytes`` is what actually travels under ``comm``
+    (int8 + per-block fp32 scales). Both counters bump together, so
+    their ratio is the measured compression factor regardless of call
+    count. ``pad_slots`` tracks the bucket slots the ragged schedule
+    touches beyond the real edges — the residual padding tax.
     """
     if not _metrics.enabled() or pg.n_shards < 2:
         return
+    st = pg.stats
     elems = pg.rows * int(np.prod(x.shape[1:], dtype=np.int64))
     raw, wire = wire_bytes(elems, jnp.dtype(x.dtype).itemsize, comm)
-    hops = pg.n_shards * (pg.n_shards - 1)
+    stages = st.ragged_stages if st.ragged_stages >= 0 else pg.n_shards - 1
+    hops = pg.n_shards * stages
     _metrics.counter("comm.ring.raw_bytes").inc(hops * raw)
     _metrics.counter("comm.ring.wire_bytes").inc(hops * wire)
+    slots = st.ragged_slots if st.ragged_slots > 0 else (
+        pg.n_shards * pg.n_shards * pg.eb)
+    _metrics.counter("comm.ring.pad_slots").inc(
+        max(slots - pg.n_edges, 0))
 
 
 # --------------------------------------------------------------------- #
@@ -98,6 +107,14 @@ class PartitionStats:
     cut_fraction: float     # edges whose endpoints live on different shards
     pad_ratio: float        # S*S*eb / n_edges — bucket padding waste
     balance: float          # max / mean edges owned per dst shard
+    # ragged bucket accounting (defaults keep hand-built stats valid):
+    # slots the per-diagonal-max schedule touches (S · Σ_s w_s, diagonal
+    # included), the last non-empty bucket diagonal (= ring transfers
+    # per device; -1 means "unknown, assume dense S-1"), and the ragged
+    # slots / n_edges waste ratio.
+    ragged_slots: int = 0
+    ragged_stages: int = -1
+    ragged_pad_ratio: float = 1.0
 
 
 @jax.tree_util.register_pytree_node_class
@@ -126,13 +143,18 @@ class PartitionedGraph:
     n_edges: int = dataclasses.field(metadata={"static": True})
     mode: str = dataclasses.field(metadata={"static": True})
     stats: PartitionStats = dataclasses.field(metadata={"static": True})
+    # real (unpadded) slot count of bucket (i, j); the bucket fill is
+    # contiguous from slot 0, so a static [:eb_ij[i][j]] slice captures
+    # exactly the real edges. Default () means "unknown — dense eb".
+    eb_ij: Tuple[Tuple[int, ...], ...] = dataclasses.field(
+        default=(), metadata={"static": True})
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
         return ((self.to_pad, self.from_pad, self.src_local,
                  self.dst_local, self.eid, self.mask),
                 (self.n_shards, self.rows, self.eb, self.n, self.n_edges,
-                 self.mode, self.stats))
+                 self.mode, self.stats, self.eb_ij))
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -141,6 +163,12 @@ class PartitionedGraph:
     @property
     def n_pad(self) -> int:
         return self.n_shards * self.rows
+
+    def bucket_width(self, i: int, j: int) -> int:
+        """Real slot count of bucket (i, j) — ``eb`` when unknown."""
+        if not self.eb_ij:
+            return self.eb
+        return self.eb_ij[i][j]
 
     # -- layout converters ----------------------------------------------
     def scatter_nodes(self, x: jnp.ndarray) -> jnp.ndarray:
@@ -246,11 +274,20 @@ def build_partition(g: Graph, n_shards: int,
 
     owned = np.bincount(i, minlength=n_shards) if E else np.zeros(n_shards)
     cut = int((i != j).sum()) if E else 0
+    counts2 = counts.reshape(n_shards, n_shards)
+    eb_ij = tuple(tuple(int(c) for c in rowc) for rowc in counts2)
+    ws = [max(int(counts2[(jj + s) % n_shards, jj])
+              for jj in range(n_shards)) for s in range(n_shards)]
+    nz = [s for s in range(n_shards) if ws[s] > 0]
+    ragged_slots = int(n_shards * sum(ws))
+    ragged_stages = nz[-1] if nz else 0
     stats = PartitionStats(
         n_shards=n_shards, rows_per_shard=rows, eb=eb, n_edges=E,
         cut_fraction=float(cut / max(E, 1)),
         pad_ratio=float(n_shards * n_shards * eb / max(E, 1)),
-        balance=float(owned.max() / max(owned.mean(), 1e-9)))
+        balance=float(owned.max() / max(owned.mean(), 1e-9)),
+        ragged_slots=ragged_slots, ragged_stages=ragged_stages,
+        ragged_pad_ratio=float(ragged_slots / max(E, 1)))
     return PartitionedGraph(
         to_pad=jnp.asarray(to_pad), from_pad=jnp.asarray(from_pad),
         src_local=jnp.asarray(SL.reshape(n_shards, n_shards, eb)),
@@ -258,7 +295,7 @@ def build_partition(g: Graph, n_shards: int,
         eid=jnp.asarray(EID.reshape(n_shards, n_shards, eb)),
         mask=jnp.asarray(MK.reshape(n_shards, n_shards, eb)),
         n_shards=n_shards, rows=rows, eb=eb, n=n, n_edges=E, mode=mode,
-        stats=stats)
+        stats=stats, eb_ij=eb_ij)
 
 
 # --------------------------------------------------------------------- #
@@ -307,6 +344,27 @@ def _bwd_perm(S):
     return [(k, (k - 1) % S) for k in range(S)]
 
 
+def _diag_widths(pg: PartitionedGraph) -> Tuple[int, ...]:
+    """Max real bucket width along each ring diagonal.
+
+    At stage ``s`` every device consumes the bucket whose (dst - src)
+    shard distance is ``s`` (mod S); under SPMD the stage's slice width
+    must be the max over that diagonal. ``ws[0]`` is the owner-local
+    diagonal; trailing zero entries are stages the ring can skip
+    entirely."""
+    S = pg.n_shards
+    if not pg.eb_ij:
+        return (pg.eb,) * S
+    return tuple(max(pg.eb_ij[(j + s) % S][j] for j in range(S))
+                 for s in range(S))
+
+
+def _last_stage(ws: Tuple[int, ...]) -> int:
+    """Index of the last non-empty diagonal (0 if all empty)."""
+    nz = [s for s in range(len(ws)) if ws[s] > 0]
+    return nz[-1] if nz else 0
+
+
 # --------------------------------------------------------------------- #
 # ring_gspmm: differentiable sharded weighted Copy-Reduce
 # --------------------------------------------------------------------- #
@@ -318,33 +376,49 @@ def _ring_fwd_emu(pg: PartitionedGraph, x, w):
     for i in range(S):
         out = jnp.zeros((rows,) + feat, _acc_dtype(x.dtype))
         for j in range(S):
-            out = _stage_reduce(xs[j], pg.src_local[i, j],
-                                pg.dst_local[i, j], pg.mask[i, j],
-                                w[i, j], out)
+            wij = pg.bucket_width(i, j)      # real slots: exact slice,
+            if not wij:                      # empty bucket: no work
+                continue
+            out = _stage_reduce(xs[j], pg.src_local[i, j][:wij],
+                                pg.dst_local[i, j][:wij],
+                                pg.mask[i, j][:wij],
+                                w[i, j][:wij], out)
         outs.append(out)
     return jnp.stack(outs).reshape((S * rows,) + feat).astype(x.dtype)
 
 
 def _ring_bwd_emu(pg: PartitionedGraph, x, w, ct):
-    S, rows = pg.n_shards, pg.rows
+    S, rows, eb = pg.n_shards, pg.rows, pg.eb
     feat = x.shape[1:]
     head_rank = w.ndim - 3
+    acc_t = _acc_dtype(jnp.promote_types(x.dtype, ct.dtype))
     xs = x.reshape((S, rows) + feat)
     cts = ct.reshape((S, rows) + feat)
     dxs, dws = [], []
     for j in range(S):           # transposed: iterate SOURCE shards
         dx = jnp.zeros((rows,) + feat, _acc_dtype(x.dtype))
         for i in range(S):       # gather at dst, scatter at src (swap)
-            dx = _stage_reduce(cts[i], pg.dst_local[i, j],
-                               pg.src_local[i, j], pg.mask[i, j],
-                               w[i, j], dx)
+            wij = pg.bucket_width(i, j)
+            if not wij:
+                continue
+            dx = _stage_reduce(cts[i], pg.dst_local[i, j][:wij],
+                               pg.src_local[i, j][:wij],
+                               pg.mask[i, j][:wij],
+                               w[i, j][:wij], dx)
         dxs.append(dx)
     for i in range(S):
         dwrow = []
         for j in range(S):
-            xg = jnp.take(xs[j], pg.src_local[i, j], axis=0)
-            cg = jnp.take(cts[i], pg.dst_local[i, j], axis=0)
-            dwrow.append(_edge_dot(xg, cg, pg.mask[i, j], head_rank))
+            wij = pg.bucket_width(i, j)
+            if wij:
+                xg = jnp.take(xs[j], pg.src_local[i, j][:wij], axis=0)
+                cg = jnp.take(cts[i], pg.dst_local[i, j][:wij], axis=0)
+                d = _edge_dot(xg, cg, pg.mask[i, j][:wij], head_rank)
+                d = jnp.pad(d, ((0, eb - wij),)
+                            + ((0, 0),) * (d.ndim - 1))
+            else:
+                d = jnp.zeros(w.shape[2:], acc_t)
+            dwrow.append(d)
         dws.append(jnp.stack(dwrow))
     dx = jnp.stack(dxs).reshape((S * rows,) + feat).astype(x.dtype)
     return dx, jnp.stack(dws).astype(w.dtype)
@@ -360,6 +434,9 @@ def _ring_fwd_mesh(pg: PartitionedGraph, mesh, axis, x, w):
     feat = x.shape[1:]
     xs = x.reshape((S, rows) + feat)
 
+    ws = _diag_widths(pg)
+    s_max = _last_stage(ws)
+
     def local_fn(xb, sl, dl, mk, wb):
         me = jax.lax.axis_index(axis)
         block = xb[0]
@@ -367,19 +444,22 @@ def _ring_fwd_mesh(pg: PartitionedGraph, mesh, axis, x, w):
         out = _maybe_pvary(jnp.zeros((rows,) + feat,
                                      _acc_dtype(x.dtype)), axis)
 
-        def stage(s, carry):
-            out, block = carry
+        # static unroll (S is small): each stage slices its bucket to
+        # the diagonal's max real width, and the ring stops after the
+        # last non-empty diagonal — trailing stages move no bytes.
+        for s in range(s_max + 1):
             shard = (me - s) % S
             # kick off the NEXT block transfer (overlaps the reduce)
-            nxt = jax.lax.ppermute(block, axis, _fwd_perm(S))
-            out = _stage_reduce(block,
-                                jnp.take(sl, shard, axis=0),
-                                jnp.take(dl, shard, axis=0),
-                                jnp.take(mk, shard, axis=0),
-                                jnp.take(wb, shard, axis=0), out)
-            return out, nxt
-
-        out, _ = jax.lax.fori_loop(0, S, stage, (out, block))
+            nxt = (jax.lax.ppermute(block, axis, _fwd_perm(S))
+                   if s < s_max else block)
+            if ws[s]:
+                out = _stage_reduce(block,
+                                    jnp.take(sl, shard, axis=0)[:ws[s]],
+                                    jnp.take(dl, shard, axis=0)[:ws[s]],
+                                    jnp.take(mk, shard, axis=0)[:ws[s]],
+                                    jnp.take(wb, shard, axis=0)[:ws[s]],
+                                    out)
+            block = nxt
         return out.astype(x.dtype)[None]
 
     bucket = P(axis, None, None)
@@ -405,6 +485,9 @@ def _ring_bwd_mesh(pg: PartitionedGraph, mesh, axis, x, w, ct):
     dlT = jnp.swapaxes(pg.dst_local, 0, 1)
     mkT = jnp.swapaxes(pg.mask, 0, 1)
 
+    ws = _diag_widths(pg)
+    s_max = _last_stage(ws)
+
     def local_fn(xb, ctb, wb, sl, dl, mk, slt, dlt, mkt):
         me = jax.lax.axis_index(axis)
         xblock = xb[0]
@@ -415,31 +498,42 @@ def _ring_bwd_mesh(pg: PartitionedGraph, mesh, axis, x, w, ct):
         dx = _maybe_pvary(jnp.zeros((rows,) + feat,
                                     _acc_dtype(x.dtype)), axis)
         dw = _maybe_pvary(jnp.zeros(wrow.shape, w.dtype), axis)
+        ctblock, wblock = ct_local, wrow
 
-        def stage(s, carry):
-            dx, dw, xblock, ctblock, wblock = carry
+        # static unroll mirroring the forward: at stage s both the ∂x
+        # bucket (i_ct, me) and the ∂w bucket (me, j_x) sit on the same
+        # (dst - src) ≡ s diagonal, so one width ws[s] serves both;
+        # trailing empty diagonals skip transfers entirely.
+        for s in range(s_max + 1):
             i_ct = (me + s) % S      # dst shard resident via reverse ring
             j_x = (me - s) % S       # src shard resident via forward ring
-            x_nxt = jax.lax.ppermute(xblock, axis, _fwd_perm(S))
-            ct_nxt = jax.lax.ppermute(ctblock, axis, _bwd_perm(S))
-            w_nxt = jax.lax.ppermute(wblock, axis, _bwd_perm(S))
-            # ∂x for MY src shard from bucket (i_ct, me): gather at dst,
-            # scatter at src — the swapped-role stage kernel
-            dx = _stage_reduce(ctblock,
-                               jnp.take(dlt, i_ct, axis=0),
-                               jnp.take(slt, i_ct, axis=0),
-                               jnp.take(mkt, i_ct, axis=0),
-                               jnp.take(wblock, me, axis=0), dx)
-            # ∂w for MY dst bucket (me, j_x): per-edge <x, ct> dot
-            xg = jnp.take(xblock, jnp.take(sl, j_x, axis=0), axis=0)
-            cg = jnp.take(ct_local, jnp.take(dl, j_x, axis=0), axis=0)
-            dw = dw.at[j_x].set(_edge_dot(xg, cg,
-                                          jnp.take(mk, j_x, axis=0),
-                                          head_rank).astype(w.dtype))
-            return dx, dw, x_nxt, ct_nxt, w_nxt
-
-        dx, dw, _, _, _ = jax.lax.fori_loop(
-            0, S, stage, (dx, dw, xblock, ct_local, wrow))
+            if s < s_max:
+                x_nxt = jax.lax.ppermute(xblock, axis, _fwd_perm(S))
+                ct_nxt = jax.lax.ppermute(ctblock, axis, _bwd_perm(S))
+                w_nxt = jax.lax.ppermute(wblock, axis, _bwd_perm(S))
+            else:
+                x_nxt, ct_nxt, w_nxt = xblock, ctblock, wblock
+            if ws[s]:
+                # ∂x for MY src shard from bucket (i_ct, me): gather at
+                # dst, scatter at src — the swapped-role stage kernel
+                dx = _stage_reduce(ctblock,
+                                   jnp.take(dlt, i_ct, axis=0)[:ws[s]],
+                                   jnp.take(slt, i_ct, axis=0)[:ws[s]],
+                                   jnp.take(mkt, i_ct, axis=0)[:ws[s]],
+                                   jnp.take(wblock, me, axis=0)[:ws[s]],
+                                   dx)
+                # ∂w for MY dst bucket (me, j_x): per-edge <x, ct> dot
+                xg = jnp.take(xblock,
+                              jnp.take(sl, j_x, axis=0)[:ws[s]], axis=0)
+                cg = jnp.take(ct_local,
+                              jnp.take(dl, j_x, axis=0)[:ws[s]], axis=0)
+                de = _edge_dot(xg, cg,
+                               jnp.take(mk, j_x, axis=0)[:ws[s]],
+                               head_rank).astype(w.dtype)
+                de = jnp.pad(de, ((0, eb - ws[s]),)
+                             + ((0, 0),) * (de.ndim - 1))
+                dw = dw.at[j_x].set(de)
+            xblock, ctblock, wblock = x_nxt, ct_nxt, w_nxt
         return dx[None], dw[None]
 
     bucket = P(axis, None, None)
@@ -529,16 +623,23 @@ def ring_reference(pg: PartitionedGraph, x: jnp.ndarray,
 def _rev_fwd_emu(pg, el, er):
     S, rows, eb = pg.n_shards, pg.rows, pg.eb
     feat = el.shape[1:]
+    res_t = jnp.result_type(el, er)
     els = el.reshape((S, rows) + feat)
     ers = er.reshape((S, rows) + feat)
     out = []
     for i in range(S):
         row = []
         for j in range(S):
-            vals = (jnp.take(els[j], pg.src_local[i, j], axis=0)
-                    + jnp.take(ers[i], pg.dst_local[i, j], axis=0))
-            mk = pg.mask[i, j].reshape((eb,) + (1,) * len(feat))
-            row.append(jnp.where(mk, vals, jnp.zeros((), vals.dtype)))
+            wij = pg.bucket_width(i, j)
+            if not wij:
+                row.append(jnp.zeros((eb,) + feat, res_t))
+                continue
+            vals = (jnp.take(els[j], pg.src_local[i, j][:wij], axis=0)
+                    + jnp.take(ers[i], pg.dst_local[i, j][:wij], axis=0))
+            mk = pg.mask[i, j][:wij].reshape((wij,) + (1,) * len(feat))
+            vals = jnp.where(mk, vals, jnp.zeros((), vals.dtype))
+            row.append(jnp.pad(vals, ((0, eb - wij),)
+                               + ((0, 0),) * len(feat)))
         out.append(jnp.stack(row))
     return jnp.stack(out)
 
@@ -551,15 +652,22 @@ def _rev_bwd_emu(pg, ct):
     for j in range(S):
         dl_ = jnp.zeros((rows,) + feat, dtype)
         for i in range(S):
-            dl_ = _stage_reduce(ct[i, j], jnp.arange(eb),
-                                pg.src_local[i, j], pg.mask[i, j],
-                                None, dl_)
+            wij = pg.bucket_width(i, j)
+            if not wij:
+                continue
+            dl_ = _stage_reduce(ct[i, j][:wij], jnp.arange(wij),
+                                pg.src_local[i, j][:wij],
+                                pg.mask[i, j][:wij], None, dl_)
         dels.append(dl_)
     for i in range(S):
         dr = jnp.zeros((rows,) + feat, dtype)
         for j in range(S):
-            dr = _stage_reduce(ct[i, j], jnp.arange(eb),
-                               pg.dst_local[i, j], pg.mask[i, j], None, dr)
+            wij = pg.bucket_width(i, j)
+            if not wij:
+                continue
+            dr = _stage_reduce(ct[i, j][:wij], jnp.arange(wij),
+                               pg.dst_local[i, j][:wij],
+                               pg.mask[i, j][:wij], None, dr)
         ders.append(dr)
     d_el = jnp.stack(dels).reshape((S * rows,) + feat).astype(ct.dtype)
     d_er = jnp.stack(ders).reshape((S * rows,) + feat).astype(ct.dtype)
@@ -715,12 +823,16 @@ def local_gspmm(pg: PartitionedGraph, x: jnp.ndarray,
                 w: jnp.ndarray) -> jnp.ndarray:
     """Owner-local part only: the diagonal (d, d) buckets — edges whose
     both endpoints live on one shard. No communication."""
-    S, rows, eb = pg.n_shards, pg.rows, pg.eb
+    S, rows = pg.n_shards, pg.rows
+    feat0 = x.shape[1:]
+    w0 = _diag_widths(pg)[0]                 # max real diagonal width
+    if not w0:
+        return jnp.zeros((pg.n_pad,) + feat0, x.dtype)
     diag = jnp.arange(S)
-    sl = pg.src_local[diag, diag]            # (S, eb)
-    dl = pg.dst_local[diag, diag]
-    mk = pg.mask[diag, diag]
-    wd = w[diag, diag]                       # (S, eb[, H])
+    sl = pg.src_local[diag, diag][:, :w0]    # (S, w0)
+    dl = pg.dst_local[diag, diag][:, :w0]
+    mk = pg.mask[diag, diag][:, :w0]
+    wd = w[diag, diag][:, :w0]               # (S, w0[, H])
     base = (jnp.arange(S, dtype=jnp.int32) * rows)[:, None]
     gsrc = (base + sl).reshape(-1)
     gdst = (base + dl).reshape(-1)

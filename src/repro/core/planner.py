@@ -43,14 +43,15 @@ import numpy as np
 
 from .graph import Graph
 from .tiling import (ELLClass, ELLPack, TilePack, build_ell,
-                     build_ell_uniform, build_tiles)
+                     build_ell_ragged, build_ell_uniform, build_tiles)
 from ..obs import events as _obs_events
 from ..obs import metrics as _obs_metrics
 from ..obs.events import drift_report, plan_events  # noqa: F401 (re-export)
 from ..optim.compression import wire_bytes as _wire_bytes
 
 __all__ = ["GraphStats", "PlanCache", "Plan", "get_plan_cache",
-           "compute_stats", "estimate_cost", "plan_gspmm", "supports",
+           "compute_stats", "estimate_cost", "ell_rowcomplete_padding",
+           "plan_gspmm", "supports",
            "plan_log", "clear_plan_log", "last_plan", "pack_build_totals",
            "set_mode", "get_mode", "STRATEGIES", "FALLBACK_CHAIN",
            "block_stats", "plan_block_gspmm", "clear_block_plans",
@@ -104,6 +105,12 @@ class GraphStats:
     ell_padded_slots: int     # total (row, slot) cells of the bucketed ELL
     ell_n_classes: int        # number of distinct power-of-two widths
     pad_ratio: float          # ell_padded_slots / n_edges
+    # row-complete RAGGED ELL (no row splitting; the fused-attention
+    # megakernel's pack — build_ell_ragged). Defaults keep hand-built
+    # stats (tests, block_stats) valid without the ragged histogram.
+    ragged_padded_slots: int = 0
+    ragged_n_classes: int = 0
+    ragged_pad_ratio: float = 1.0
 
 
 def _ell_padding(deg: np.ndarray, cap: int) -> Tuple[int, int]:
@@ -127,6 +134,24 @@ def _ell_padding(deg: np.ndarray, cap: int) -> Tuple[int, int]:
     return padded, len(widths)
 
 
+def ell_rowcomplete_padding(deg) -> Tuple[int, int]:
+    """Padded-slot + class count of the ROW-COMPLETE ragged ELL
+    (``build_ell_ragged``): every nonzero row padded to the next power
+    of two of its own in-degree, no splitting. Estimated from the
+    degree histogram without building the pack — the ONE formula shared
+    by ``fused_attention``'s pallas gate and the planner's ragged
+    attention cost row (a gate priced at ``max_degree × n_rows`` would
+    veto the megakernel on exactly the power-law tails it now wins)."""
+    deg = np.asarray(deg, dtype=np.int64)
+    deg = deg[deg > 0]
+    if deg.size == 0:
+        return 0, 0
+    w = np.where(deg > 1,
+                 (2 ** np.ceil(np.log2(deg))).astype(np.int64),
+                 np.int64(1))
+    return int(w.sum()), int(np.unique(w).size)
+
+
 def compute_stats(g: Graph, ell_cap: int = _DEFAULT_ELL_CAP) -> GraphStats:
     """Host-side stats; requires a concrete (non-traced) graph."""
     deg = np.asarray(g.in_degrees, dtype=np.int64)
@@ -134,12 +159,15 @@ def compute_stats(g: Graph, ell_cap: int = _DEFAULT_ELL_CAP) -> GraphStats:
     avg = n_edges / max(g.n_dst, 1)
     mx = int(deg.max()) if deg.size else 0
     padded, n_cls = _ell_padding(deg, ell_cap)
+    rslots, rcls = ell_rowcomplete_padding(deg)
     return GraphStats(
         n_src=int(g.n_src), n_dst=int(g.n_dst), n_edges=n_edges,
         avg_in_deg=float(avg), max_in_deg=mx,
         skew=float(mx / max(avg, 1e-9)),
         ell_padded_slots=int(padded), ell_n_classes=int(n_cls),
-        pad_ratio=float(padded / max(n_edges, 1)))
+        pad_ratio=float(padded / max(n_edges, 1)),
+        ragged_padded_slots=int(rslots), ragged_n_classes=int(rcls),
+        ragged_pad_ratio=float(rslots / max(n_edges, 1)))
 
 
 # --------------------------------------------------------------------- #
@@ -156,6 +184,20 @@ def pack_build_totals() -> Dict[str, int]:
 def _note_pack_build(kind: str) -> None:
     _PACK_BUILDS[kind] += 1
     _obs_metrics.counter(f"planner.pack_builds.{kind}").inc()
+
+
+def _ell_pack_slots(pack: ELLPack) -> int:
+    """Total padded (chunk, slot) cells of a built ELL pack."""
+    return sum(int(c.chunk_mask.shape[0]) * int(c.width)
+               for c in pack.classes)
+
+
+def _note_pad_ratio(kind: str, slots: int, n_edges: int) -> None:
+    """``planner.pad_ratio.<kind>`` gauge: padded slots per real edge of
+    the most recently built pack of this kind — the pad-tax trajectory
+    every BENCH_*.json embeds via its metrics snapshot."""
+    _obs_metrics.gauge(f"planner.pad_ratio.{kind}").set(
+        slots / max(int(n_edges), 1))
 
 
 @jax.tree_util.register_pytree_node_class
@@ -186,6 +228,7 @@ class PlanCache:
         self._ell_by_cap: Dict[int, ELLPack] = {}
         self._tiles_by_geom: Dict[Tuple[int, int, int], TilePack] = {}
         self._uniform: Dict[int, ELLClass] = {}
+        self._ragged: Optional[ELLPack] = None
         self._autotuned: Dict[Tuple, str] = {}
         self._partitions: Dict[Tuple[int, str], Any] = {}
 
@@ -209,7 +252,8 @@ class PlanCache:
 
     def peek(self, kind: str):
         """Return an already-built pack or None (never builds)."""
-        return {"ell": self._ell, "tiles": self._tiles}[kind]
+        return {"ell": self._ell, "tiles": self._tiles,
+                "ell_ragged": self._ragged}[kind]
 
     def set_ell_cap(self, cap: int) -> None:
         """Change the default ELL width cap. Re-slots any pack built at
@@ -235,6 +279,8 @@ class PlanCache:
                     return None
                 self._ell = build_ell(g, cap)
                 _note_pack_build("ell")
+                _note_pad_ratio("ell", _ell_pack_slots(self._ell),
+                                g.n_edges)
             return self._ell
         if cap not in self._ell_by_cap:
             g = self._graph()
@@ -242,6 +288,8 @@ class PlanCache:
                 return None
             self._ell_by_cap[cap] = build_ell(g, cap)
             _note_pack_build("ell")
+            _note_pad_ratio("ell", _ell_pack_slots(self._ell_by_cap[cap]),
+                            g.n_edges)
         return self._ell_by_cap[cap]
 
     def tiles(self, bm: int = 128, bk: int = 128, eb: int = 256
@@ -270,7 +318,26 @@ class PlanCache:
                 return None
             self._uniform[width] = build_ell_uniform(g, width)
             _note_pack_build("ell_uniform")
+            cls = self._uniform[width]
+            _note_pad_ratio("ell_uniform",
+                            int(cls.chunk_mask.shape[0]) * int(cls.width),
+                            g.n_edges)
         return self._uniform[width]
+
+    def ell_ragged(self) -> Optional[ELLPack]:
+        """Row-complete RAGGED ELL (``build_ell_ragged``): whole rows,
+        per-power-of-two class widths — the fused-attention megakernel's
+        power-law pack. Host-side memo like :meth:`ell_uniform` (never
+        builds inside a trace)."""
+        if self._ragged is None:
+            g = self._graph()
+            if g is None:
+                return None
+            self._ragged = build_ell_ragged(g)
+            _note_pack_build("ell_ragged")
+            _note_pad_ratio("ell_ragged", _ell_pack_slots(self._ragged),
+                            g.n_edges)
+        return self._ragged
 
     def partition(self, n_shards: int, mode: str = "contiguous"):
         """Memoized :class:`~repro.core.partition.PartitionedGraph` for
@@ -293,8 +360,14 @@ class PlanCache:
             if g is None:
                 return None
             from .partition import build_partition  # local: avoids cycle
-            self._partitions[key] = build_partition(g, n_shards, mode)
+            pg = build_partition(g, n_shards, mode)
+            self._partitions[key] = pg
             _note_pack_build("partition")
+            st = pg.stats
+            _note_pad_ratio("partition",
+                            st.n_shards * st.n_shards * st.eb, st.n_edges)
+            _note_pad_ratio("partition_ragged", st.ragged_slots,
+                            st.n_edges)
         return self._partitions[key]
 
     def peek_partition(self, n_shards: int, mode: str = "contiguous"):
@@ -419,18 +492,32 @@ def estimate_cost(strategy: str, stats: GraphStats, d: int,
         if ring_stats is not None:
             S = ring_stats.n_shards
             rows = ring_stats.rows_per_shard
-            work = S * ring_stats.eb * dd            # slots per device
+            # per-device slot work: ragged per-bucket widths when the
+            # partition carries them (slots = S · Σ_s w_s, the per-stage
+            # diagonal maxima), else the dense S²·eb envelope — the two
+            # coincide exactly when every bucket fills to eb
+            slots = ring_stats.ragged_slots
+            if slots <= 0:
+                slots = S * S * ring_stats.eb
+            work = (slots / S) * dd
+            stages = ring_stats.ragged_stages
+            if stages < 0:
+                stages = S - 1
         else:
             S = ctx.n_shards if ctx is not None else _RING_DEFAULT_SHARDS
             rows = -(-max(stats.n_dst, 1) // S)
             work = (stats.n_edges / S) * dd          # ideal balance
+            stages = S - 1
         if comm is None:
             comm = ctx.comm if ctx is not None else "none"
         itemsize = jnp.dtype(dtype or jnp.float32).itemsize
         _, wire = _wire_bytes(rows * dd, itemsize, comm)
         # _RING_COMM is calibrated per fp32 element — normalize the
-        # wire payload back to fp32-equivalent elements
-        comm_cost = _RING_COMM * (S - 1) * (wire / 4.0)
+        # wire payload back to fp32-equivalent elements. Ragged buckets
+        # also truncate the ring: stages whose whole diagonal is empty
+        # are never exchanged, so the comm term scales with the real
+        # stage count, not S-1.
+        comm_cost = _RING_COMM * stages * (wire / 4.0)
         return tp * work + comm_cost + _FIXED[strategy]
     else:  # onehot / pallas: padded tile-bucket slots (lower bound on T)
         n_buckets = max(1, -(-stats.n_edges // _TILE_EDGE_BUDGET))
@@ -1256,8 +1343,11 @@ ATTN_STRATEGIES = ("fused", "pallas", "ring")
 
 _ATTN_PLANS: Dict[Tuple, str] = {}
 
-# The megakernel runs over the uniform row-complete pack: every
-# destination row padded to the max in-degree.
+# The megakernel runs over a ROW-COMPLETE pack: whole destination rows
+# resident per stripe. With the ragged per-class pack its padded-slot
+# count is the degree histogram's pow2 row sum (ell_rowcomplete_padding)
+# instead of n_rows × max_degree — the change that makes pallas a live
+# candidate on power-law degree tails.
 _ATTN_PALLAS_FIXED = 5e4
 
 
@@ -1270,7 +1360,11 @@ def _attn_cost(strategy: str, n_edges: int, hf: int, backend: str,
         return tp["segment"] * n_edges * hf
     if strategy == "pallas":
         slots = n_edges if padded_slots is None else padded_slots
-        return tp["pallas"] * slots * hf + _ATTN_PALLAS_FIXED
+        # On CPU the megakernel lowers through interpret mode to the
+        # same dense blocked pull the ell strategy runs — price its
+        # slots at the ell rate; the true pallas rate is a TPU number.
+        rate = tp["ell"] if backend == "cpu" else tp["pallas"]
+        return rate * slots * hf + _ATTN_PALLAS_FIXED
     return None
 
 

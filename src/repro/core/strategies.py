@@ -109,7 +109,8 @@ def pull_segment(msg: jnp.ndarray, tgt_sorted: jnp.ndarray, n_tgt: int,
 def pull_ell_reduce(pack: ELLPack,
                     class_msg_fn: Callable,
                     reduce_op: str,
-                    deg: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                    deg: Optional[jnp.ndarray] = None,
+                    raw: bool = False) -> jnp.ndarray:
     """Blocked pull: dense masked reduce along each width class.
 
     ``class_msg_fn(cls)`` returns per-edge messages for one
@@ -118,6 +119,11 @@ def pull_ell_reduce(pack: ELLPack,
     (XLA fuses gather+mask+reduce per class). Each destination row lives
     in exactly one class (splits share the cap class), so classes
     combine with one segment reduction each.
+
+    ``raw=True`` skips the finalize tail (extrema keep ±inf on empty
+    rows, no mean divide, no empty-row zeroing) — for callers that
+    combine several partial reductions (hetero skew classes) and must
+    finalize exactly once at the end.
     """
     base = "sum" if reduce_op in ("sum", "mean") else reduce_op
     out = None
@@ -153,6 +159,8 @@ def pull_ell_reduce(pack: ELLPack,
             out = jnp.minimum(out, cls_out)
         else:
             out = out * cls_out
+    if raw:
+        return out
     if base in ("max", "min"):
         out = jnp.where(jnp.isfinite(out), out, jnp.zeros((), out.dtype))
     if reduce_op == "mean":

@@ -30,7 +30,7 @@ import numpy as np
 from .graph import Graph
 
 __all__ = ["ELLPack", "ELLClass", "build_ell", "build_ell_uniform",
-           "TilePack", "build_tiles"]
+           "build_ell_ragged", "TilePack", "build_tiles"]
 
 
 def _round_up(x: int, m: int) -> int:
@@ -132,6 +132,64 @@ def build_ell(g: Graph, width_cap: int = 64) -> ELLPack:
                      chunk_row=jnp.asarray(r))
             for (w, c, e, m, r) in classes),
         n_dst=n_dst)
+
+
+def build_ell_ragged(g: Graph) -> ELLPack:
+    """Row-complete RAGGED ELL: power-of-two degree classes, each class
+    padded only to its own width.
+
+    Like :func:`build_ell` but with NO row splitting — every chunk holds
+    one whole destination row (width = next pow2 ≥ its in-degree), so
+    the fused edge-softmax megakernel can launch one stripe grid per
+    class and still see complete rows. Rows are disjoint across classes,
+    which makes the per-class scatter-back a pure permutation. Against
+    the row-complete uniform pack (every row padded to the global max
+    degree) the padded-slot count drops by the degree-tail factor — the
+    pad tax this format exists to kill on power-law graphs.
+    """
+    indptr = np.asarray(g.indptr_dst, dtype=np.int64)
+    src = np.asarray(g.src, dtype=np.int64)
+    eid = np.asarray(g.eid, dtype=np.int64)
+    deg = indptr[1:] - indptr[:-1]
+
+    chunks = []
+    nz = np.nonzero(deg)[0]
+    for r in nz:
+        s, e = indptr[r], indptr[r + 1]
+        ln = e - s
+        w = 1 << int(np.ceil(np.log2(ln))) if ln > 1 else 1
+        chunks.append((w, r, s, ln))
+    if not chunks:
+        chunks = [(1, 0, 0, 0)]
+    chunks.sort(key=lambda c: (c[0], c[1]))
+
+    classes = []
+    i = 0
+    while i < len(chunks):
+        w = chunks[i][0]
+        j = i
+        while j < len(chunks) and chunks[j][0] == w:
+            j += 1
+        n = j - i
+        cols = np.zeros((n, w), np.int32)
+        eids = np.zeros((n, w), np.int32)
+        mask = np.zeros((n, w), bool)
+        rows = np.zeros((n,), np.int32)
+        for k, (_, r, s, ln) in enumerate(chunks[i:j]):
+            cols[k, :ln] = src[s:s + ln]
+            eids[k, :ln] = eid[s:s + ln]
+            mask[k, :ln] = True
+            rows[k] = r
+        classes.append((w, cols, eids, mask, rows))
+        i = j
+
+    return ELLPack(
+        classes=tuple(
+            ELLClass(width=w, chunk_cols=jnp.asarray(c),
+                     chunk_eids=jnp.asarray(e), chunk_mask=jnp.asarray(m),
+                     chunk_row=jnp.asarray(r))
+            for (w, c, e, m, r) in classes),
+        n_dst=g.n_dst)
 
 
 def build_ell_uniform(g: Graph, width: int) -> ELLClass:

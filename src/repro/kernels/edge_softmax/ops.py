@@ -2,20 +2,38 @@
 from __future__ import annotations
 
 import functools
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ...core.graph import Graph
 from ...core.planner import get_plan_cache
-from ...core.tiling import ELLClass
+from ...core.tiling import ELLClass, ELLPack
 from ..common import should_interpret
 from .kernel import edge_softmax_pallas_call, fused_attention_pallas_call
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
+
+
+# Per-grid-step stripe element budget for the ragged per-class launches
+# (~64 MB of fp32). Narrow classes take huge row blocks (often the whole
+# class in one step), wide hub classes take small ones — so the grid
+# stays shallow everywhere, which is what keeps the interpreted CPU
+# lowering (one Python dispatch per grid step) fast.
+_RAGGED_BLOCK_ELEMS = 1 << 24
+
+
+def _ragged_br(C: int, W: int, H: int, F: int) -> int:
+    """Adaptive row-block size for one ragged class: as many rows per
+    grid step as the element budget allows, multiple of 8, ≥ 8, and no
+    larger than the class itself padded to 8."""
+    per_row = max(W * H * max(F, 1), 1)
+    b = min(_RAGGED_BLOCK_ELEMS // per_row, _round_up(max(C, 1), 8))
+    return max((b // 8) * 8, 8)
 
 
 @functools.partial(jax.jit,
@@ -104,22 +122,79 @@ def _fused_attention_packed(pack: ELLClass, el: jnp.ndarray,
     return res.at[pack.chunk_row].set(out[:C])
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("slope", "interpret"))
+def _fused_attention_ragged(pack: ELLPack, el: jnp.ndarray,
+                            er: jnp.ndarray, z: jnp.ndarray,
+                            slope: float, interpret: bool) -> jnp.ndarray:
+    """Attention megakernel over RAGGED per-class stripes.
+
+    One stripe grid per power-of-two degree class, each padded only to
+    its own class width — the padded-slot count is the degree
+    histogram's pow2 row sum instead of n_rows × max_degree. Classes
+    hold disjoint destination rows (build_ell_ragged never splits a
+    row), so the per-class scatter-back is a pure permutation and the
+    class outputs never overlap.
+    """
+    H = el.shape[-1]
+    F = z.shape[-1]
+    res = jnp.zeros((pack.n_dst, H, F), z.dtype)
+    for cls in pack.classes:
+        C, W = cls.chunk_cols.shape
+        b = _ragged_br(C, W, H, F)
+        C_pad = _round_up(max(C, 1), b)
+        el_t = jnp.take(el, cls.chunk_cols, axis=0)        # (C, W, H)
+        er_t = jnp.take(er, cls.chunk_row, axis=0)         # (C, H)
+        z_t = jnp.take(z, cls.chunk_cols, axis=0)          # (C, W, H, F)
+        el_t = jnp.pad(el_t, ((0, C_pad - C), (0, 0), (0, 0)))
+        er_t = jnp.pad(er_t, ((0, C_pad - C), (0, 0)))
+        z_t = jnp.pad(z_t, ((0, C_pad - C), (0, 0), (0, 0), (0, 0)))
+        mask = jnp.pad(cls.chunk_mask.astype(jnp.int32),
+                       ((0, C_pad - C), (0, 0)))
+        call = fused_attention_pallas_call(C_pad, W, H, F, b, z.dtype,
+                                           slope=slope,
+                                           interpret=interpret)
+        out = call(el_t, er_t, z_t, mask)                  # (C_pad, H, F)
+        res = res.at[cls.chunk_row].set(out[:C])
+    return res
+
+
 def fused_attention(g: Graph, el: jnp.ndarray, er: jnp.ndarray,
                     z: jnp.ndarray, slope: float = 0.2,
-                    ell: Optional[ELLClass] = None, br: int = 8,
+                    ell: Optional[Union[ELLClass, ELLPack]] = None,
+                    br: int = 8,
                     interpret: Optional[bool] = None) -> jnp.ndarray:
     """GAT attention pipeline as ONE kernel pass.
 
     ``el``: (n_src, H) source logit terms; ``er``: (n_dst, H)
     destination terms; ``z``: (n_src, H, F) source features. Computes
     leaky-relu(el[src]+er[dst]) → per-destination softmax → α-weighted
-    feature sum without materializing per-edge α in HBM. Needs a
-    row-complete pack, like :func:`edge_softmax`.
+    feature sum without materializing per-edge α in HBM.
+
+    Needs a ROW-COMPLETE pack. By default this is the ragged per-class
+    pack (``PlanCache.ell_ragged``), launched as one stripe grid per
+    degree class; passing an :class:`ELLClass` (``build_ell_uniform``)
+    pins the legacy single-width path instead.
     """
+    # degrees straight off the stored CSR field: concrete whenever the
+    # graph is (the in_degrees property computes through traced slices
+    # inside an active trace); None = graph is traced, skip the checks
+    deg = (None if isinstance(g.indptr_dst, jax.core.Tracer)
+           else np.diff(np.asarray(g.indptr_dst)))
     if ell is None:
-        max_deg = int(jnp.max(g.in_degrees)) if g.n_dst else 1
-        ell = get_plan_cache(g).ell_uniform(max(max_deg, 1))
-    elif int(jnp.max(g.in_degrees)) > ell.width:
+        ell = get_plan_cache(g).ell_ragged()
+    if isinstance(ell, ELLPack):
+        if deg is not None:     # row-completeness needs concrete degrees
+            n_chunks = sum(int(c.chunk_row.shape[0])
+                           for c in ell.classes)
+            if g.n_edges and n_chunks != int((deg > 0).sum()):
+                raise ValueError("pack splits rows; fused_attention "
+                                 "needs a row-complete (ragged or "
+                                 "uniform) pack")
+        return _fused_attention_ragged(
+            ell, el, er, z, float(slope),
+            should_interpret() if interpret is None else interpret)
+    if deg is not None and deg.size and int(deg.max()) > ell.width:
         raise ValueError("pack splits rows; fused_attention needs "
                          "width >= max in-degree")
     return _fused_attention_packed(

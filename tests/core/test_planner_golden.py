@@ -17,6 +17,8 @@ Regenerate after an intentional planner change with:
 
 and paste the output over ``GOLDEN``.
 """
+import dataclasses
+
 import jax
 import pytest
 
@@ -164,6 +166,17 @@ def test_block_plans_match_golden():
 SDDMM_SHAPES = [(2708, 2708, 10556), (131072, 8192, 122880)]
 SDDMM_OPS = ["u_add_v_copy_e", "u_dot_v_copy_e", "u_mul_e_copy_e"]
 ATTN_SHAPES = [(2708, 2708, 10556, 4, 16), (19717, 19717, 88651, 8, 8)]
+# power-law (R-MAT 2^15 / 180k-edge) degree-tail rows: same shape, two
+# slot estimates — the ragged per-class count (~1.4× E, what the
+# PlanCache's ragged pack actually costs) must route auto onto the
+# pallas megakernel, while the row-complete max-width envelope (~38× E,
+# the pre-ragged accounting) must still veto it. Pins the tentpole
+# planner behavior on BOTH sides of the per-class slot formula.
+ATTN_POWERLAW = [
+    ("E180000_h4_f16_ragged", (32768, 32768, 180000), 4, 16, 247_000),
+    ("E180000_h4_f16_rowcomplete", (32768, 32768, 180000), 4, 16,
+     6_850_000),
+]
 
 SDDMM_GOLDEN = {
     "E10556_u_add_v_copy_e_d1": "gather",
@@ -197,6 +210,8 @@ ATTN_GOLDEN = {
     "E10556_h4_f16_pack": "fused",
     "E88651_h8_f8": "fused",
     "E88651_h8_f8_pack": "fused",
+    "E180000_h4_f16_ragged": "pallas",
+    "E180000_h4_f16_rowcomplete": "fused",
 }
 
 
@@ -228,6 +243,9 @@ def compute_sddmm_plans() -> dict:
                 sig, h, f, pallas_ok=False)
             out[f"E{n_edges}_h{h}_f{f}_pack"] = planner.plan_attention(
                 sig, h, f, pallas_ok=True, padded_slots=n_edges * 4)
+        for key, sig, h, f, slots in ATTN_POWERLAW:
+            out[key] = planner.plan_attention(sig, h, f, pallas_ok=True,
+                                              padded_slots=slots)
         return out
     finally:
         planner.clear_sddmm_plans()
@@ -246,6 +264,42 @@ def print_sddmm_golden() -> None:       # the regen helper
         if "_h" in k:
             print(f'    "{k}": "{v}",')
     print("}")
+
+
+def test_ring_cost_prices_ragged_buckets():
+    """The ring estimate must charge the ragged diagonal schedule, not
+    the dense S²·eb envelope: skewed buckets lower the slot-work term,
+    trailing all-empty diagonals lower the comm term, and hand-built
+    stats without ragged fields (the defaults) fall back to dense
+    accounting exactly."""
+    from repro.core.partition import PartitionStats
+    from repro.core.planner import GraphStats, estimate_cost
+
+    gs = GraphStats(n_src=4096, n_dst=4096, n_edges=60_000,
+                    avg_in_deg=14.6, max_in_deg=512, skew=35.0,
+                    ell_padded_slots=120_000, ell_n_classes=4,
+                    pad_ratio=2.0)
+    S, eb = 8, 8_000
+    dense = PartitionStats(n_shards=S, rows_per_shard=512, eb=eb,
+                           n_edges=60_000, cut_fraction=0.5,
+                           pad_ratio=S * S * eb / 60_000, balance=1.1)
+    ragged = dataclasses.replace(dense, ragged_slots=S * 8 * 2_000,
+                                 ragged_stages=S - 1)
+    truncated = dataclasses.replace(ragged, ragged_stages=S - 3)
+    c_dense = estimate_cost("ring", gs, 16, backend="cpu",
+                            ring_stats=dense)
+    c_ragged = estimate_cost("ring", gs, 16, backend="cpu",
+                             ring_stats=ragged)
+    c_trunc = estimate_cost("ring", gs, 16, backend="cpu",
+                            ring_stats=truncated)
+    assert c_ragged < c_dense          # skewed buckets → less slot work
+    assert c_trunc < c_ragged          # empty diagonals → less traffic
+    # the dense fallback (ragged_slots=0, ragged_stages=-1) must price
+    # identically to explicit dense-equivalent ragged fields
+    explicit = dataclasses.replace(dense, ragged_slots=S * S * eb,
+                                   ragged_stages=S - 1)
+    assert estimate_cost("ring", gs, 16, backend="cpu",
+                         ring_stats=explicit) == c_dense
 
 
 @pytest.mark.skipif(jax.default_backend() != "cpu",

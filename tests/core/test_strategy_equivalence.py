@@ -480,6 +480,66 @@ def check_hetero(src, dst, n_u, n_v, rng):
                                    err_msg=f"d/du: hetero max via {st}")
 
 
+def _skewed_coo(rng, n, nnz):
+    """Power-law-ish degree draw: zipf destinations pile edges onto a
+    few hub rows — the degree tail the ragged formats exist for."""
+    src = rng.integers(0, n, nnz)
+    dst = (rng.zipf(1.5, size=nnz) - 1) % n
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+def check_ragged_attention(src, dst, n_u, n_v, rng):
+    """``fused_attention(strategy='pallas')`` — the ragged per-class ELL
+    megakernel with its stripe-recompute backward — must match the
+    canonical jnp 'fused' form on outputs AND VJPs w.r.t. el/er/z. The
+    graph gets an extra isolated destination (degree-0 rows must stay
+    exactly zero through the per-class scatter-back)."""
+    from repro.core import fused_attention
+    from repro.core.planner import get_plan_cache
+
+    g = from_coo(src, dst, n_src=n_u, n_dst=n_v + 1)
+    pack = get_plan_cache(g).ell_ragged()    # host-side, memoized
+
+    # pack invariants: whole rows only, disjoint across classes,
+    # power-of-two class widths with rows in their tightest class
+    deg = np.asarray(g.in_degrees)
+    rows_seen = np.concatenate(
+        [np.asarray(c.chunk_row) for c in pack.classes])
+    if g.n_edges:
+        assert sorted(rows_seen.tolist()) == np.nonzero(deg)[0].tolist()
+    for c in pack.classes:
+        assert c.width & (c.width - 1) == 0
+        ln = np.asarray(c.chunk_mask).sum(axis=1)
+        assert (ln <= c.width).all()
+        if c.width > 1:
+            assert (ln > c.width // 2).all()
+
+    H, F = 3, 4
+    el = jnp.asarray(rng.normal(size=(g.n_src, H)).astype(np.float32))
+    er = jnp.asarray(rng.normal(size=(g.n_dst, H)).astype(np.float32))
+    z = jnp.asarray(rng.normal(size=(g.n_src, H, F)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(g.n_dst, H, F)).astype(np.float32))
+
+    ref = fused_attention(g, el, er, z, strategy="fused")
+    out = fused_attention(g, el, er, z, strategy="pallas")
+    assert np.asarray(out)[deg == 0].sum() == 0.0
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4,
+                               err_msg="output: attention pallas-ragged")
+
+    def loss(a, s):
+        return jnp.sum(fused_attention(g, a["el"], a["er"], a["z"],
+                                       strategy=s) * ct)
+
+    args = {"el": el, "er": er, "z": z}
+    ref_g = jax.grad(lambda a: loss(a, "fused"))(args)
+    out_g = jax.grad(lambda a: loss(a, "pallas"))(args)
+    for k in ref_g:
+        np.testing.assert_allclose(
+            np.asarray(out_g[k]), np.asarray(ref_g[k]), rtol=1e-4,
+            atol=1e-4, err_msg=f"d/d{k}: attention pallas-ragged")
+
+
 # ---------------- seeded sweep: always runs on tier-1 ----------------- #
 @pytest.mark.parametrize("seed", [0, 1, 2])
 def test_outputs_and_vjps_agree_seeded(seed):
@@ -538,6 +598,108 @@ def test_gsddmm_block_pad_edges():
         np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                    rtol=1e-5, atol=1e-5,
                                    err_msg=f"block pad edges via {s}")
+
+
+@pytest.mark.parametrize("seed", [12, 13])
+def test_ragged_attention_matches_fused_seeded(seed):
+    """Uniform draw (seed 12) and skewed hub draw (seed 13) — the
+    latter spreads the pack across several degree classes."""
+    rng = np.random.default_rng(seed)
+    if seed == 12:
+        g, src, dst = random_graph(rng, 18, 14, 70, unique=True)
+        check_ragged_attention(src, dst, 18, 14, rng)
+    else:
+        src, dst = _skewed_coo(rng, 24, 130)
+        check_ragged_attention(src, dst, 24, 24, rng)
+
+
+def test_ragged_ring_bucket_widths():
+    """Per-bucket ``eb_ij`` bookkeeping: widths match the real bucket
+    fills, the diagonal schedule's slot count is consistent and strictly
+    beats the dense max-width layout on a skewed hash partition, and
+    the ragged ring still matches segment outputs AND VJPs."""
+    rng = np.random.default_rng(14)
+    n = 32
+    src, dst = _skewed_coo(rng, n, 170)
+    g = from_coo(src, dst, n_src=n, n_dst=n)
+    x = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(n, 4)).astype(np.float32))
+    ref = gspmm(g, "u_copy_add_v", u=x, strategy="segment")
+    ref_gx = jax.grad(lambda xx: jnp.sum(
+        gspmm(g, "u_copy_add_v", u=xx, strategy="segment") * ct))(x)
+
+    for S, mode in [(4, "hash"), (3, "contiguous")]:
+        pg = build_partition(g, S, mode)
+        st = pg.stats
+        mask = np.asarray(pg.mask)
+        assert len(pg.eb_ij) == S and all(len(r) == S for r in pg.eb_ij)
+        for i in range(S):
+            for j in range(S):
+                fill = int(mask[i, j].sum())
+                assert pg.eb_ij[i][j] == fill
+                assert pg.bucket_width(i, j) == fill <= pg.eb
+                # bucket fill is contiguous from slot 0 (static-slice
+                # contract of the ragged ring)
+                assert not mask[i, j, fill:].any()
+        ws = [max(pg.eb_ij[(j + s) % S][j] for j in range(S))
+              for s in range(S)]
+        assert st.ragged_slots == S * sum(ws)
+        assert st.ragged_slots <= S * S * st.eb
+        if mode == "hash":     # hub scatter → skewed buckets → savings
+            assert st.ragged_slots < S * S * st.eb
+
+        ctp = pg.scatter_nodes(ct)
+        w = pg.scatter_edges(jnp.ones((g.n_edges,), jnp.float32))
+        out = pg.gather_nodes(ring_gspmm(pg, pg.scatter_nodes(x), w))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"ragged ring S={S} {mode}")
+        gx = jax.grad(lambda xx: jnp.sum(
+            ring_gspmm(pg, pg.scatter_nodes(xx), w) * ctp))(x)
+        np.testing.assert_allclose(np.asarray(gx), np.asarray(ref_gx),
+                                   rtol=1e-4, atol=1e-4,
+                                   err_msg=f"d/du ragged ring S={S} {mode}")
+
+
+def test_hetero_skew_max_min():
+    """The size-skew per-class packs must now serve max/min too: on a
+    relation partition skewed enough to trigger the skew classes, every
+    strategy's max AND min must match the merged-graph gspmm on outputs
+    and VJPs."""
+    from repro.core import hetero as _hetero
+
+    rng = np.random.default_rng(15)
+    n = 40
+    sizes = [400, 11, 9, 7]
+    # globally unique (src, dst) pairs: parallel edges tie extrema,
+    # which strategies may legitimately break differently (see module
+    # docstring)
+    pairs = rng.choice(n * n, size=sum(sizes), replace=False)
+    s_all, d_all = pairs // n, pairs % n
+    rels, off = [], 0
+    for sz in sizes:
+        rels.append((s_all[off:off + sz], d_all[off:off + sz]))
+        off += sz
+    rg = from_rels(rels, n_src=n, n_dst=n)
+    assert _hetero._skew_classes(rg) is not None   # the gate fires
+    gm = from_coo(np.concatenate([s for s, _ in rels]),
+                  np.concatenate([d for _, d in rels]), n_src=n, n_dst=n)
+    u = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    ct = jnp.asarray(rng.normal(size=(n, 3)).astype(np.float32))
+    for red, name in (("max", "u_copy_max_v"), ("min", "u_copy_min_v")):
+        ref = gspmm(gm, name, u=u, strategy="segment")
+        ref_g = jax.grad(lambda x: jnp.sum(
+            gspmm(gm, name, u=x, strategy="segment") * ct))(u)
+        for st in HETERO_STRATEGIES:
+            out = hetero_gspmm(rg, u, reduce=red, strategy=st)
+            np.testing.assert_allclose(
+                np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4,
+                err_msg=f"output: skew hetero {red} via {st}")
+            out_g = jax.grad(lambda x: jnp.sum(
+                hetero_gspmm(rg, x, reduce=red, strategy=st) * ct))(u)
+            np.testing.assert_allclose(
+                np.asarray(out_g), np.asarray(ref_g), rtol=1e-4,
+                atol=1e-4, err_msg=f"d/du: skew hetero {red} via {st}")
 
 
 @pytest.mark.parametrize("seed", [7, 8])
